@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: synthetic SIFT/DEEP-like datasets, timing,
+CSV emission (``name,us_per_call,derived``)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def sift_like(n: int, dim: int = 128, seed: int = 0, n_clusters: int = 64):
+    """Clustered f32 vectors approximating SIFT's local-feature structure."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, dim)).astype(np.float32) * 3.0
+    assign = rng.integers(0, n_clusters, n)
+    base = centers[assign] + rng.standard_normal((n, dim)).astype(np.float32)
+    return base.astype(np.float32)
+
+
+def deep_like(n: int, dim: int = 96, seed: int = 1):
+    """Unit-norm vectors (DEEP1B-style CNN descriptors); IP metric."""
+    x = sift_like(n, dim, seed)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def queries_from(base: np.ndarray, nq: int, seed: int = 99, noise: float = 0.3):
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(len(base), nq, replace=False)
+    q = base[picks] + noise * rng.standard_normal((nq, base.shape[1])).astype(np.float32)
+    return q.astype(np.float32)
+
+
+def brute_force_topk(base, queries, k, metric="l2"):
+    if metric == "l2":
+        d = np.sum(queries**2, 1, keepdims=True) - 2 * queries @ base.T + np.sum(base**2, 1)
+        return np.argsort(d, axis=1)[:, :k]
+    return np.argsort(-(queries @ base.T), axis=1)[:, :k]
+
+
+def recall_of(found, gt):
+    hits = sum(len(set(found[r].tolist()) & set(gt[r].tolist())) for r in range(len(gt)))
+    return hits / gt.size
+
+
+def timeit_us(fn, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: list[tuple[str, float, str]]) -> None:
+    """Print the required ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

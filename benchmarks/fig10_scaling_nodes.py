@@ -1,0 +1,63 @@
+"""Fig. 10: QPS scales ~linearly with query nodes.
+
+Single-core container caveat: query nodes execute sequentially here, so
+wall-clock QPS cannot scale.  We measure each node's *own* scan time for
+its segment share and report the parallel-execution model QPS =
+nq / max(per-node time) — the quantity the paper's multi-machine cluster
+realizes physically (each node is an independent EC2 instance).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+from repro.core.consistency import GuaranteeTs
+from repro.core.timestamp import INFINITE_STALENESS
+
+from .common import emit, sift_like
+
+DIM, N, NQ = 64, 24_000, 32
+
+
+def qps_with_nodes(n_nodes: int) -> tuple[float, float]:
+    rng = np.random.default_rng(0)
+    system = ManuSystem(ManuConfig(num_query_nodes=n_nodes, seal_rows=1_500))
+    coll = system.create_collection("c", dim=DIM)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 32, "nprobe": 8})
+    base = sift_like(N, DIM)
+    for lo in range(0, N, 6_000):
+        coll.insert({"vector": base[lo : lo + 6_000]})
+    coll.flush()
+    q = rng.standard_normal((NQ, DIM)).astype(np.float32)
+    g = GuaranteeTs(system.tso.next(), INFINITE_STALENESS)
+    per_node = []
+    for node in system.query_nodes.values():
+        if not node.alive or not node.held_segments("c"):
+            continue
+        node.search("c", q, 10, coll.info.metric, g)  # warmup
+        t0 = time.perf_counter()
+        for _ in range(3):
+            node.search("c", q, 10, coll.info.metric, g)
+        per_node.append((time.perf_counter() - t0) / 3)
+    slowest = max(per_node)
+    return NQ / slowest, slowest
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    base_qps = None
+    for n_nodes in (1, 2, 4, 8):
+        qps, slowest = qps_with_nodes(n_nodes)
+        base_qps = base_qps or qps
+        rows.append((
+            f"fig10-nodes{n_nodes}", slowest / NQ * 1e6,
+            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,45 @@
+"""Fig. 11: QPS scales with the reciprocal of data volume (fixed nodes)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+
+from .common import emit, sift_like
+
+DIM, NQ = 64, 32
+
+
+def qps_at(n_rows: int) -> float:
+    rng = np.random.default_rng(0)
+    system = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=1_500))
+    coll = system.create_collection("c", dim=DIM)
+    coll.create_index("vector", kind="flat")  # brute scan: cost tracks volume
+    base = sift_like(n_rows, DIM)
+    for lo in range(0, n_rows, 6_000):
+        coll.insert({"vector": base[lo : lo + 6_000]})
+    coll.flush()
+    q = rng.standard_normal((NQ, DIM)).astype(np.float32)
+    coll.search(q, limit=10)  # warmup (BLAS thread pools etc.)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        coll.search(q, limit=10)
+    return 3 * NQ / (time.perf_counter() - t0)
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    base_qps = None
+    for n in (8_000, 16_000, 32_000):
+        qps = qps_at(n)
+        base_qps = base_qps or qps
+        rows.append((f"fig11-rows{n}", 1e6 / qps,
+                     f"qps={qps:.0f};vs_8k={qps/base_qps:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,61 @@
+"""Fig. 12: search latency vs grace time (tau) for several time-tick
+intervals — the tunable-consistency trade-off, measured on the THREADED
+runtime with a live insert stream (the only benchmark that needs real
+wall-clock waiting)."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+
+from .common import emit
+
+DIM = 16
+
+
+def latency_at(tau_ms: float, tick_ms: float, searches: int = 12) -> float:
+    rng = np.random.default_rng(0)
+    system = ManuSystem(ManuConfig(
+        num_query_nodes=1, seal_rows=100_000, manual_clock=False, threaded=True,
+        tick_interval_ms=tick_ms,
+    ))
+    coll = system.create_collection("c", dim=DIM)
+    stop = threading.Event()
+
+    def inserter():
+        while not stop.is_set():
+            coll.insert({"vector": rng.standard_normal((20, DIM)).astype(np.float32)})
+            time.sleep(0.01)
+
+    t = threading.Thread(target=inserter, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    lats = []
+    for _ in range(searches):
+        t0 = time.perf_counter()
+        coll.search(q, limit=5, staleness_ms=tau_ms)
+        lats.append(time.perf_counter() - t0)
+        time.sleep(0.005)
+    stop.set()
+    system.stop_threads()
+    return float(np.mean(lats) * 1e6)
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    for tick_ms in (10.0, 50.0):
+        for tau_ms in (0.0, 25.0, 100.0, 1e9):
+            us = latency_at(tau_ms, tick_ms)
+            tau_label = "inf" if tau_ms >= 1e9 else f"{tau_ms:.0f}ms"
+            rows.append((f"fig12-tick{tick_ms:.0f}ms-tau{tau_label}", us,
+                         "latency_includes_consistency_wait"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,58 @@
+"""Fig. 8: recall vs throughput frontier on SIFT-like (L2) and DEEP-like
+(IP) data for IVF-FLAT, HNSW and the bucket index, sweeping the quality
+knob of each."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.collection import Metric
+from repro.index import IndexSpec, create_index
+
+from .common import brute_force_topk, deep_like, emit, queries_from, recall_of, sift_like
+
+N, NQ, K = 8_000, 32, 50
+
+
+def frontier(dataset: str, base, metric: Metric):
+    queries = queries_from(base, NQ)
+    gt = brute_force_topk(base, queries, K, metric.value if metric is Metric.L2 else "ip")
+    rows = []
+    sweeps = [
+        ("ivf_flat", "nprobe", [1, 2, 4, 8, 16], {"nlist": 64}),
+        ("hnsw", "ef_search", [16, 32, 64, 128], {"m": 12, "ef_construction": 80}),
+        ("bucket", "nprobe_buckets", [2, 4, 8, 16], {"target_bucket_rows": 96, "replicas": 2}),
+    ]
+    for kind, knob, values, fixed in sweeps:
+        idx = create_index(IndexSpec(kind=kind, metric=metric, params=dict(fixed, **{knob: values[-1]})))
+        t_build = time.perf_counter()
+        idx.build(base)
+        build_s = time.perf_counter() - t_build
+        for v in values:
+            idx.params[knob] = v
+            if hasattr(idx, knob):
+                setattr(idx, knob, v)
+            t0 = time.perf_counter()
+            _s, found = idx.search(queries, K)
+            dt = time.perf_counter() - t0
+            r = recall_of(found, gt)
+            qps = NQ / dt
+            rows.append((
+                f"fig8-{dataset}-{kind}-{knob}{v}",
+                dt / NQ * 1e6,
+                f"recall={r:.3f};qps={qps:.0f};build_s={build_s:.1f}",
+            ))
+    return rows
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    rows += frontier("sift", sift_like(N, 128), Metric.L2)
+    rows += frontier("deep", deep_like(N, 96), Metric.IP)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,62 @@
+"""Fig. 9: elasticity under a diurnal workload trace.
+
+The paper drives Manu with one day of e-commerce traffic and shows the
+query-node count tracking load while latency stays inside a target band
+(scale to 2x above 150 ms, to 0.5x below 100 ms, scaled here).  We replay a
+sinusoidal trace, apply the same threshold policy on measured latency, and
+report per-phase node counts and latency.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+
+from .common import emit, sift_like
+
+DIM = 64
+TARGET_HI_MS = 40.0  # scaled-down thresholds for the container
+TARGET_LO_MS = 10.0
+
+
+def main() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    system = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=2_000, slice_rows=1_000))
+    coll = system.create_collection("c", dim=DIM)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 32, "nprobe": 4})
+    base = sift_like(16_000, DIM)
+    for lo in range(0, len(base), 4_000):
+        coll.insert({"vector": base[lo : lo + 4_000]})
+    coll.flush()
+
+    # diurnal trace: queries per phase
+    phases = (20 + 180 * np.clip(np.sin(np.linspace(0, np.pi, 8)), 0, None)).astype(int)
+    rows = []
+    for t, load in enumerate(phases):
+        q = rng.standard_normal((int(load), DIM)).astype(np.float32)
+        live = [n for n, qn in system.query_nodes.items() if qn.alive]
+        t0 = time.perf_counter()
+        # simulate node-parallel serving: per-node latency = work / nodes
+        coll.search(q, limit=10)
+        wall = (time.perf_counter() - t0) * 1e3
+        latency_ms = wall / max(len(live), 1)
+        # the paper's policy: latency > hi -> add nodes to 2x; < lo -> 0.5x
+        if latency_ms > TARGET_HI_MS:
+            for _ in range(len(live)):
+                system.add_query_node()
+        elif latency_ms < TARGET_LO_MS and len(live) > 1:
+            for _ in range(max(1, len(live) // 2)):
+                system.remove_query_node()
+        live_after = len([n for n, qn in system.query_nodes.items() if qn.alive])
+        rows.append((
+            f"fig9-phase{t}", latency_ms * 1e3,
+            f"load={load};nodes_before={len(live)};nodes_after={live_after}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: host fast path vs Pallas interpret (correctness
+path); on TPU the pallas path compiles natively."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.l2_topk import l2_topk_pallas
+
+from .common import emit, timeit_us
+
+import jax.numpy as jnp
+
+
+def main() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+    q = rng.standard_normal((32, 128)).astype(np.float32)
+    x = rng.standard_normal((8_192, 128)).astype(np.float32)
+    rows.append(("kern-topk_scan-host", timeit_us(lambda: ops.topk_scan(q, x, 50)),
+                 "8192x128,k=50"))
+    qj, xj = jnp.asarray(q), jnp.asarray(x)
+    vj = jnp.ones(8_192, jnp.int32)
+    rows.append((
+        "kern-l2topk-pallas-interpret",
+        timeit_us(lambda: l2_topk_pallas(qj[:32], xj, vj, 50, tq=32, tn=512,
+                                         interpret=True).__getitem__(0).block_until_ready(),
+                  warmup=1, iters=1),
+        "interpret-mode(correctness-path)",
+    ))
+    luts = rng.standard_normal((8, 16, 256)).astype(np.float32)
+    codes = rng.integers(0, 256, (8_192, 16)).astype(np.int32)
+    rows.append(("kern-pq_adc-host", timeit_us(lambda: ops.pq_adc_topk(luts, codes, 50)),
+                 "8192x16sub"))
+    vmin, vmax = x.min(0), x.max(0)
+    c = ops.sq_encode(x, vmin, vmax)
+    rows.append(("kern-sq_scan-host",
+                 timeit_us(lambda: ops.sq_topk_scan(q, c, vmin, vmax, 50)), "8192x128-int8"))
+    cents = rng.standard_normal((256, 128)).astype(np.float32)
+    rows.append(("kern-kmeans_assign-host",
+                 timeit_us(lambda: ops.kmeans_assign(x, cents)), "8192rows-256cents"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

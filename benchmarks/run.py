@@ -1,0 +1,54 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (
+    fig6_mixed_workload,
+    fig8_recall_throughput,
+    fig9_elasticity,
+    fig10_scaling_nodes,
+    fig11_scaling_data,
+    fig12_grace_time,
+    fig13_index_build,
+    kernels_micro,
+)
+from .common import emit
+
+MODULES = [
+    ("fig6", fig6_mixed_workload),
+    ("fig8", fig8_recall_throughput),
+    ("fig9", fig9_elasticity),
+    ("fig10", fig10_scaling_nodes),
+    ("fig11", fig11_scaling_data),
+    ("fig12", fig12_grace_time),
+    ("fig13", fig13_index_build),
+    ("kernels", kernels_micro),
+]
+
+
+def main() -> None:
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.main()
+            emit(rows)
+            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {tag} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Elasticity + failure recovery demo (paper Figs 2/9, §3.6).
+
+    PYTHONPATH=src python examples/elastic_failover.py
+
+Replays a bursty workload against Manu: the latency-threshold autoscaler
+adds/removes query nodes; mid-run we crash a node holding live segments and
+show the coordinator's failover restoring identical results.
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    system = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=1_000))
+    coll = system.create_collection("c", dim=64)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 16, "nprobe": 8})
+    base = rng.standard_normal((8_000, 64)).astype(np.float32)
+    for lo in range(0, 8_000, 2_000):
+        coll.insert({"vector": base[lo : lo + 2_000]})
+    coll.flush()
+    q = rng.standard_normal((8, 64)).astype(np.float32)
+    coll.search(q, limit=10)  # warmup
+
+    def live_nodes():
+        return [n for n, qn in system.query_nodes.items() if qn.alive]
+
+    print("== elastic scaling on a bursty trace ==")
+    for phase, load in enumerate([1, 4, 16, 16, 4, 1]):
+        t0 = time.perf_counter()
+        for _ in range(load):
+            coll.search(q, limit=10)
+        ms = (time.perf_counter() - t0) * 1e3 / max(len(live_nodes()), 1)
+        action = "-"
+        if ms > 60 and len(live_nodes()) < 8:
+            system.add_query_node()
+            action = "scale-up"
+        elif ms < 15 and len(live_nodes()) > 2:
+            system.remove_query_node()
+            action = "scale-down"
+        print(f"phase {phase}: load={load:>2} latency/node={ms:6.1f}ms "
+              f"nodes={len(live_nodes())} action={action}")
+
+    print("\n== failure recovery ==")
+    before = coll.search(q, limit=10, staleness_ms=0.0)
+    victim = next(iter(system.query_coord.assignment.values()))
+    held = system.query_nodes[victim].held_segments("c")
+    print(f"crashing {victim} (held segments {held})")
+    system.kill_query_node(victim)
+    dead = system.recover_failures()
+    after = coll.search(q, limit=10, staleness_ms=0.0)
+    same = (np.sort(before.pks, 1) == np.sort(after.pks, 1)).all()
+    print(f"coordinator declared dead: {dead}; results identical: {same}")
+    assert same
+    print("segments now held by:",
+          {n: qn.held_segments('c') for n, qn in system.query_nodes.items() if qn.alive})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Fault-tolerant embedder training with checkpoint/restart + ingestion.
+
+    PYTHONPATH=src python examples/train_embedder.py --steps 120
+    PYTHONPATH=src python examples/train_embedder.py --steps 120 --crash-at 60
+    # run again with the same args: training RESUMES from the last committed
+    # checkpoint in the object store.
+
+Trains a small LM on a synthetic corpus (loss visibly decreases), commits
+step-atomic checkpoints to the object store, optionally simulates a crash,
+resumes, and finally embeds + ingests the corpus into Manu.  Scale knobs:
+--preset full trains a ~100M-parameter model (hours on CPU; the default
+preset finishes in minutes).
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import ManuConfig, ManuSystem, Metric
+from repro.core.object_store import FileObjectStore
+from repro.models import model as M
+from repro.models.embedder import Embedder
+from repro.train.loop import TrainConfig, train
+
+import jax
+
+
+def build_cfg(preset: str):
+    if preset == "full":
+        # ~100M params (paper-scale end-to-end driver; slow on CPU)
+        return ARCHS["yi-9b"].reduced(
+            d_model=512, num_layers=12, num_heads=8, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=8192,
+        )
+    return ARCHS["yi-9b"].reduced(d_model=128, num_layers=2, vocab_size=512)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate preemption after N steps (restart resumes)")
+    ap.add_argument("--preset", choices=["small", "full"], default="small")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpts")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    store = FileObjectStore(args.ckpt_dir)
+    tc = TrainConfig(steps=args.steps, batch=8, seq_len=64,
+                     checkpoint_every=20, run_name=f"embedder-{args.preset}")
+
+    crash = {"at": args.crash_at}
+
+    def on_step(step, loss):
+        if crash["at"] and step + 1 >= crash["at"]:
+            print(f"[train] simulating node failure at step {step+1} "
+                  f"(rerun this script: it resumes from the last checkpoint)")
+            raise SystemExit(17)
+
+    params, _opt, losses = train(cfg, store, tc, on_step=on_step)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+    embedder = Embedder(cfg, params)
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, cfg.vocab_size, (256, 64)).astype(np.int32)
+    embeds = embedder.embed(corpus)
+
+    manu = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=128))
+    coll = manu.create_collection("corpus", dim=cfg.d_model, metric=Metric.IP)
+    coll.insert({"vector": embeds})
+    coll.flush()
+    res = coll.search(embeds[:3], limit=3, staleness_ms=0.0)
+    print("self-retrieval sanity (row i should find pk i):", res.pks[:, 0])
+    assert (res.pks[:, 0] == np.arange(3)).all()
+    print("trained, checkpointed, ingested, searchable — done")
+
+
+if __name__ == "__main__":
+    main()

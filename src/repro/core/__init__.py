@@ -1,0 +1,22 @@
+# Manu's primary contribution lives here: the log backbone (WAL + binlog +
+# time-ticks), delta consistency, segments with MVCC, the decoupled
+# coordinator/worker services, and the PyManu-style public API.
+from .collection import FieldSchema, FieldType, Metric, Schema
+from .consistency import ConsistencyLevel, GuaranteeTs
+from .manu import ManuCollection, ManuConfig, ManuSystem
+from .timestamp import TSO, Clock, ManualClock
+
+__all__ = [
+    "FieldSchema",
+    "FieldType",
+    "Metric",
+    "Schema",
+    "ConsistencyLevel",
+    "GuaranteeTs",
+    "ManuCollection",
+    "ManuConfig",
+    "ManuSystem",
+    "TSO",
+    "Clock",
+    "ManualClock",
+]

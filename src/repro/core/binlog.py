@@ -1,0 +1,120 @@
+"""Binlog: the column-based *base* part of the log (paper §3.3).
+
+Data nodes convert row-based WAL entries into per-field column objects so
+downstream readers fetch exactly the columns they need — index nodes read
+only the vector column ("free from read amplification"), query nodes read
+pk/vector/ts.
+
+Object layout in the store:
+
+    binlog/<collection>/<segment_id>/meta         (segment header)
+    binlog/<collection>/<segment_id>/col/<field>  (one object per column)
+    index/<collection>/<segment_id>/<index_kind>  (built index files)
+"""
+
+from __future__ import annotations
+
+import io
+import json
+
+import numpy as np
+
+from .object_store import ObjectStore
+from .segment import Segment
+
+
+def _col_key(collection: str, segment_id: int, field: str) -> str:
+    return f"binlog/{collection}/{segment_id}/col/{field}"
+
+
+def _meta_key(collection: str, segment_id: int) -> str:
+    return f"binlog/{collection}/{segment_id}/meta"
+
+
+def index_key(collection: str, segment_id: int, kind: str) -> str:
+    return f"index/{collection}/{segment_id}/{kind}"
+
+
+def _dump_array(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _load_array(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+def write_segment_binlog(store: ObjectStore, seg: Segment) -> dict[str, str]:
+    """Persist a sealed segment as columnar binlog objects; returns keys."""
+    keys: dict[str, str] = {}
+    columns = {"pk": seg.pks(), "vector": seg.vectors(), "ts": seg.timestamps()}
+    for f in seg.extra_fields:
+        columns[f] = seg.extra(f)
+    for field, arr in columns.items():
+        key = _col_key(seg.collection, seg.segment_id, field)
+        store.put(key, _dump_array(np.ascontiguousarray(arr)))
+        keys[field] = key
+    meta = {
+        "segment_id": seg.segment_id,
+        "collection": seg.collection,
+        "shard": seg.shard,
+        "dim": seg.dim,
+        "num_rows": seg.num_rows,
+        "checkpoint_pos": seg.checkpoint_pos,
+        "fields": sorted(columns),
+        "extra_fields": list(seg.extra_fields),
+        "min_ts": seg.min_ts(),
+        "max_ts": seg.max_ts(),
+    }
+    mk = _meta_key(seg.collection, seg.segment_id)
+    store.put(mk, json.dumps(meta).encode())
+    keys["meta"] = mk
+    return keys
+
+
+def read_binlog_meta(store: ObjectStore, collection: str, segment_id: int) -> dict:
+    return json.loads(store.get(_meta_key(collection, segment_id)).decode())
+
+
+def read_binlog_column(
+    store: ObjectStore, collection: str, segment_id: int, field: str
+) -> np.ndarray:
+    """Fetch exactly one column — the no-read-amplification path."""
+    return _load_array(store.get(_col_key(collection, segment_id, field)))
+
+
+def load_segment(
+    store: ObjectStore, collection: str, segment_id: int
+) -> Segment:
+    """Reconstruct a sealed segment from its binlog columns."""
+    meta = read_binlog_meta(store, collection, segment_id)
+    seg = Segment(
+        segment_id=meta["segment_id"],
+        collection=collection,
+        shard=meta["shard"],
+        dim=meta["dim"],
+        extra_fields=tuple(meta.get("extra_fields", ())),
+    )
+    n = meta["num_rows"]
+    if n:
+        pks = read_binlog_column(store, collection, segment_id, "pk")
+        vec = read_binlog_column(store, collection, segment_id, "vector")
+        ts = read_binlog_column(store, collection, segment_id, "ts")
+        extras = {
+            f: read_binlog_column(store, collection, segment_id, f)
+            for f in meta.get("extra_fields", ())
+        }
+        seg.append(pks, vec, ts, extras)
+    seg.checkpoint_pos = meta["checkpoint_pos"]
+    seg.seal()
+    return seg
+
+
+def list_segments(store: ObjectStore, collection: str) -> list[int]:
+    ids = set()
+    for m in store.list(f"binlog/{collection}/"):
+        parts = m.key.split("/")
+        if len(parts) >= 3 and parts[-1] == "meta":
+            ids.add(int(parts[2]))
+    return sorted(ids)

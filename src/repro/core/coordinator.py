@@ -1,0 +1,512 @@
+"""The coordinator layer (paper §3.2): root, data, query, index.
+
+Coordinators keep all authoritative state in the meta store (etcd role) and
+communicate with workers exclusively through the coordination log channel —
+"the log system provides a simple and reliable mechanism for broadcasting
+system events" (§3.3).  Each coordinator is a deterministic state machine
+with ``step()``; multiple instances could run main+backup off the meta
+store, which we model with a single instance plus full state recovery from
+the meta store (see ``QueryCoordinator.recover_state``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from .collection import CollectionInfo, Metric, Schema
+from .log import (
+    COORD_CHANNEL,
+    DDL_CHANNEL,
+    EntryType,
+    LogBroker,
+    LogEntry,
+    Subscription,
+    dml_channel,
+)
+from .meta_store import MetaStore
+from .timestamp import TSO, Clock
+
+DEFAULT_SEAL_ROWS = 8_192
+
+
+# ---------------------------------------------------------------------------
+# Root coordinator: DDL
+# ---------------------------------------------------------------------------
+
+
+class RootCoordinator:
+    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO):
+        self.broker = broker
+        self.meta = meta
+        self.tso = tso
+        self.broker.create_channel(DDL_CHANNEL)
+        self.broker.create_channel(COORD_CHANNEL)
+
+    def create_collection(
+        self,
+        name: str,
+        schema: Schema,
+        num_shards: int = 2,
+        metric: Metric = Metric.L2,
+        seal_rows: int = DEFAULT_SEAL_ROWS,
+    ) -> CollectionInfo:
+        if self.meta.get(f"collection/{name}") is not None:
+            raise ValueError(f"collection '{name}' already exists")
+        ts = self.tso.next()
+        info = CollectionInfo(
+            name=name, schema=schema, num_shards=num_shards, metric=metric, created_ts=ts
+        )
+        for shard in range(num_shards):
+            self.broker.create_channel(dml_channel(name, shard))
+        self.meta.put(
+            f"collection/{name}",
+            {
+                "name": name,
+                "num_shards": num_shards,
+                "metric": metric.value,
+                "created_ts": ts,
+                "seal_rows": seal_rows,
+                "dim": info.schema.vector_fields()[0].dim,
+            },
+        )
+        self.broker.publish(
+            DDL_CHANNEL,
+            LogEntry(ts=ts, type=EntryType.DDL,
+                     payload={"msg": "create_collection", "name": name}),
+        )
+        return info
+
+    def drop_collection(self, name: str) -> None:
+        ts = self.tso.next()
+        self.meta.delete(f"collection/{name}")
+        self.broker.publish(
+            DDL_CHANNEL,
+            LogEntry(ts=ts, type=EntryType.DDL,
+                     payload={"msg": "drop_collection", "name": name}),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Data coordinator: segment allocation, sealing policy, compaction triggers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SegmentAlloc:
+    segment_id: int
+    rows: int = 0
+    last_alloc_ms: float = 0.0
+
+
+class DataCoordinator:
+    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO, clock: Clock):
+        self.broker = broker
+        self.meta = meta
+        self.tso = tso
+        self.clock = clock
+        self._next_segment = 1
+        self._next_pk: dict[str, int] = {}
+        # (collection, shard) -> current growing allocation
+        self._growing: dict[tuple[str, int], SegmentAlloc] = {}
+        self._to_seal: set[tuple[str, int]] = set()  # (collection, segment_id)
+        self._sealed_rows: dict[tuple[str, int], int] = {}
+        self._sealed_upto_pos: dict[tuple[str, int], int] = {}  # per channel shard
+
+    # ------------------------------------------------------------ allocation
+    def allocate_pks(self, collection: str, n: int):
+        import numpy as np
+
+        start = self._next_pk.get(collection, 0)
+        self._next_pk[collection] = start + n
+        return np.arange(start, start + n, dtype=np.int64)
+
+    def seal_rows_for(self, collection: str) -> int:
+        info = self.meta.get(f"collection/{collection}") or {}
+        return int(info.get("seal_rows", DEFAULT_SEAL_ROWS))
+
+    def assign_segment(self, collection: str, shard: int, n_rows: int) -> int:
+        key = (collection, shard)
+        alloc = self._growing.get(key)
+        if alloc is None:
+            alloc = SegmentAlloc(self._next_segment)
+            self._next_segment += 1
+            self._growing[key] = alloc
+        alloc.rows += n_rows
+        alloc.last_alloc_ms = self.clock.now_ms()
+        if alloc.rows >= self.seal_rows_for(collection):
+            self._to_seal.add((collection, alloc.segment_id))
+            self._growing[key] = SegmentAlloc(self._next_segment)
+            self._next_segment += 1
+        return alloc.segment_id
+
+    # --------------------------------------------------------------- sealing
+    def should_seal(self, collection: str, segment_id: int) -> bool:
+        return (collection, segment_id) in self._to_seal
+
+    def on_sealed(self, collection: str, segment_id: int, rows: int) -> None:
+        self._to_seal.discard((collection, segment_id))
+        self._sealed_rows[(collection, segment_id)] = rows
+        self.meta.put(
+            f"segment/{collection}/{segment_id}", {"rows": rows, "state": "sealed"}
+        )
+
+    def flush(self, collection: str) -> list[int]:
+        """Force-seal every growing segment of a collection."""
+        sealed = []
+        for (coll, shard), alloc in list(self._growing.items()):
+            if coll != collection or alloc.rows == 0:
+                continue
+            self._to_seal.add((coll, alloc.segment_id))
+            sealed.append(alloc.segment_id)
+            self._growing[(coll, shard)] = SegmentAlloc(self._next_segment)
+            self._next_segment += 1
+        return sealed
+
+    def seal_idle(self, max_idle_ms: float) -> list[int]:
+        """Time-based sealing (paper: seal after a period without inserts)."""
+        now = self.clock.now_ms()
+        sealed = []
+        for (coll, shard), alloc in list(self._growing.items()):
+            if alloc.rows > 0 and (now - alloc.last_alloc_ms) >= max_idle_ms:
+                self._to_seal.add((coll, alloc.segment_id))
+                sealed.append(alloc.segment_id)
+                self._growing[(coll, shard)] = SegmentAlloc(self._next_segment)
+                self._next_segment += 1
+        return sealed
+
+    def sealed_segments(self, collection: str) -> list[int]:
+        return sorted(sid for (c, sid) in self._sealed_rows if c == collection)
+
+    def record_sealed_position(self, collection: str, shard: int, pos: int) -> None:
+        key = (collection, shard)
+        self._sealed_upto_pos[key] = max(self._sealed_upto_pos.get(key, 0), pos)
+
+    def replay_position(self, collection: str, shard: int) -> int:
+        """WAL position from which a recovering node must replay."""
+        return self._sealed_upto_pos.get((collection, shard), 0)
+
+
+# ---------------------------------------------------------------------------
+# Index coordinator: build-task fan-out, idle-node shutdown
+# ---------------------------------------------------------------------------
+
+
+class IndexCoordinator:
+    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO):
+        self.broker = broker
+        self.meta = meta
+        self.tso = tso
+        self.sub = Subscription(broker, COORD_CHANNEL)
+        self.pending_tasks: dict[tuple[str, int], dict] = {}
+        self.built: dict[tuple[str, int], dict] = {}
+
+    def set_index_spec(
+        self, collection: str, kind: str, params: dict[str, Any] | None = None,
+        metric: Metric = Metric.L2,
+    ) -> None:
+        self.meta.put(
+            f"index_spec/{collection}",
+            {"kind": kind, "params": params or {}, "metric": metric.value},
+        )
+
+    def index_spec(self, collection: str) -> dict | None:
+        return self.meta.get(f"index_spec/{collection}")
+
+    def step(self) -> bool:
+        progress = False
+        for entry in self.sub.poll():
+            if entry.type is not EntryType.COORD:
+                continue
+            p = entry.payload
+            if p.get("msg") == "segment_sealed":
+                spec = self.index_spec(p["collection"])
+                if spec is None:
+                    continue
+                key = (p["collection"], p["segment_id"])
+                if key in self.pending_tasks or key in self.built:
+                    continue
+                task = {
+                    "msg": "index_build_task",
+                    "collection": p["collection"],
+                    "segment_id": p["segment_id"],
+                    "index_kind": spec["kind"],
+                    "params": spec["params"],
+                    "metric": spec["metric"],
+                }
+                self.pending_tasks[key] = task
+                self.broker.publish(
+                    COORD_CHANNEL,
+                    LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
+                )
+                progress = True
+            elif p.get("msg") == "index_built":
+                key = (p["collection"], p["segment_id"])
+                self.pending_tasks.pop(key, None)
+                self.built[key] = p
+                self.meta.put(
+                    f"index/{p['collection']}/{p['segment_id']}",
+                    {"kind": p["index_kind"], "key": p["index_key"]},
+                )
+                progress = True
+        return progress
+
+    def rebuild_segment(self, collection: str, segment_id: int) -> None:
+        """Re-issue a build (after compaction or heavy deletes)."""
+        spec = self.index_spec(collection)
+        if spec is None:
+            return
+        self.built.pop((collection, segment_id), None)
+        self.meta.delete(f"index_claim/{collection}/{segment_id}/{spec['kind']}")
+        task = {
+            "msg": "index_build_task",
+            "collection": collection,
+            "segment_id": segment_id,
+            "index_kind": spec["kind"],
+            "params": spec["params"],
+            "metric": spec["metric"],
+        }
+        self.pending_tasks[(collection, segment_id)] = task
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Query coordinator: segment assignment, load balance, failover, scaling
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QueryNodeState:
+    node_id: str
+    lease_id: int
+    segments: set[tuple[str, int]] = field(default_factory=set)
+    channels: set[str] = field(default_factory=set)
+
+
+class QueryCoordinator:
+    HEARTBEAT_TTL_MS = 5_000
+
+    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO, data_coord: DataCoordinator):
+        self.broker = broker
+        self.meta = meta
+        self.tso = tso
+        self.data_coord = data_coord
+        self.sub = Subscription(broker, COORD_CHANNEL)
+        self.nodes: dict[str, QueryNodeState] = {}
+        # (collection, segment_id) -> node_id  (single assignment; replicas
+        # are modelled by assign_replicas)
+        self.assignment: dict[tuple[str, int], str] = {}
+        self.replicas: int = 1
+        self._known_indexes: dict[tuple[str, int], dict] = {}
+
+    # ------------------------------------------------------------ membership
+    def register_node(self, node_id: str) -> int:
+        lease = self.meta.grant_lease(self.HEARTBEAT_TTL_MS)
+        self.meta.put(f"querynode/{node_id}", {"node_id": node_id}, lease_id=lease)
+        self.nodes[node_id] = QueryNodeState(node_id, lease)
+        return lease
+
+    def heartbeat(self, node_id: str) -> None:
+        st = self.nodes.get(node_id)
+        if st:
+            self.meta.keepalive(st.lease_id)
+
+    def deregister_node(self, node_id: str) -> None:
+        # Revoke the lease only; the node stays in ``self.nodes`` until
+        # ``handle_failures`` reassigns its segments/channels (popping it
+        # here would orphan its assignments).
+        st = self.nodes.get(node_id)
+        if st:
+            self.meta.revoke_lease(st.lease_id)
+
+    def live_nodes(self) -> list[str]:
+        alive = set(self.meta.scan("querynode/"))
+        return sorted(
+            n for n in self.nodes if f"querynode/{n}" in alive
+        )
+
+    # ------------------------------------------------------------ assignment
+    def _least_loaded(self, exclude: set[str] | None = None) -> str | None:
+        nodes = [n for n in self.live_nodes() if not exclude or n not in exclude]
+        if not nodes:
+            return None
+        return min(nodes, key=lambda n: len(self.nodes[n].segments))
+
+    def _publish(self, payload: dict) -> None:
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=payload),
+        )
+
+    def step(self) -> bool:
+        progress = False
+        for entry in self.sub.poll():
+            if entry.type is not EntryType.COORD:
+                continue
+            p = entry.payload
+            msg = p.get("msg")
+            if msg == "segment_sealed":
+                self.data_coord.record_sealed_position(
+                    p["collection"], p["shard"], p["checkpoint_pos"] + 1
+                )
+                progress |= self._assign_segment(p["collection"], p["segment_id"])
+            elif msg == "index_built":
+                key = (p["collection"], p["segment_id"])
+                self._known_indexes[key] = p
+                node = self.assignment.get(key)
+                if node:
+                    self._publish(
+                        {
+                            "msg": "load_index",
+                            "node_id": node,
+                            "collection": p["collection"],
+                            "segment_id": p["segment_id"],
+                            "index_kind": p["index_kind"],
+                            "index_key": p["index_key"],
+                        }
+                    )
+                progress = True
+        return progress
+
+    def _assign_segment(self, collection: str, segment_id: int) -> bool:
+        key = (collection, segment_id)
+        if key in self.assignment:
+            return False
+        node = self._least_loaded()
+        if node is None:
+            return False
+        self.assignment[key] = node
+        self.nodes[node].segments.add(key)
+        self.meta.put(f"assignment/{collection}/{segment_id}", {"node": node})
+        self._publish(
+            {
+                "msg": "load_segment",
+                "node_id": node,
+                "collection": collection,
+                "segment_id": segment_id,
+            }
+        )
+        idx = self._known_indexes.get(key)
+        if idx:
+            self._publish(
+                {
+                    "msg": "load_index",
+                    "node_id": node,
+                    "collection": collection,
+                    "segment_id": segment_id,
+                    "index_kind": idx["index_kind"],
+                    "index_key": idx["index_key"],
+                }
+            )
+        return True
+
+    # ------------------------------------------------------ channel coverage
+    def assign_channels(self, collection: str, num_shards: int) -> None:
+        """Distribute DML channel subscriptions over live nodes."""
+        nodes = self.live_nodes()
+        if not nodes:
+            return
+        for shard in range(num_shards):
+            ch = dml_channel(collection, shard)
+            owner = nodes[shard % len(nodes)]
+            for n in nodes:
+                st = self.nodes[n]
+                if n == owner and ch not in st.channels:
+                    st.channels.add(ch)
+                    self._publish(
+                        {
+                            "msg": "subscribe_channel",
+                            "node_id": n,
+                            "channel": ch,
+                            "from_position": self.data_coord.replay_position(collection, shard),
+                        }
+                    )
+                elif n != owner and ch in st.channels:
+                    st.channels.discard(ch)
+                    self._publish(
+                        {"msg": "unsubscribe_channel", "node_id": n, "channel": ch}
+                    )
+
+    # -------------------------------------------------------------- failover
+    def handle_failures(self) -> list[str]:
+        """Detect dead nodes (lease expiry) and reassign their work."""
+        self.meta.expire_now()
+        live = set(self.live_nodes())
+        dead = [n for n in self.nodes if n not in live]
+        for node_id in dead:
+            st = self.nodes.pop(node_id)
+            for key in sorted(st.segments):
+                coll, sid = key
+                self.assignment.pop(key, None)
+                self._assign_segment(coll, sid)
+            # re-home channels
+            for ch in sorted(st.channels):
+                parts = ch.split("/")
+                coll, shard = parts[1], int(parts[2])
+                target = self._least_loaded()
+                if target:
+                    self.nodes[target].channels.add(ch)
+                    self._publish(
+                        {
+                            "msg": "subscribe_channel",
+                            "node_id": target,
+                            "channel": ch,
+                            "from_position": self.data_coord.replay_position(coll, shard),
+                        }
+                    )
+        return dead
+
+    # -------------------------------------------------------------- balance
+    def rebalance(self) -> int:
+        """Move segments from the most- to least-loaded node (paper §3.6)."""
+        moved = 0
+        while True:
+            nodes = self.live_nodes()
+            if len(nodes) < 2:
+                return moved
+            counts = {n: len(self.nodes[n].segments) for n in nodes}
+            hi = max(counts, key=counts.get)
+            lo = min(counts, key=counts.get)
+            if counts[hi] - counts[lo] <= 1:
+                return moved
+            key = sorted(self.nodes[hi].segments)[0]
+            coll, sid = key
+            # Load on the new node first, then release (no gap: a segment may
+            # briefly live on two nodes; the proxy dedups).
+            self.nodes[hi].segments.discard(key)
+            self.nodes[lo].segments.add(key)
+            self.assignment[key] = lo
+            self.meta.put(f"assignment/{coll}/{sid}", {"node": lo})
+            self._publish(
+                {"msg": "load_segment", "node_id": lo, "collection": coll, "segment_id": sid}
+            )
+            idx = self._known_indexes.get(key)
+            if idx:
+                self._publish(
+                    {
+                        "msg": "load_index",
+                        "node_id": lo,
+                        "collection": coll,
+                        "segment_id": sid,
+                        "index_kind": idx["index_kind"],
+                        "index_key": idx["index_key"],
+                    }
+                )
+            self._publish(
+                {"msg": "release_segment", "node_id": hi, "collection": coll, "segment_id": sid}
+            )
+            moved += 1
+
+    def nodes_for_collection(self, collection: str) -> list[str]:
+        """All nodes holding segments or channels of the collection."""
+        out = set()
+        for (coll, _sid), node in self.assignment.items():
+            if coll == collection:
+                out.add(node)
+        for n, st in self.nodes.items():
+            if any(ch.startswith(f"dml/{collection}/") for ch in st.channels):
+                out.add(n)
+        return sorted(out & set(self.live_nodes()))

@@ -1,0 +1,116 @@
+"""Data nodes: WAL -> binlog archivers (paper §3.3).
+
+A data node subscribes to a set of DML channels, accumulates rows into the
+authoritative growing segments, and when the data coordinator marks a
+segment for sealing (size or idle-time policy), serializes it to columnar
+binlog objects and announces ``segment_sealed`` on the coordination
+channel.  Data nodes are stateless in the recovery sense: everything they
+hold is reconstructible by replaying the WAL from the last sealed
+checkpoint positions.
+"""
+
+from __future__ import annotations
+
+from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
+from .binlog import write_segment_binlog
+from .object_store import ObjectStore
+from .segment import Segment
+from .timestamp import TSO
+
+
+class DataNode:
+    def __init__(
+        self,
+        node_id: str,
+        broker: LogBroker,
+        store: ObjectStore,
+        tso: TSO,
+        data_coord,
+    ):
+        self.node_id = node_id
+        self.broker = broker
+        self.store = store
+        self.tso = tso
+        self.data_coord = data_coord
+        self.subscriptions: dict[str, Subscription] = {}
+        # (collection, segment_id) -> growing Segment
+        self.growing: dict[tuple[str, int], Segment] = {}
+        self.alive = True
+
+    def subscribe(self, channel: str, from_position: int = 0) -> None:
+        self.subscriptions[channel] = Subscription(self.broker, channel, from_position)
+
+    def unsubscribe(self, channel: str) -> None:
+        self.subscriptions.pop(channel, None)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> bool:
+        if not self.alive:
+            return False
+        progress = False
+        for sub in list(self.subscriptions.values()):
+            for entry in sub.poll():
+                progress |= self._consume(entry, sub.position)
+        progress |= self._flush_sealed()
+        return progress
+
+    def _consume(self, entry: LogEntry, position: int) -> bool:
+        if entry.type is EntryType.INSERT:
+            p = entry.payload
+            key = (p["collection"], p["segment_id"])
+            seg = self.growing.get(key)
+            if seg is None:
+                dim = p["vector"].shape[1]
+                extra_fields = tuple(sorted(p.get("extras", {})))
+                seg = Segment(
+                    p["segment_id"], p["collection"], p["shard"], dim,
+                    extra_fields=extra_fields,
+                )
+                self.growing[key] = seg
+            n = len(p["pk"])
+            ts_col = [entry.ts] * n
+            import numpy as np
+
+            seg.append(p["pk"], p["vector"], np.asarray(ts_col), p.get("extras"))
+            seg.checkpoint_pos = position
+            return True
+        if entry.type is EntryType.DELETE:
+            p = entry.payload
+            for (coll, _sid), seg in self.growing.items():
+                if coll == p["collection"]:
+                    seg.delete(p["pk"], entry.ts)
+            return True
+        return False
+
+    def _flush_sealed(self) -> bool:
+        """Seal + flush segments the data coordinator marked."""
+        progress = False
+        for key in list(self.growing):
+            coll, sid = key
+            if not self.data_coord.should_seal(coll, sid):
+                continue
+            seg = self.growing.pop(key)
+            seg.seal()
+            keys = write_segment_binlog(self.store, seg)
+            ts = self.tso.next()
+            self.broker.publish(
+                COORD_CHANNEL,
+                LogEntry(
+                    ts=ts,
+                    type=EntryType.COORD,
+                    payload={
+                        "msg": "segment_sealed",
+                        "collection": coll,
+                        "segment_id": sid,
+                        "shard": seg.shard,
+                        "num_rows": seg.num_rows,
+                        "binlog_keys": keys,
+                        "checkpoint_pos": seg.checkpoint_pos,
+                        "min_ts": seg.min_ts(),
+                        "max_ts": seg.max_ts(),
+                    },
+                ),
+            )
+            self.data_coord.on_sealed(coll, sid, seg.num_rows)
+            progress = True
+        return progress

@@ -1,0 +1,90 @@
+"""Index nodes: asynchronous index builders (paper §3.5).
+
+Index nodes receive build tasks from the index coordinator over the
+coordination channel, claim them with a meta-store CAS (so concurrent index
+nodes never duplicate work), read **only the vector column** of the binlog
+(no read amplification), build the index, persist it to the object store,
+and announce ``index_built``.
+"""
+
+from __future__ import annotations
+
+from ..index.base import IndexSpec
+from ..index.registry import create_index
+from .binlog import index_key, read_binlog_column
+from .collection import Metric
+from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
+from .meta_store import MetaStore
+from .object_store import ObjectStore
+from .timestamp import TSO
+
+
+class IndexNode:
+    def __init__(
+        self,
+        node_id: str,
+        broker: LogBroker,
+        store: ObjectStore,
+        meta: MetaStore,
+        tso: TSO,
+    ):
+        self.node_id = node_id
+        self.broker = broker
+        self.store = store
+        self.meta = meta
+        self.tso = tso
+        self.sub = Subscription(broker, COORD_CHANNEL)
+        self.alive = True
+        self.builds_completed = 0
+        self.busy_fraction = 0.0  # bookkeeping for the idle-shutdown policy
+
+    def step(self) -> bool:
+        if not self.alive:
+            return False
+        progress = False
+        for entry in self.sub.poll():
+            if entry.type is not EntryType.COORD:
+                continue
+            p = entry.payload
+            if p.get("msg") != "index_build_task":
+                continue
+            progress |= self._try_build(p)
+        return progress
+
+    def _try_build(self, task: dict) -> bool:
+        coll = task["collection"]
+        sid = task["segment_id"]
+        kind = task["index_kind"]
+        claim_key = f"index_claim/{coll}/{sid}/{kind}"
+        # CAS claim: only one index node builds a given task.
+        if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
+            return False
+
+        vectors = read_binlog_column(self.store, coll, sid, "vector")
+        spec = IndexSpec(
+            kind=kind,
+            metric=Metric(task.get("metric", "l2")),
+            params=task.get("params") or {},
+        )
+        index = create_index(spec)
+        index.build(vectors)
+        key = index_key(coll, sid, kind)
+        self.store.put(key, index.save())
+        self.builds_completed += 1
+
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(
+                ts=self.tso.next(),
+                type=EntryType.COORD,
+                payload={
+                    "msg": "index_built",
+                    "collection": coll,
+                    "segment_id": sid,
+                    "index_kind": kind,
+                    "index_key": key,
+                    "built_by": self.node_id,
+                },
+            ),
+        )
+        return True

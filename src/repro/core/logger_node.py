@@ -1,0 +1,115 @@
+"""Loggers: WAL entry points (paper Fig. 4).
+
+Loggers sit in a consistent-hash ring; each owns one or more shards
+(logical buckets).  On an insert/delete the owning logger verifies the
+request, obtains an LSN from the TSO, resolves the *segment* each entity
+belongs to (consulting the data coordinator's allocations), and appends the
+entry to the shard's WAL channel.  Loggers also emit the periodic
+time-ticks that drive delta consistency.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .collection import CollectionInfo, validate_rows
+from .log import EntryType, LogBroker, LogEntry, dml_channel, shard_of_pk
+from .timestamp import TSO, Clock
+
+
+class Logger:
+    """One logger instance; owns a set of shards for each collection."""
+
+    def __init__(
+        self,
+        logger_id: str,
+        broker: LogBroker,
+        tso: TSO,
+        data_coord,  # DataCoordinator (duck-typed to avoid import cycle)
+        clock: Clock,
+        tick_interval_ms: float = 50.0,
+    ):
+        self.logger_id = logger_id
+        self.broker = broker
+        self.tso = tso
+        self.data_coord = data_coord
+        self.clock = clock
+        self.tick_interval_ms = tick_interval_ms
+        self._last_tick_ms: dict[str, float] = {}
+        self.alive = True
+
+    # ------------------------------------------------------------- inserts
+    def insert(
+        self, info: CollectionInfo, rows: dict[str, np.ndarray]
+    ) -> tuple[int, int]:
+        """Validate, assign LSN + segment, publish to WAL.
+
+        Returns (lsn, row_count).  The paper assigns one LSN per request;
+        all rows in the batch share it (row-level ACID).
+        """
+        if not self.alive:
+            raise RuntimeError(f"logger {self.logger_id} is down")
+        n = validate_rows(info.schema, rows)
+        pk_field = info.schema.primary()
+        if pk_field and pk_field.name in rows:
+            pks = np.asarray(rows[pk_field.name])
+        else:
+            pks = self.data_coord.allocate_pks(info.name, n)
+
+        lsn = self.tso.next()
+        shards = np.array([shard_of_pk(pk, info.num_shards) for pk in pks.tolist()])
+        vec_field = info.schema.vector_fields()[0].name
+        extra_names = [
+            f.name for f in info.schema.attribute_fields() if f.name in rows
+        ]
+        for shard in np.unique(shards):
+            sel = shards == shard
+            count = int(sel.sum())
+            segment_id = self.data_coord.assign_segment(info.name, int(shard), count)
+            payload = {
+                "collection": info.name,
+                "shard": int(shard),
+                "segment_id": segment_id,
+                "pk": pks[sel],
+                "vector": np.asarray(rows[vec_field], np.float32)[sel],
+                "extras": {f: np.asarray(rows[f])[sel] for f in extra_names},
+            }
+            self.broker.publish(
+                dml_channel(info.name, int(shard)),
+                LogEntry(ts=lsn, type=EntryType.INSERT, payload=payload),
+            )
+        return lsn, n
+
+    def delete(self, info: CollectionInfo, pks: np.ndarray) -> int:
+        if not self.alive:
+            raise RuntimeError(f"logger {self.logger_id} is down")
+        lsn = self.tso.next()
+        pks = np.asarray(pks)
+        shards = np.array([shard_of_pk(pk, info.num_shards) for pk in pks.tolist()])
+        for shard in np.unique(shards):
+            sel = shards == shard
+            self.broker.publish(
+                dml_channel(info.name, int(shard)),
+                LogEntry(
+                    ts=lsn,
+                    type=EntryType.DELETE,
+                    payload={"collection": info.name, "shard": int(shard), "pk": pks[sel]},
+                ),
+            )
+        return lsn
+
+    # ---------------------------------------------------------- time ticks
+    def tick(self, channels: list[str], force: bool = False) -> int:
+        """Emit time-ticks on owned channels if the interval elapsed."""
+        now = self.clock.now_ms()
+        emitted = 0
+        for ch in channels:
+            last = self._last_tick_ms.get(ch, -1e18)
+            if force or (now - last) >= self.tick_interval_ms:
+                ts = self.tso.next()
+                self.broker.publish(
+                    ch, LogEntry(ts=ts, type=EntryType.TIME_TICK, payload={})
+                )
+                self._last_tick_ms[ch] = now
+                emitted += 1
+        return emitted

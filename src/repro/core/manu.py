@@ -1,0 +1,428 @@
+"""ManuSystem: wires the full architecture and exposes the PyManu-style API
+(paper Table 2).
+
+    manu = ManuSystem(ManuConfig(num_query_nodes=2))
+    coll = manu.create_collection("products", dim=128)
+    coll.insert({"vector": vecs})
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 64})
+    res = coll.search(queries, limit=10, staleness_ms=100.0)
+
+Two driving modes:
+
+* **cooperative** (default) — deterministic: every API call pumps the
+  component state machines until quiescent; consistency waits advance the
+  clock and emit time-ticks explicitly.  This is what the tests use.
+* **threaded** — background threads pump components and loggers emit ticks
+  on the wall clock; searches block on watermarks.  Used by the latency /
+  elasticity benchmarks (Figs 9, 12).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .collection import CollectionInfo, FieldSchema, FieldType, Metric, Schema
+from .consistency import GuaranteeTs
+from .coordinator import (
+    DataCoordinator,
+    IndexCoordinator,
+    QueryCoordinator,
+    RootCoordinator,
+)
+from .data_node import DataNode
+from .index_node import IndexNode
+from .log import COORD_CHANNEL, LogBroker, dml_channel
+from .logger_node import Logger
+from .meta_store import MetaStore
+from .object_store import MemoryObjectStore, ObjectStore
+from .proxy import BatchingProxy, Proxy, SearchResult
+from .query_node import QueryNode
+from .time_travel import RestoredCollection, TimeTravel
+from .timestamp import INFINITE_STALENESS, TSO, Clock, ManualClock
+
+
+@dataclass
+class ManuConfig:
+    num_shards: int = 2
+    num_loggers: int = 2
+    num_data_nodes: int = 1
+    num_index_nodes: int = 1
+    num_query_nodes: int = 2
+    seal_rows: int = 8_192
+    slice_rows: int = 2_048
+    tick_interval_ms: float = 50.0
+    default_staleness_ms: float = INFINITE_STALENESS
+    manual_clock: bool = True
+    threaded: bool = False
+    pump_sleep_s: float = 0.002
+
+
+class ManuCollection:
+    """ORM-style handle (PyManu's ``Collection``)."""
+
+    def __init__(self, system: "ManuSystem", info: CollectionInfo):
+        self.system = system
+        self.info = info
+        self.last_write_ts = 0
+
+    @property
+    def name(self) -> str:
+        return self.info.name
+
+    def insert(self, rows: dict[str, np.ndarray]) -> int:
+        lsn, _n = self.system.proxy.insert(self.info, rows)
+        self.last_write_ts = lsn
+        if not self.system.config.threaded:
+            self.system.pump()
+        return lsn
+
+    def delete(self, pks) -> int:
+        lsn = self.system.proxy.delete(self.info, np.asarray(pks))
+        self.last_write_ts = lsn
+        if not self.system.config.threaded:
+            self.system.pump()
+        return lsn
+
+    def create_index(self, field: str, kind: str, params: dict | None = None) -> None:
+        if field != "vector" and self.info.schema.field(field).dtype is not FieldType.VECTOR:
+            raise ValueError("create_index currently targets the vector field")
+        self.system.index_coord.set_index_spec(
+            self.name, kind, params, metric=self.info.metric
+        )
+        # Batch indexing (paper §3.5): issue builds for already-sealed segments.
+        for sid in self.system.data_coord.sealed_segments(self.name):
+            self.system.index_coord.rebuild_segment(self.name, sid)
+        if not self.system.config.threaded:
+            self.system.run_until_idle()
+
+    def flush(self) -> None:
+        """Seal all growing segments and wait for archive + index builds."""
+        self.system.data_coord.flush(self.name)
+        if self.system.config.threaded:
+            self.system.wait_idle()
+        else:
+            self.system.run_until_idle()
+
+    def search(
+        self,
+        queries: np.ndarray,
+        limit: int = 10,
+        staleness_ms: float | None = None,
+        read_your_writes: bool = False,
+        filter_expr: str | None = None,
+        time_travel_ts: int | None = None,
+        hedge_timeout_s: float | None = None,
+    ) -> SearchResult:
+        return self.system.search(
+            self,
+            np.asarray(queries, np.float32),
+            limit,
+            staleness_ms=staleness_ms,
+            session_ts=self.last_write_ts if read_your_writes else 0,
+            filter_expr=filter_expr,
+            time_travel_ts=time_travel_ts,
+            hedge_timeout_s=hedge_timeout_s,
+        )
+
+    def query(self, queries: np.ndarray, limit: int, expr: str, **kw) -> SearchResult:
+        """PyManu ``query``: vector search with boolean filter expression."""
+        return self.search(queries, limit, filter_expr=expr, **kw)
+
+    def num_entities(self) -> int:
+        return sum(
+            qn.memory_rows()
+            for qn in self.system.query_nodes.values()
+            if qn.alive
+        )
+
+
+class ManuSystem:
+    def __init__(self, config: ManuConfig | None = None, store: ObjectStore | None = None):
+        self.config = config or ManuConfig()
+        self.clock: Clock = ManualClock(1_000_000) if self.config.manual_clock else Clock()
+        self.tso = TSO(self.clock)
+        self.broker = LogBroker()
+        self.meta = MetaStore(self.clock)
+        self.store = store or MemoryObjectStore()
+
+        self.root_coord = RootCoordinator(self.broker, self.meta, self.tso)
+        self.data_coord = DataCoordinator(self.broker, self.meta, self.tso, self.clock)
+        self.index_coord = IndexCoordinator(self.broker, self.meta, self.tso)
+        self.query_coord = QueryCoordinator(self.broker, self.meta, self.tso, self.data_coord)
+
+        self.loggers = [
+            Logger(f"logger-{i}", self.broker, self.tso, self.data_coord, self.clock,
+                   self.config.tick_interval_ms)
+            for i in range(self.config.num_loggers)
+        ]
+        self.data_nodes = [
+            DataNode(f"dn-{i}", self.broker, self.store, self.tso, self.data_coord)
+            for i in range(self.config.num_data_nodes)
+        ]
+        self.index_nodes = [
+            IndexNode(f"in-{i}", self.broker, self.store, self.meta, self.tso)
+            for i in range(self.config.num_index_nodes)
+        ]
+        self.query_nodes: dict[str, QueryNode] = {}
+        for i in range(self.config.num_query_nodes):
+            self._new_query_node()
+
+        self.proxy = Proxy(
+            "proxy-0", self.meta, self.tso, self.loggers, self.query_coord, self.query_nodes
+        )
+        self.batcher = BatchingProxy(self.proxy)
+        self.time_travel = TimeTravel(self.broker, self.store)
+        self.collections: dict[str, ManuCollection] = {}
+        self._qn_counter = self.config.num_query_nodes
+
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        if self.config.threaded:
+            self.start_threads()
+
+    # ------------------------------------------------------------- topology
+    def _new_query_node(self) -> QueryNode:
+        node_id = f"qn-{len(self.query_nodes)}"
+        # ensure unique ids even after removals
+        i = len(self.query_nodes)
+        while f"qn-{i}" in self.query_nodes:
+            i += 1
+        node_id = f"qn-{i}"
+        qn = QueryNode(node_id, self.broker, self.store, self.tso,
+                       slice_rows=self.config.slice_rows)
+        self.query_nodes[node_id] = qn
+        self.query_coord.register_node(node_id)
+        return qn
+
+    def add_query_node(self) -> str:
+        qn = self._new_query_node()
+        for coll in self.collections.values():
+            self.query_coord.assign_channels(coll.name, coll.info.num_shards)
+        self.query_coord.rebalance()
+        if not self.config.threaded:
+            self.run_until_idle()
+        return qn.node_id
+
+    def remove_query_node(self, node_id: str | None = None) -> str | None:
+        """Graceful scale-down: reassign segments, then retire the node."""
+        live = [n for n, q in self.query_nodes.items() if q.alive]
+        if len(live) <= 1:
+            return None
+        node_id = node_id or live[-1]
+        self.query_coord.deregister_node(node_id)
+        self.query_coord.handle_failures()
+        node = self.query_nodes.get(node_id)
+        if node:
+            node.alive = False
+        for coll in self.collections.values():
+            self.query_coord.assign_channels(coll.name, coll.info.num_shards)
+        if not self.config.threaded:
+            self.run_until_idle()
+        return node_id
+
+    def kill_query_node(self, node_id: str) -> None:
+        """Simulated crash: no dereg — the lease must expire (failover test)."""
+        self.query_nodes[node_id].alive = False
+
+    def recover_failures(self) -> list[str]:
+        """Expire dead leases and reassign (the query coordinator's watchdog)."""
+        st = self.query_coord.nodes
+        for node_id, qn in self.query_nodes.items():
+            if qn.alive and node_id in st:
+                self.query_coord.heartbeat(node_id)
+        # force lease expiry for dead nodes
+        for node_id, qn in self.query_nodes.items():
+            if not qn.alive and node_id in st:
+                self.meta.revoke_lease(st[node_id].lease_id)
+        dead = self.query_coord.handle_failures()
+        for coll in self.collections.values():
+            self.query_coord.assign_channels(coll.name, coll.info.num_shards)
+        if not self.config.threaded:
+            self.run_until_idle()
+        return dead
+
+    # ----------------------------------------------------------------- DDL
+    def create_collection(
+        self,
+        name: str,
+        dim: int,
+        metric: Metric = Metric.L2,
+        num_shards: int | None = None,
+        extra_fields: list[FieldSchema] | None = None,
+        seal_rows: int | None = None,
+    ) -> ManuCollection:
+        schema = Schema.simple(dim, metric, extra=extra_fields)
+        info = self.root_coord.create_collection(
+            name,
+            schema,
+            num_shards=num_shards or self.config.num_shards,
+            metric=metric,
+            seal_rows=seal_rows or self.config.seal_rows,
+        )
+        coll = ManuCollection(self, info)
+        self.collections[name] = coll
+        # Data nodes archive the WAL: shard channels round-robin over them.
+        for shard in range(info.num_shards):
+            dn = self.data_nodes[shard % len(self.data_nodes)]
+            dn.subscribe(dml_channel(name, shard))
+        self.query_coord.assign_channels(name, info.num_shards)
+        if not self.config.threaded:
+            self.pump()
+        return coll
+
+    def drop_collection(self, name: str) -> None:
+        self.root_coord.drop_collection(name)
+        self.collections.pop(name, None)
+
+    # ---------------------------------------------------------------- pump
+    def pump(self, rounds: int = 1) -> bool:
+        """One cooperative scheduling round over every component."""
+        progress = False
+        for _ in range(rounds):
+            for lg in self.loggers:
+                lg.tick(self.broker.channels("dml/"))
+            for dn in self.data_nodes:
+                progress |= dn.step()
+            progress |= self.index_coord.step()
+            for ix in self.index_nodes:
+                progress |= ix.step()
+            progress |= self.query_coord.step()
+            for qn in self.query_nodes.values():
+                progress |= qn.step()
+        return progress
+
+    def run_until_idle(self, max_rounds: int = 10_000) -> int:
+        rounds = 0
+        while self.pump() and rounds < max_rounds:
+            rounds += 1
+        return rounds
+
+    def wait_idle(self, timeout_s: float = 30.0) -> None:
+        deadline = time.time() + timeout_s
+        while time.time() < deadline:
+            stats = self.broker.stats()
+            lag = 0
+            for qn in self.query_nodes.values():
+                if not qn.alive:
+                    continue
+                for sub in qn.subscriptions.values():
+                    lag += sub.lag()
+            if lag == 0 and not self.index_coord.pending_tasks:
+                return
+            time.sleep(0.005)
+
+    # -------------------------------------------------------------- search
+    def search(
+        self,
+        coll: ManuCollection,
+        queries: np.ndarray,
+        k: int,
+        staleness_ms: float | None = None,
+        session_ts: int = 0,
+        filter_expr: str | None = None,
+        time_travel_ts: int | None = None,
+        hedge_timeout_s: float | None = None,
+    ) -> SearchResult:
+        tau = self.config.default_staleness_ms if staleness_ms is None else staleness_ms
+        query_ts = time_travel_ts if time_travel_ts is not None else self.tso.next()
+        guarantee = GuaranteeTs(query_ts=query_ts, staleness_ms=tau, session_ts=session_ts)
+        if time_travel_ts is not None:
+            # Historical reads never wait: the data is by definition old.
+            guarantee = GuaranteeTs(query_ts=query_ts, staleness_ms=INFINITE_STALENESS)
+        wait_fn = self._threaded_wait if self.config.threaded else self._cooperative_wait
+        return self.proxy.search(
+            coll.info, queries, k, guarantee,
+            wait_fn=wait_fn, hedge_timeout_s=hedge_timeout_s, filter_expr=filter_expr,
+        )
+
+    def _cooperative_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:
+        collections = {c for (c, _s) in list(node.sealed) + list(node.growing)}
+        channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+        if not channels:
+            return
+        target = guarantee.wait_target_ts()
+        for _ in range(100_000):
+            wm = min(node.subscriptions[ch].last_tick_seen for ch in channels)
+            if wm >= target or guarantee.satisfied_by(wm):
+                return
+            if isinstance(self.clock, ManualClock):
+                self.clock.advance(max(self.config.tick_interval_ms, 1))
+            for lg in self.loggers:
+                lg.tick(channels)
+            self.pump()
+        raise TimeoutError("consistency wait did not converge")
+
+    def _threaded_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:
+        channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+        target = guarantee.wait_target_ts()
+        for ch in channels:
+            self.broker.wait_for_tick(ch, target, timeout_s=10.0)
+        # ensure node consumed the ticks
+        deadline = time.time() + 10.0
+        while time.time() < deadline:
+            if all(node.subscriptions[ch].last_tick_seen >= target for ch in channels
+                   if ch in node.subscriptions):
+                return
+            time.sleep(0.001)
+
+    # -------------------------------------------------------- time travel
+    def checkpoint_collection(self, name: str) -> None:
+        coll = self.collections[name]
+        ts = self.tso.last_issued()
+        replay = {}
+        for shard in range(coll.info.num_shards):
+            ch = dml_channel(name, shard)
+            replay[ch] = self.data_coord.replay_position(name, shard)
+        self.time_travel.checkpoint(
+            name, ts, self.data_coord.sealed_segments(name),
+            coll.info.num_shards, replay,
+        )
+
+    def restore_collection(self, name: str, target_ts: int) -> RestoredCollection:
+        coll = self.collections[name]
+        return self.time_travel.restore(
+            name, target_ts, coll.info.num_shards, coll.info.dim()
+        )
+
+    # ------------------------------------------------------------- threads
+    def start_threads(self) -> None:
+        self._stop.clear()
+
+        def pump_loop():
+            while not self._stop.is_set():
+                self.pump()
+                time.sleep(self.config.pump_sleep_s)
+
+        def watchdog_loop():
+            while not self._stop.is_set():
+                for node_id, qn in self.query_nodes.items():
+                    if qn.alive and node_id in self.query_coord.nodes:
+                        self.query_coord.heartbeat(node_id)
+                time.sleep(0.05)
+
+        for fn in (pump_loop, watchdog_loop):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop_threads(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads.clear()
+
+    # ------------------------------------------------------------ metrics
+    def stats(self) -> dict:
+        return {
+            "log": self.broker.stats(),
+            "object_store_puts": getattr(self.store, "put_count", -1),
+            "query_nodes": {
+                n: {"rows": q.memory_rows(), "alive": q.alive, "searches": q.search_count}
+                for n, q in self.query_nodes.items()
+            },
+            "index_builds": sum(ix.builds_completed for ix in self.index_nodes),
+        }

@@ -1,0 +1,258 @@
+"""Access layer: stateless proxies (paper §3.2, §3.6).
+
+Proxies verify requests against cached metadata (early rejection), route
+inserts/deletes to the owning loggers via the hash ring, fan search
+requests out to the query nodes holding the collection's segments, and
+aggregate node-wise top-k into the global top-k — removing duplicate
+result vectors (a segment may briefly live on two nodes during
+redistribution, and a row may exist both in a growing copy and the sealed
+segment).
+
+Straggler mitigation: ``search`` takes a ``hedge_timeout_s``; if a query
+node does not answer in time and another live node can cover the same
+segments, the scan is re-dispatched (hedged request).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from .collection import CollectionInfo, Metric
+from .consistency import GuaranteeTs
+from .coordinator import QueryCoordinator
+from .log import shard_of_pk
+from .logger_node import Logger
+from .meta_store import MetaStore
+from .query_node import QueryNode
+from .timestamp import TSO, INFINITE_STALENESS
+
+
+@dataclass
+class SearchResult:
+    scores: np.ndarray  # [nq, k]
+    pks: np.ndarray  # [nq, k], -1 = empty slot
+    query_ts: int
+    waited_ms: float = 0.0
+
+
+class Proxy:
+    def __init__(
+        self,
+        proxy_id: str,
+        meta: MetaStore,
+        tso: TSO,
+        loggers: list[Logger],
+        query_coord: QueryCoordinator,
+        query_nodes: dict[str, QueryNode],
+    ):
+        self.proxy_id = proxy_id
+        self.meta = meta
+        self.tso = tso
+        self.loggers = loggers
+        self.query_coord = query_coord
+        self.query_nodes = query_nodes
+        # Metadata cache, refreshed via meta-store watch (paper: proxies
+        # cache a copy of the metadata for verifying legitimacy).
+        self._meta_cache: dict[str, dict] = {}
+        self._cancel_watch = meta.watch("collection/", self._on_meta)
+        for key, value in meta.scan("collection/").items():
+            self._meta_cache[key.split("/", 1)[1]] = value
+
+    def _on_meta(self, key: str, value) -> None:
+        name = key.split("/", 1)[1]
+        if value is None:
+            self._meta_cache.pop(name, None)
+        else:
+            self._meta_cache[name] = value
+
+    # ------------------------------------------------------------- routing
+    def _verify(self, collection: str) -> dict:
+        info = self._meta_cache.get(collection)
+        if info is None:
+            raise KeyError(f"collection '{collection}' does not exist")
+        return info
+
+    def _logger_for(self, shard: int) -> Logger:
+        live = [lg for lg in self.loggers if lg.alive]
+        if not live:
+            raise RuntimeError("no live loggers")
+        return live[shard % len(live)]
+
+    def insert(self, info: CollectionInfo, rows: dict[str, np.ndarray]) -> tuple[int, int]:
+        self._verify(info.name)
+        # Hash-ring: the logger owning shard 0 of this batch handles the
+        # request (batches span shards; each logger writes its shards).
+        shard0 = 0
+        if info.schema.primary() and info.schema.primary().name in rows:
+            shard0 = shard_of_pk(int(np.asarray(rows[info.schema.primary().name])[0]),
+                                 info.num_shards)
+        return self._logger_for(shard0).insert(info, rows)
+
+    def delete(self, info: CollectionInfo, pks: np.ndarray) -> int:
+        self._verify(info.name)
+        return self._logger_for(0).delete(info, pks)
+
+    # -------------------------------------------------------------- search
+    def search(
+        self,
+        info: CollectionInfo,
+        queries: np.ndarray,
+        k: int,
+        guarantee: GuaranteeTs,
+        wait_fn=None,
+        hedge_timeout_s: float | None = None,
+        filter_expr=None,
+    ) -> SearchResult:
+        """Two-phase reduce over the query nodes holding the collection.
+
+        ``wait_fn(node, guarantee) -> None`` implements the consistency wait
+        (cooperative runtimes pump the system; threaded runtimes block).
+        """
+        self._verify(info.name)
+        metric = info.metric
+        nodes = self.query_coord.nodes_for_collection(info.name)
+        target_nodes = [
+            self.query_nodes[n] for n in nodes if self.query_nodes[n].alive
+        ]
+        t0 = time.perf_counter()
+        partials: list[tuple[np.ndarray, np.ndarray]] = []
+        pending = list(target_nodes)
+        for node in pending:
+            if wait_fn is not None:
+                wait_fn(node, guarantee)
+            try:
+                if hedge_timeout_s is not None:
+                    res = _run_with_timeout(
+                        lambda: node.search(info.name, queries, k, metric, guarantee,
+                                            filter_masks=self._filters(node, info, filter_expr)),
+                        hedge_timeout_s,
+                    )
+                    if res is None:  # straggler: hedge to any other live node
+                        others = [n for n in target_nodes if n is not node and n.alive]
+                        if others:
+                            res = others[0].search(
+                                info.name, queries, k, metric, guarantee,
+                                filter_masks=self._filters(others[0], info, filter_expr),
+                            )
+                        else:
+                            res = node.search(info.name, queries, k, metric, guarantee,
+                                              filter_masks=self._filters(node, info, filter_expr))
+                else:
+                    res = node.search(info.name, queries, k, metric, guarantee,
+                                      filter_masks=self._filters(node, info, filter_expr))
+            except RuntimeError:
+                continue  # dead node; coordinator failover will cover its data
+            partials.append(res)
+        waited_ms = (time.perf_counter() - t0) * 1e3
+
+        nq = len(queries)
+        if not partials:
+            fill = np.inf if metric is Metric.L2 else -np.inf
+            return SearchResult(
+                np.full((nq, k), fill, np.float32),
+                np.full((nq, k), -1, np.int64),
+                guarantee.query_ts,
+                waited_ms,
+            )
+        s = np.concatenate([p[0] for p in partials], axis=1)
+        p = np.concatenate([p[1] for p in partials], axis=1)
+        out_s = np.full((nq, k), np.inf if metric is Metric.L2 else -np.inf, np.float32)
+        out_p = np.full((nq, k), -1, np.int64)
+        order = np.argsort(s if metric is Metric.L2 else -s, axis=1, kind="stable")
+        for r in range(nq):
+            seen: set[int] = set()
+            slot = 0
+            for j in order[r]:
+                pk = int(p[r, j])
+                if pk < 0 or pk in seen or not np.isfinite(s[r, j]):
+                    continue
+                seen.add(pk)
+                out_s[r, slot] = s[r, j]
+                out_p[r, slot] = pk
+                slot += 1
+                if slot >= k:
+                    break
+        return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms)
+
+    def _filters(self, node: QueryNode, info: CollectionInfo, filter_expr):
+        """Resolve an attribute filter to per-segment row masks on a node."""
+        if filter_expr is None:
+            return None
+        from ..index.attribute import FilterExpr
+
+        expr = filter_expr if isinstance(filter_expr, FilterExpr) else FilterExpr(filter_expr)
+        masks: dict[int, np.ndarray] = {}
+        attr_fields = [f.name for f in info.schema.attribute_fields()]
+        for (coll, sid), handle in list(node.sealed.items()):
+            if coll != info.name:
+                continue
+            seg = handle.segment
+            cols = {f: seg.extra(f) for f in attr_fields if f in seg.extra_fields}
+            cols["pk"] = seg.pks()
+            masks[sid] = expr.evaluate(cols, seg.num_rows)
+        for (coll, sid), gs in list(node.growing.items()):
+            if coll != info.name:
+                continue
+            seg = gs.segment
+            cols = {f: seg.extra(f) for f in attr_fields if f in seg.extra_fields}
+            cols["pk"] = seg.pks()
+            masks[sid] = expr.evaluate(cols, seg.num_rows)
+        return masks
+
+
+def _run_with_timeout(fn, timeout_s: float):
+    """Run fn in a worker thread; None on timeout (hedged-request helper)."""
+    result: list = []
+
+    def target():
+        result.append(fn())
+
+    t = threading.Thread(target=target, daemon=True)
+    t.start()
+    t.join(timeout_s)
+    return result[0] if result else None
+
+
+class BatchingProxy:
+    """Request batching (paper §3.6): requests of the same type are grouped
+    into one batch and handled together."""
+
+    def __init__(self, proxy: Proxy, max_batch: int = 64):
+        self.proxy = proxy
+        self.max_batch = max_batch
+        self._queue: list[tuple[CollectionInfo, np.ndarray, int, GuaranteeTs]] = []
+
+    def submit(self, info, query: np.ndarray, k: int, guarantee: GuaranteeTs) -> int:
+        self._queue.append((info, query, k, guarantee))
+        return len(self._queue) - 1
+
+    def flush(self, wait_fn=None) -> list[SearchResult]:
+        """Group by (collection, k) and run each group as one batch."""
+        results: list[SearchResult | None] = [None] * len(self._queue)
+        groups: dict[tuple[str, int], list[int]] = {}
+        for i, (info, _q, k, _g) in enumerate(self._queue):
+            groups.setdefault((info.name, k), []).append(i)
+        for (name, k), idxs in groups.items():
+            info = self._queue[idxs[0]][0]
+            qs = np.concatenate([self._queue[i][1] for i in idxs], axis=0)
+            # the batch executes under the *strictest* guarantee in the group
+            guarantee = max(
+                (self._queue[i][3] for i in idxs), key=lambda g: g.wait_target_ts()
+            )
+            batch_res = self.proxy.search(info, qs, k, guarantee, wait_fn=wait_fn)
+            row = 0
+            for i in idxs:
+                n_i = len(self._queue[i][1])
+                results[i] = SearchResult(
+                    batch_res.scores[row : row + n_i],
+                    batch_res.pks[row : row + n_i],
+                    batch_res.query_ts,
+                    batch_res.waited_ms,
+                )
+                row += n_i
+        self._queue.clear()
+        return results

@@ -1,0 +1,369 @@
+"""Query nodes: the search workers (paper §3.6).
+
+A query node gets data from three sources:
+
+* **WAL** — it subscribes to DML channels and keeps its own growing
+  segments so freshly inserted rows are searchable within one time-tick;
+  full slices get a light-weight temporary index (IVF-FLAT), the tail is
+  brute-force scanned.
+* **index files** — sealed segments' indexes, loaded from the object store
+  when the query coordinator assigns the segment to this node.
+* **binlog** — sealed segment columns, loaded on assignment/failover.
+
+Searches run under MVCC: a query pinned at ``ts`` sees exactly the rows
+with LSN <= ts that are not deleted as of ts.  Node-level results are the
+node-wise top-k of the two-phase reduce; the proxy performs the global
+merge and pk-dedup.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..index.base import IndexSpec, VectorIndex
+from ..index.flat import FlatIndex
+from ..index.ivf import IVFFlatIndex
+from ..index.registry import create_index
+from .binlog import load_segment
+from .collection import Metric
+from .consistency import GuaranteeTs
+from .log import EntryType, LogBroker, LogEntry, Subscription
+from .object_store import ObjectStore
+from .segment import Segment
+
+TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
+
+
+@dataclass
+class SealedHandle:
+    segment: Segment
+    index: VectorIndex | None = None
+    index_kind: str | None = None
+
+
+@dataclass
+class GrowingState:
+    segment: Segment
+    slice_index_built: dict[int, VectorIndex] = field(default_factory=dict)
+
+
+class QueryNode:
+    def __init__(
+        self,
+        node_id: str,
+        broker: LogBroker,
+        store: ObjectStore,
+        tso=None,
+        slice_rows: int = TEMP_INDEX_SLICE_ROWS,
+    ):
+        self.node_id = node_id
+        self.broker = broker
+        self.store = store
+        self.tso = tso
+        self.slice_rows = slice_rows
+        self.subscriptions: dict[str, Subscription] = {}
+        self.coord_sub = Subscription(broker, "coord") if broker.has_channel("coord") else None
+        self.sealed: dict[tuple[str, int], SealedHandle] = {}
+        self.growing: dict[tuple[str, int], GrowingState] = {}
+        # Delta deletes for rows living in sealed segments: coll -> pk -> ts
+        self.delta_deletes: dict[str, dict[object, int]] = {}
+        self.alive = True
+        self.search_count = 0
+        self.inject_delay_s = 0.0  # straggler fault injection (tests/benches)
+
+    # --------------------------------------------------------- subscriptions
+    def subscribe(self, channel: str, from_position: int = 0) -> None:
+        if channel not in self.subscriptions:
+            self.subscriptions[channel] = Subscription(self.broker, channel, from_position)
+
+    def unsubscribe(self, channel: str) -> None:
+        self.subscriptions.pop(channel, None)
+
+    def watermark(self, collection: str) -> int:
+        """Min last-time-tick over this node's channels for the collection."""
+        marks = [
+            sub.last_tick_seen
+            for ch, sub in self.subscriptions.items()
+            if ch.startswith(f"dml/{collection}/")
+        ]
+        return min(marks) if marks else 0
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> bool:
+        if not self.alive:
+            return False
+        progress = False
+        if self.coord_sub is not None:
+            for entry in self.coord_sub.poll():
+                progress |= self._handle_coord(entry)
+        for sub in list(self.subscriptions.values()):
+            for entry in sub.poll():
+                progress |= self._consume(entry)
+        progress |= self._build_slice_indexes()
+        return progress
+
+    def _handle_coord(self, entry: LogEntry) -> bool:
+        if entry.type is not EntryType.COORD:
+            return False
+        p = entry.payload
+        msg = p.get("msg")
+        if msg == "segment_loaded":
+            # Another node owns the sealed copy now: hand off our growing rows.
+            if p.get("node_id") != self.node_id:
+                self.drop_growing(p["collection"], p["segment_id"])
+            return True
+        if p.get("node_id") != self.node_id:
+            return False
+        if msg == "load_segment":
+            self.load_sealed(p["collection"], p["segment_id"])
+            if self.tso is not None:
+                self.broker.publish(
+                    "coord",
+                    LogEntry(
+                        ts=self.tso.next(),
+                        type=EntryType.COORD,
+                        payload={
+                            "msg": "segment_loaded",
+                            "node_id": self.node_id,
+                            "collection": p["collection"],
+                            "segment_id": p["segment_id"],
+                        },
+                    ),
+                )
+            return True
+        if msg == "load_index":
+            self.load_index(
+                p["collection"], p["segment_id"], p["index_kind"], p["index_key"]
+            )
+            return True
+        if msg == "release_segment":
+            self.release_segment(p["collection"], p["segment_id"])
+            return True
+        if msg == "subscribe_channel":
+            self.subscribe(p["channel"], p.get("from_position", 0))
+            return True
+        if msg == "unsubscribe_channel":
+            self.unsubscribe(p["channel"])
+            return True
+        return False
+
+    def _consume(self, entry: LogEntry) -> bool:
+        if entry.type is EntryType.INSERT:
+            p = entry.payload
+            key = (p["collection"], p["segment_id"])
+            if key in self.sealed:
+                return False  # already have the sealed (authoritative) copy
+            gs = self.growing.get(key)
+            if gs is None:
+                extra_fields = tuple(sorted(p.get("extras", {})))
+                seg = Segment(
+                    p["segment_id"], p["collection"], p["shard"],
+                    p["vector"].shape[1], slice_rows=self.slice_rows,
+                    extra_fields=extra_fields,
+                )
+                gs = GrowingState(seg)
+                self.growing[key] = gs
+            n = len(p["pk"])
+            gs.segment.append(
+                p["pk"], p["vector"], np.full(n, entry.ts, np.int64), p.get("extras")
+            )
+            return True
+        if entry.type is EntryType.DELETE:
+            p = entry.payload
+            coll = p["collection"]
+            dd = self.delta_deletes.setdefault(coll, {})
+            for pk in np.asarray(p["pk"]).tolist():
+                dd.setdefault(pk, entry.ts)
+            for (c, _sid), gs in self.growing.items():
+                if c == coll:
+                    gs.segment.delete(p["pk"], entry.ts)
+            return True
+        return False
+
+    def _build_slice_indexes(self) -> bool:
+        """Temporary IVF-FLAT per full slice of growing segments (paper §3.6)."""
+        progress = False
+        for gs in self.growing.values():
+            for s in gs.segment.full_slices():
+                if s in gs.slice_index_built:
+                    continue
+                lo, hi = gs.segment.slice_bounds(s)
+                idx = IVFFlatIndex(metric=Metric.L2, nlist=16, nprobe=4)
+                idx.build(gs.segment.vectors()[lo:hi])
+                gs.slice_index_built[s] = idx
+                progress = True
+        return progress
+
+    # ---------------------------------------------------------- assignments
+    def load_sealed(self, collection: str, segment_id: int) -> None:
+        key = (collection, segment_id)
+        if key in self.sealed:
+            return
+        seg = load_segment(self.store, collection, segment_id)
+        self.sealed[key] = SealedHandle(seg)
+        # Hand-off: drop our growing copy of the same segment.
+        self.growing.pop(key, None)
+
+    def load_index(self, collection: str, segment_id: int, kind: str, index_key: str) -> None:
+        handle = self.sealed.get((collection, segment_id))
+        if handle is None:
+            self.load_sealed(collection, segment_id)
+            handle = self.sealed[(collection, segment_id)]
+        index = VectorIndex.load(self.store.get(index_key))
+        handle.index = index
+        handle.index_kind = kind
+
+    def release_segment(self, collection: str, segment_id: int) -> None:
+        self.sealed.pop((collection, segment_id), None)
+        self.growing.pop((collection, segment_id), None)
+
+    def drop_growing(self, collection: str, segment_id: int) -> None:
+        """Hand-off after another node loaded the sealed copy."""
+        self.growing.pop((collection, segment_id), None)
+
+    def held_segments(self, collection: str) -> list[int]:
+        return sorted(sid for (c, sid) in self.sealed if c == collection)
+
+    def memory_rows(self) -> int:
+        rows = sum(h.segment.num_rows for h in self.sealed.values())
+        rows += sum(g.segment.num_rows for g in self.growing.values())
+        return rows
+
+    # --------------------------------------------------------------- search
+    def _delta_delete_mask(self, collection: str, seg: Segment, ts: int) -> np.ndarray | None:
+        dd = self.delta_deletes.get(collection)
+        if not dd:
+            return None
+        pks = seg.pks()
+        doomed_pks = np.array([pk for pk, dts in dd.items() if dts <= ts])
+        if len(doomed_pks) == 0:
+            return None
+        return ~np.isin(pks, doomed_pks)
+
+    def _visible(self, collection: str, seg: Segment, ts: int) -> np.ndarray:
+        mask = seg.visible_mask(ts)
+        dd = self._delta_delete_mask(collection, seg, ts)
+        if dd is not None:
+            mask = mask & dd
+        return mask
+
+    def search(
+        self,
+        collection: str,
+        queries: np.ndarray,
+        k: int,
+        metric: Metric,
+        guarantee: GuaranteeTs,
+        filter_masks: "dict[int, np.ndarray] | None" = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Node-wise top-k.  Returns (scores [nq,k], pks [nq,k]; -1 = empty).
+
+        ``filter_masks`` optionally maps segment_id -> row mask (attribute
+        filtering, resolved by the proxy per segment).
+        """
+        if not self.alive:
+            raise RuntimeError(f"query node {self.node_id} is down")
+        if self.inject_delay_s > 0:
+            import time as _t
+
+            _t.sleep(self.inject_delay_s)
+        self.search_count += 1
+        ts = guarantee.query_ts
+        nq = len(queries)
+        pool_s: list[np.ndarray] = []
+        pool_p: list[np.ndarray] = []
+
+        from ..kernels import ops
+
+        def scan_metric_str() -> str:
+            return "l2" if metric is Metric.L2 else "ip"
+
+        # ---- sealed segments (indexed or brute) ----
+        for (coll, sid), handle in self.sealed.items():
+            if coll != collection:
+                continue
+            seg = handle.segment
+            if seg.num_rows == 0:
+                continue
+            mask = self._visible(collection, seg, ts)
+            if filter_masks and sid in filter_masks:
+                mask = mask & filter_masks[sid]
+            if not mask.any():
+                continue
+            if handle.index is not None:
+                s, i = handle.index.search(queries, k, valid=mask)
+            else:
+                s, i = ops.topk_scan(
+                    queries, seg.vectors(), k, metric=scan_metric_str(), valid=mask
+                )
+            pks = seg.pks()
+            p = np.where(i >= 0, pks[np.clip(i, 0, len(pks) - 1)], -1)
+            pool_s.append(s)
+            pool_p.append(p)
+
+        # ---- growing segments (slice temp indexes + brute tail) ----
+        for (coll, sid), gs in self.growing.items():
+            if coll != collection:
+                continue
+            seg = gs.segment
+            if seg.num_rows == 0:
+                continue
+            mask = self._visible(collection, seg, ts)
+            if filter_masks and sid in filter_masks:
+                mask = mask & filter_masks[sid]
+            pks = seg.pks()
+            vecs = seg.vectors()
+            for s_idx, temp in gs.slice_index_built.items():
+                lo, hi = seg.slice_bounds(s_idx)
+                if not mask[lo:hi].any():
+                    continue
+                s, i = temp.search(queries, k, valid=mask[lo:hi])
+                p = np.where(i >= 0, pks[lo:hi][np.clip(i, 0, hi - lo - 1)], -1)
+                pool_s.append(s)
+                pool_p.append(p)
+            # tail (and any slice without a temp index yet)
+            built = set(gs.slice_index_built)
+            covered = np.zeros(seg.num_rows, dtype=bool)
+            for s_idx in built:
+                lo, hi = seg.slice_bounds(s_idx)
+                covered[lo:hi] = True
+            tail_mask = mask & ~covered
+            if tail_mask.any():
+                s, i = ops.topk_scan(
+                    queries, vecs, k, metric=scan_metric_str(), valid=tail_mask
+                )
+                p = np.where(i >= 0, pks[np.clip(i, 0, len(pks) - 1)], -1)
+                pool_s.append(s)
+                pool_p.append(p)
+
+        if not pool_s:
+            fill = np.inf if metric is Metric.L2 else -np.inf
+            return (
+                np.full((nq, k), fill, np.float32),
+                np.full((nq, k), -1, np.int64),
+            )
+
+        s = np.concatenate(pool_s, axis=1)
+        p = np.concatenate(pool_p, axis=1)
+        # node-wise merge with pk dedup (keep best occurrence)
+        out_s = np.full((nq, k), np.inf if metric is Metric.L2 else -np.inf, np.float32)
+        out_p = np.full((nq, k), -1, np.int64)
+        order = np.argsort(s if metric is Metric.L2 else -s, axis=1, kind="stable")
+        for r in range(nq):
+            seen: set[int] = set()
+            slot = 0
+            for j in order[r]:
+                pk = int(p[r, j])
+                if pk < 0 or pk in seen:
+                    continue
+                if not np.isfinite(s[r, j]):
+                    continue
+                seen.add(pk)
+                out_s[r, slot] = s[r, j]
+                out_p[r, slot] = pk
+                slot += 1
+                if slot >= k:
+                    break
+        return out_s, out_p

@@ -1,0 +1,288 @@
+"""Segments: Manu's unit of data placement (paper §3.1, §3.6).
+
+Entities from each shard are organized into segments.  A segment is
+*growing* (accepts new rows) until it reaches ``seal_size`` rows or a
+time limit, then *sealed* (read-only).  Growing segments are subdivided
+into *slices* (10k vectors by default); once a slice fills up, a
+light-weight temporary index (IVF-FLAT) is built for it so brute-force
+scan cost stays bounded (paper reports up to 10x speedup).
+
+MVCC: every row carries its LSN (HLC timestamp); deletes are recorded in
+a bitmap with their own timestamps.  ``visible_mask(ts)`` gives the set of
+rows a query pinned at ``ts`` may see — this one primitive yields delta
+consistency, repeatable reads, and time travel.
+"""
+
+from __future__ import annotations
+
+import io
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any
+
+import numpy as np
+
+DEFAULT_SLICE_ROWS = 10_000
+DEFAULT_SEAL_ROWS = 65_536
+
+
+class SegmentState(Enum):
+    GROWING = "growing"
+    SEALED = "sealed"
+    DROPPED = "dropped"
+
+
+@dataclass
+class SegmentStats:
+    num_rows: int
+    num_deleted: int
+    state: str
+    min_ts: int
+    max_ts: int
+
+
+class Segment:
+    """Columnar in-memory segment with MVCC visibility.
+
+    Storage is column-major (one numpy array per field) — the same layout
+    as the binlog, so sealing = serializing columns verbatim.
+    """
+
+    def __init__(
+        self,
+        segment_id: int,
+        collection: str,
+        shard: int,
+        dim: int,
+        slice_rows: int = DEFAULT_SLICE_ROWS,
+        extra_fields: tuple[str, ...] = (),
+    ):
+        self.segment_id = segment_id
+        self.collection = collection
+        self.shard = shard
+        self.dim = dim
+        self.slice_rows = slice_rows
+        self.state = SegmentState.GROWING
+        self.extra_fields = tuple(extra_fields)
+
+        self._pks: list[np.ndarray] = []
+        self._vectors: list[np.ndarray] = []
+        self._timestamps: list[np.ndarray] = []
+        self._extras: dict[str, list[np.ndarray]] = {f: [] for f in self.extra_fields}
+        self._num_rows = 0
+
+        # Materialized (concatenated) columns; invalidated on append.
+        self._mat: dict[str, np.ndarray] | None = None
+
+        # Deletes: pk -> delete timestamp.  The bitmap over row indices is
+        # derived lazily (and is what the scan kernels consume).
+        self._deleted: dict[Any, int] = {}
+
+        # Slice boundaries with a temporary index handle each (built by the
+        # query node once a slice is full).
+        self.slice_indexes: dict[int, Any] = {}
+
+        self._lock = threading.RLock()
+        self.checkpoint_pos: int = 0  # WAL position this segment has consumed up to
+
+    # -------------------------------------------------------------- writes
+    def append(
+        self,
+        pks: np.ndarray,
+        vectors: np.ndarray,
+        timestamps: np.ndarray,
+        extras: dict[str, np.ndarray] | None = None,
+    ) -> None:
+        with self._lock:
+            if self.state is not SegmentState.GROWING:
+                raise RuntimeError(f"segment {self.segment_id} is {self.state}, not growing")
+            if vectors.ndim != 2 or vectors.shape[1] != self.dim:
+                raise ValueError(f"expected (n,{self.dim}) vectors, got {vectors.shape}")
+            n = len(pks)
+            if not (len(vectors) == len(timestamps) == n):
+                raise ValueError("pks/vectors/timestamps length mismatch")
+            self._pks.append(np.asarray(pks))
+            self._vectors.append(np.asarray(vectors, dtype=np.float32))
+            self._timestamps.append(np.asarray(timestamps, dtype=np.int64))
+            for name in self.extra_fields:
+                src = (extras or {}).get(name)
+                if src is None:
+                    raise ValueError(f"missing extra field '{name}'")
+                self._extras[name].append(np.asarray(src))
+            self._num_rows += n
+            self._mat = None
+
+    def delete(self, pks: np.ndarray, ts: int) -> int:
+        """Mark primary keys deleted as of ``ts``.  Returns #marked."""
+        with self._lock:
+            existing = set(np.asarray(self.pks()).tolist())
+            hits = 0
+            for pk in np.asarray(pks).tolist():
+                if pk in existing and pk not in self._deleted:
+                    self._deleted[pk] = ts
+                    hits += 1
+            return hits
+
+    def seal(self) -> None:
+        with self._lock:
+            self.state = SegmentState.SEALED
+
+    # --------------------------------------------------------------- reads
+    def _materialize(self) -> dict[str, np.ndarray]:
+        with self._lock:
+            if self._mat is None:
+                cols: dict[str, np.ndarray] = {}
+                cols["pk"] = (
+                    np.concatenate(self._pks) if self._pks else np.empty(0, np.int64)
+                )
+                cols["vector"] = (
+                    np.concatenate(self._vectors)
+                    if self._vectors
+                    else np.empty((0, self.dim), np.float32)
+                )
+                cols["ts"] = (
+                    np.concatenate(self._timestamps)
+                    if self._timestamps
+                    else np.empty(0, np.int64)
+                )
+                for name in self.extra_fields:
+                    chunks = self._extras[name]
+                    cols[name] = (
+                        np.concatenate(chunks) if chunks else np.empty(0)
+                    )
+                self._mat = cols
+            return self._mat
+
+    @property
+    def num_rows(self) -> int:
+        return self._num_rows
+
+    def pks(self) -> np.ndarray:
+        return self._materialize()["pk"]
+
+    def vectors(self) -> np.ndarray:
+        return self._materialize()["vector"]
+
+    def timestamps(self) -> np.ndarray:
+        return self._materialize()["ts"]
+
+    def extra(self, name: str) -> np.ndarray:
+        return self._materialize()[name]
+
+    def delete_bitmap(self) -> np.ndarray:
+        """Boolean mask of rows currently deleted (any timestamp)."""
+        pks = self.pks()
+        if not self._deleted:
+            return np.zeros(len(pks), dtype=bool)
+        doomed = np.array(list(self._deleted.keys()))
+        return np.isin(pks, doomed)
+
+    def visible_mask(self, ts: int) -> np.ndarray:
+        """MVCC visibility at query timestamp ``ts``."""
+        cols = self._materialize()
+        mask = cols["ts"] <= ts
+        if self._deleted:
+            pks = cols["pk"]
+            del_ts = np.full(len(pks), np.iinfo(np.int64).max, dtype=np.int64)
+            lut = self._deleted
+            # vectorized map: only touch rows whose pk is deleted
+            doomed = np.isin(pks, np.array(list(lut.keys())))
+            for i in np.nonzero(doomed)[0]:
+                del_ts[i] = lut[pks[i]]
+            mask &= del_ts > ts
+        return mask
+
+    def min_ts(self) -> int:
+        ts = self.timestamps()
+        return int(ts.min()) if len(ts) else 0
+
+    def max_ts(self) -> int:
+        ts = self.timestamps()
+        return int(ts.max()) if len(ts) else 0
+
+    def stats(self) -> SegmentStats:
+        return SegmentStats(
+            num_rows=self.num_rows,
+            num_deleted=len(self._deleted),
+            state=self.state.value,
+            min_ts=self.min_ts(),
+            max_ts=self.max_ts(),
+        )
+
+    # -------------------------------------------------------------- slices
+    def full_slices(self) -> list[int]:
+        """Indices of completed slices (candidates for temporary indexes)."""
+        return list(range(self._num_rows // self.slice_rows))
+
+    def slice_bounds(self, slice_idx: int) -> tuple[int, int]:
+        lo = slice_idx * self.slice_rows
+        hi = min(lo + self.slice_rows, self._num_rows)
+        return lo, hi
+
+    def tail_rows(self) -> tuple[int, int]:
+        """Row range not covered by any full slice (always brute-force)."""
+        lo = (self._num_rows // self.slice_rows) * self.slice_rows
+        return lo, self._num_rows
+
+    # -------------------------------------------------- binlog (de)serialize
+    def to_binlog(self) -> bytes:
+        """Columnar serialization (the binlog format, paper §3.3)."""
+        cols = dict(self._materialize())
+        cols["__deleted_pks"] = np.array(list(self._deleted.keys()), dtype=cols["pk"].dtype if len(self._deleted) else np.int64)
+        cols["__deleted_ts"] = np.array(list(self._deleted.values()), dtype=np.int64)
+        buf = io.BytesIO()
+        np.savez_compressed(
+            buf,
+            __meta=np.array(
+                [self.segment_id, self.shard, self.dim, self.checkpoint_pos],
+                dtype=np.int64,
+            ),
+            **cols,
+        )
+        return buf.getvalue()
+
+    @classmethod
+    def from_binlog(
+        cls, collection: str, data: bytes, slice_rows: int = DEFAULT_SLICE_ROWS
+    ) -> "Segment":
+        with np.load(io.BytesIO(data), allow_pickle=False) as z:
+            meta = z["__meta"]
+            segment_id, shard, dim, ckpt = (int(x) for x in meta)
+            extra_names = tuple(
+                k
+                for k in z.files
+                if k not in ("__meta", "pk", "vector", "ts", "__deleted_pks", "__deleted_ts")
+            )
+            seg = cls(segment_id, collection, shard, dim, slice_rows, extra_names)
+            n = len(z["pk"])
+            if n:
+                extras = {k: z[k] for k in extra_names}
+                seg.append(z["pk"], z["vector"], z["ts"], extras)
+            seg.checkpoint_pos = ckpt
+            for pk, dts in zip(z["__deleted_pks"].tolist(), z["__deleted_ts"].tolist()):
+                seg._deleted[pk] = dts
+            seg.seal()
+            return seg
+
+    def deleted_fraction(self) -> float:
+        return len(self._deleted) / max(1, self.num_rows)
+
+
+def merge_segments(new_id: int, segments: list[Segment]) -> Segment:
+    """Compaction: merge small sealed segments into one, dropping rows whose
+    delete tombstone is already present (paper §3.1 'merges small segments')."""
+    if not segments:
+        raise ValueError("nothing to merge")
+    base = segments[0]
+    out = Segment(
+        new_id, base.collection, base.shard, base.dim, base.slice_rows, base.extra_fields
+    )
+    for seg in segments:
+        keep = ~seg.delete_bitmap()
+        if keep.any():
+            extras = {f: seg.extra(f)[keep] for f in seg.extra_fields}
+            out.append(seg.pks()[keep], seg.vectors()[keep], seg.timestamps()[keep], extras)
+    out.checkpoint_pos = max(s.checkpoint_pos for s in segments)
+    out.seal()
+    return out

@@ -1,0 +1,199 @@
+"""Time travel: checkpoint + WAL replay restore (paper §4.3).
+
+Each checkpoint stores the collection's *segment map* — routes, not data:
+sealed segment ids (their binlog objects are immutable in the object store)
+and the per-shard WAL replay positions.  Restoring to physical time T:
+
+  1. load the closest checkpoint at or before T,
+  2. load the mapped sealed segments from binlog (cheap: segments are
+     shared between checkpoints, nothing is copied),
+  3. replay the WAL from each shard's checkpointed position, applying only
+     entries with LSN <= T,
+  4. MVCC does the rest: visibility at T filters rows inserted later and
+     resurrects rows deleted later.
+
+``expire(before_ts)`` implements the paper's retention policy: drop WAL
+entries and checkpoints older than the expiration horizon.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+from .binlog import load_segment
+from .log import EntryType, LogBroker, dml_channel
+from .object_store import ObjectStore
+from .segment import Segment
+from .timestamp import physical_of
+
+
+def _ckpt_key(collection: str, ts: int) -> str:
+    return f"checkpoint/{collection}/{ts:020d}"
+
+
+@dataclass
+class Checkpoint:
+    collection: str
+    ts: int
+    sealed_segment_ids: list[int]
+    replay_positions: dict[str, int]  # channel -> position
+
+
+class TimeTravel:
+    def __init__(self, broker: LogBroker, store: ObjectStore):
+        self.broker = broker
+        self.store = store
+
+    # ----------------------------------------------------------- checkpoint
+    def checkpoint(
+        self,
+        collection: str,
+        ts: int,
+        sealed_segment_ids: list[int],
+        num_shards: int,
+        replay_positions: dict[str, int] | None = None,
+    ) -> Checkpoint:
+        if replay_positions is None:
+            replay_positions = {
+                dml_channel(collection, s): 0 for s in range(num_shards)
+            }
+        ckpt = Checkpoint(collection, ts, sorted(sealed_segment_ids), replay_positions)
+        self.store.put(
+            _ckpt_key(collection, ts),
+            json.dumps(
+                {
+                    "collection": ckpt.collection,
+                    "ts": ckpt.ts,
+                    "sealed_segment_ids": ckpt.sealed_segment_ids,
+                    "replay_positions": ckpt.replay_positions,
+                }
+            ).encode(),
+        )
+        return ckpt
+
+    def checkpoints(self, collection: str) -> list[Checkpoint]:
+        out = []
+        for m in self.store.list(f"checkpoint/{collection}/"):
+            d = json.loads(self.store.get(m.key).decode())
+            out.append(
+                Checkpoint(
+                    d["collection"], d["ts"], d["sealed_segment_ids"], d["replay_positions"]
+                )
+            )
+        return sorted(out, key=lambda c: c.ts)
+
+    def closest_before(self, collection: str, target_ts: int) -> Checkpoint | None:
+        best = None
+        for c in self.checkpoints(collection):
+            if c.ts <= target_ts:
+                best = c
+        return best
+
+    # -------------------------------------------------------------- restore
+    def restore(
+        self, collection: str, target_ts: int, num_shards: int, dim: int
+    ) -> "RestoredCollection":
+        ckpt = self.closest_before(collection, target_ts)
+        segments: list[Segment] = []
+        replay_from: dict[str, int] = {}
+        if ckpt is not None:
+            for sid in ckpt.sealed_segment_ids:
+                segments.append(load_segment(self.store, collection, sid))
+            replay_from = dict(ckpt.replay_positions)
+        for shard in range(num_shards):
+            replay_from.setdefault(dml_channel(collection, shard), 0)
+
+        # Replay WAL into a single reconstruction segment per shard.
+        recon: dict[int, Segment] = {}
+        deletes: list[tuple[np.ndarray, int]] = []
+        known_sealed = {s.segment_id for s in segments}
+        for channel, pos in replay_from.items():
+            shard = int(channel.rsplit("/", 1)[1])
+            for entry in self.broker.read(channel, pos):
+                if entry.ts > target_ts:
+                    break
+                if entry.type is EntryType.INSERT:
+                    p = entry.payload
+                    if p["segment_id"] in known_sealed:
+                        continue  # already materialized from binlog
+                    seg = recon.get(shard)
+                    if seg is None:
+                        seg = Segment(-1000 - shard, collection, shard, dim)
+                        recon[shard] = seg
+                    n = len(p["pk"])
+                    seg.append(p["pk"], p["vector"], np.full(n, entry.ts, np.int64))
+                elif entry.type is EntryType.DELETE:
+                    deletes.append((entry.payload["pk"], entry.ts))
+        segments.extend(recon.values())
+        for pks, ts in deletes:
+            for seg in segments:
+                seg.delete(pks, ts)
+        return RestoredCollection(collection, target_ts, segments)
+
+    # ------------------------------------------------------------ retention
+    def expire(self, collection: str, before_ts: int, num_shards: int) -> int:
+        dropped = 0
+        for shard in range(num_shards):
+            dropped += self.broker.truncate_before(dml_channel(collection, shard), before_ts)
+        for c in self.checkpoints(collection):
+            if c.ts < before_ts:
+                self.store.delete(_ckpt_key(collection, c.ts))
+        return dropped
+
+
+class RestoredCollection:
+    """A standalone, queryable snapshot of the collection at ``target_ts``."""
+
+    def __init__(self, name: str, ts: int, segments: list[Segment]):
+        self.name = name
+        self.ts = ts
+        self.segments = segments
+
+    def num_rows(self) -> int:
+        return int(sum(s.visible_mask(self.ts).sum() for s in self.segments))
+
+    def pks(self) -> np.ndarray:
+        parts = [s.pks()[s.visible_mask(self.ts)] for s in self.segments]
+        return np.sort(np.concatenate(parts)) if parts else np.empty(0, np.int64)
+
+    def search(self, queries: np.ndarray, k: int, metric_str: str = "l2"):
+        from ..kernels import ops
+
+        pools_s, pools_p = [], []
+        for seg in self.segments:
+            mask = seg.visible_mask(self.ts)
+            if not mask.any():
+                continue
+            s, i = ops.topk_scan(queries, seg.vectors(), k, metric=metric_str, valid=mask)
+            pks = seg.pks()
+            pools_s.append(s)
+            pools_p.append(np.where(i >= 0, pks[np.clip(i, 0, len(pks) - 1)], -1))
+        nq = len(queries)
+        fill = np.inf if metric_str == "l2" else -np.inf
+        out_s = np.full((nq, k), fill, np.float32)
+        out_p = np.full((nq, k), -1, np.int64)
+        if not pools_s:
+            return out_s, out_p
+        s = np.concatenate(pools_s, axis=1)
+        p = np.concatenate(pools_p, axis=1)
+        order = np.argsort(s if metric_str == "l2" else -s, axis=1, kind="stable")
+        for r in range(nq):
+            seen, slot = set(), 0
+            for j in order[r]:
+                pk = int(p[r, j])
+                if pk < 0 or pk in seen or not np.isfinite(s[r, j]):
+                    continue
+                seen.add(pk)
+                out_s[r, slot] = s[r, j]
+                out_p[r, slot] = pk
+                slot += 1
+                if slot >= k:
+                    break
+        return out_s, out_p
+
+
+def physical_time_of(ts: int) -> int:
+    return physical_of(ts)

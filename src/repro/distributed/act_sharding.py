@@ -1,0 +1,108 @@
+"""Activation-sharding constraints (logical axis rules).
+
+GSPMD infers shardings by propagation, but ``lax.scan`` carries initialized
+with ``jnp.zeros`` start out replicated — and a replicated carry forces the
+whole loop body to run unsharded (observed: the SSM block computing on the
+full 256-row global batch per device).  The industry-standard fix (MaxText
+et al.) is explicit ``with_sharding_constraint`` on the carries and other
+propagation boundaries.
+
+The model code stays mesh-agnostic: it calls ``constrain(x, "batch", ...)``
+with *logical* axis names; the launcher installs a policy mapping logical
+axes to mesh axes before building a cell.  With no policy installed (unit
+tests, single device) the calls are no-ops.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _policy():
+    return getattr(_STATE, "policy", None)
+
+
+def set_policy(mesh: Mesh, batch_axes: tuple[str, ...] | None,
+               moe_impl: str = "shard_map") -> None:
+    _STATE.policy = {"mesh": mesh, "batch": batch_axes, "model": ("model",),
+                     "moe_impl": moe_impl}
+
+
+def clear_policy() -> None:
+    _STATE.policy = None
+
+
+@contextmanager
+def policy(mesh: Mesh, batch_axes: tuple[str, ...] | None,
+           moe_impl: str = "shard_map"):
+    set_policy(mesh, batch_axes, moe_impl)
+    try:
+        yield
+    finally:
+        clear_policy()
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    total = 1
+    for a in axes:
+        total *= mesh.shape.get(a, 1)
+    return total
+
+
+def constrain(x, *logical: str | None):
+    """Apply a sharding constraint by logical dims ("batch"/"model"/None).
+
+    Dims that do not divide the mapped mesh axes fall back to None, so this
+    is always safe to call.  Trailing dims default to None.
+    """
+    pol = _policy()
+    if pol is None or x is None:
+        return x
+    mesh = pol["mesh"]
+    spec = []
+    for i, name in enumerate(logical):
+        if name is None or i >= x.ndim:
+            spec.append(None)
+            continue
+        axes = pol.get(name)
+        if not axes:
+            spec.append(None)
+            continue
+        axes_t = tuple(axes) if not isinstance(axes, str) else (axes,)
+        if x.shape[i] % _axes_size(mesh, axes_t) == 0:
+            spec.append(axes_t if len(axes_t) > 1 else axes_t[0])
+        else:
+            spec.append(None)
+    while len(spec) < x.ndim:
+        spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_tree_batch(tree, batch_dim_by_rank: dict[int, int] | None = None):
+    """Constrain every leaf's batch dim (default dim 0)."""
+    pol = _policy()
+    if pol is None:
+        return tree
+
+    def leaf(x):
+        dims = [None] * x.ndim
+        bd = 0 if batch_dim_by_rank is None else batch_dim_by_rank.get(x.ndim, 0)
+        if x.ndim:
+            dims[bd] = "batch"
+        return constrain(x, *dims)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def model_axis_size() -> int:
+    pol = _policy()
+    if pol is None:
+        return 1
+    mesh = pol["mesh"]
+    return mesh.shape.get("model", 1)

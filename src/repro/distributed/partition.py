@@ -1,0 +1,182 @@
+"""Partitioning rules: param/batch/cache PartitionSpecs for any mesh.
+
+Scheme (DESIGN.md §5):
+
+* **Training** — batch over (pod, data); params 2-D sharded: FSDP (ZeRO-3)
+  over ``data`` on the input-feature dim + tensor-parallel over ``model``
+  on the output-feature/head/expert dim; optimizer state like params;
+  gradients all-reduce over ``pod`` (inter-pod traffic = one all-reduce).
+* **Serving** — weights TP over ``model`` with FSDP off (replicated over
+  ``data``), requests sharded over data; decode KV caches sharded on the
+  *sequence* dim over ``model`` (flash-decode merges partial softmax
+  stats), batch over data when divisible.
+* Dims that do not divide the axis size stay unsharded — the rules check
+  divisibility explicitly, so every assigned architecture lowers cleanly
+  (e.g. 40-head MiniCPM3 replicates attention heads but still TPs its FFN).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(dim: int, mesh: Mesh, axis: str | tuple[str, ...] | None) -> str | tuple | None:
+    """Return the axis if ``dim`` divides its total size, else None."""
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else axis
+    total = int(np.prod([axis_size(mesh, a) for a in names]))
+    if total <= 1:
+        return None
+    return axis if dim % total == 0 else None
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    axes = batch_axes(mesh)
+    full = _div(batch, mesh, axes)
+    if full is not None:
+        return P(axes)
+    one = _div(batch, mesh, "data")
+    return P(one) if one else P(None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules.  Matched on the param path (tuple of keys).  ``fsdp``
+# toggles the data-axis dimension sharding (on for training, off for
+# serving).  Stacked layer params get a leading None for the periods dim.
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(
+    cfg: ModelConfig, mesh: Mesh, path: tuple[str, ...], shape: tuple[int, ...],
+    fsdp: bool,
+) -> P:
+    d_axis = "data" if fsdp else None
+    name = path[-1]
+    in_layers = "layers" in path
+
+    def spec2(d0: int, d1: int, a0, a1) -> P:
+        s0 = _div(d0, mesh, a0)
+        s1 = _div(d1, mesh, a1)
+        base = (s0, s1)
+        return P(None, *base) if in_layers else P(*base)
+
+    def spec3(d0, d1, d2, a0, a1, a2) -> P:
+        s = (_div(d0, mesh, a0), _div(d1, mesh, a1), _div(d2, mesh, a2))
+        return P(None, *s) if in_layers else P(*s)
+
+    body = shape[1:] if in_layers else shape  # strip stacked periods dim
+
+    # ---- top level ----
+    # Embedding / head: vocab on `model` when divisible; NEVER shard the
+    # d_model contraction dim on `data` — GSPMD then emits unsharded partial
+    # logits ([B,S,V] full per device — observed 196 GiB in the dry-run).
+    if name == "embed":
+        return P(_div(shape[0], mesh, "model"), None)
+    if name == "lm_head":
+        return P(None, _div(shape[1], mesh, "model"))
+    if name == "vision_proj":
+        return P(None, _div(shape[1], mesh, "model"))
+    if name in ("ln_final",):
+        return P(None)
+
+    # ---- per-layer 1-D params (norms, biases, scalars) ----
+    if len(body) == 1:
+        if name in ("b_q", "b_k", "b_v"):
+            return P(None, _div(body[0], mesh, "model"))
+        return P(None, None) if in_layers else P(None)
+
+    # ---- attention ----
+    if name in ("w_q", "w_k", "w_v", "w_dq", "w_uq", "w_dkv", "w_ukv",
+                "w_gate", "w_up", "w_in"):
+        if len(body) == 3:  # MoE expert weights [E, D, F]
+            return spec3(body[0], body[1], body[2], "model", d_axis, None)
+        return spec2(body[0], body[1], d_axis, "model")
+    if name in ("w_o", "w_down", "w_out"):
+        if len(body) == 3:  # MoE [E, F, D]
+            return spec3(body[0], body[1], body[2], "model", d_axis, None)
+        return spec2(body[0], body[1], "model", d_axis)
+    if name == "router":
+        return spec2(body[0], body[1], d_axis, None)
+    if name == "conv_w":
+        # tiny depthwise taps: replicate — sharding the channel dim forces
+        # an activation reshard (B:data -> C:model) per SSM layer.
+        return P(None, None, None) if in_layers else P(None, None)
+
+    # default: replicate
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Params, fsdp: bool) -> Params:
+    def rule(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        return _param_rule(cfg, mesh, keys, leaf.shape, fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Params, fsdp: bool):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(cfg, mesh, params_shape, fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode / prefill cache rules
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Params, batch: int) -> Params:
+    """KV caches: [periods, B, S, ...] -> P(None, batch?, 'model' on S, ...).
+
+    SSM states have no sequence dim; their head dim takes ``model`` when the
+    batch cannot use ``data`` (long-context batch=1 case).
+    """
+    b_axes = batch_axes(mesh)
+    b_spec = _div(batch, mesh, b_axes) or _div(batch, mesh, "data")
+
+    def rule(path, leaf):
+        keys = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        name = keys[-1]
+        shp = leaf.shape
+        if name == "length":
+            return P()
+        if name in ("k", "v"):  # [periods, B, S, KVH, hd]
+            return P(None, b_spec, _div(shp[2], mesh, "model"), None, None)
+        if name == "c":  # MLA [periods, B, S, r+rope]
+            return P(None, b_spec, _div(shp[2], mesh, "model"), None)
+        if name == "h":  # SSM [periods, B, H, hd, N]
+            h_spec = None if b_spec else _div(shp[2], mesh, "model")
+            return P(None, b_spec, h_spec, None, None)
+        if name == "conv":  # [periods, B, conv-1, C]
+            return P(None, b_spec, None, _div(shp[3], mesh, "model"))
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def tree_shardings(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

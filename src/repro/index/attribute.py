@@ -1,0 +1,128 @@
+"""Numeric/label attribute indexes (paper Table 1: B-Tree, Sorted List).
+
+Used by attribute filtering: expressions like ``price < 100 AND label ==
+'book'`` are resolved to a row bitmap which the vector kernels consume as a
+validity mask.  A sorted-list index gives O(log n) range resolution; label
+(categorical) fields use posting bitmaps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class SortedListIndex:
+    """Sorted projection of a numeric column with binary-search ranges."""
+
+    def __init__(self, values: np.ndarray):
+        self.n = len(values)
+        self.order = np.argsort(values, kind="stable")
+        self.sorted_vals = np.asarray(values)[self.order]
+
+    def range_mask(self, lo=None, hi=None, lo_open=False, hi_open=False) -> np.ndarray:
+        left = 0
+        right = self.n
+        if lo is not None:
+            left = np.searchsorted(self.sorted_vals, lo, side="right" if lo_open else "left")
+        if hi is not None:
+            right = np.searchsorted(self.sorted_vals, hi, side="left" if hi_open else "right")
+        mask = np.zeros(self.n, dtype=bool)
+        if right > left:
+            mask[self.order[left:right]] = True
+        return mask
+
+
+class LabelIndex:
+    """Posting bitmaps per distinct label value."""
+
+    def __init__(self, values: np.ndarray):
+        self.n = len(values)
+        self.postings: dict[object, np.ndarray] = {}
+        vals = np.asarray(values)
+        for v in np.unique(vals):
+            self.postings[v.item() if hasattr(v, "item") else v] = vals == v
+
+    def eq_mask(self, value) -> np.ndarray:
+        return self.postings.get(value, np.zeros(self.n, dtype=bool)).copy()
+
+    def in_mask(self, values) -> np.ndarray:
+        mask = np.zeros(self.n, dtype=bool)
+        for v in values:
+            mask |= self.postings.get(v, False)
+        return mask
+
+
+# ---------------------------------------------------------------------------
+# A tiny filter-expression evaluator: supports comparisons on numeric fields,
+# equality on labels, AND/OR/NOT.  Grammar kept deliberately small (Manu's
+# filtering surface), parsed with Python's ast over a restricted node set.
+# ---------------------------------------------------------------------------
+
+import ast
+
+
+class FilterExpr:
+    """Compile ``"price < 100 and label == 'book'"`` into a mask evaluator."""
+
+    _CMP = {
+        ast.Lt: lambda a, b: a < b,
+        ast.LtE: lambda a, b: a <= b,
+        ast.Gt: lambda a, b: a > b,
+        ast.GtE: lambda a, b: a >= b,
+        ast.Eq: lambda a, b: a == b,
+        ast.NotEq: lambda a, b: a != b,
+    }
+
+    def __init__(self, expr: str):
+        self.expr = expr
+        self.tree = ast.parse(expr, mode="eval").body
+        self._validate(self.tree)
+
+    def _validate(self, node) -> None:
+        ok = (
+            ast.BoolOp, ast.And, ast.Or, ast.UnaryOp, ast.Not, ast.Compare,
+            ast.Name, ast.Load, ast.Constant, ast.Lt, ast.LtE, ast.Gt,
+            ast.GtE, ast.Eq, ast.NotEq,
+        )
+        for child in ast.walk(node):
+            if not isinstance(child, ok):
+                raise ValueError(f"unsupported filter syntax: {ast.dump(child)}")
+
+    def evaluate(self, columns: dict[str, np.ndarray], n: int) -> np.ndarray:
+        def ev(node) -> np.ndarray:
+            if isinstance(node, ast.BoolOp):
+                masks = [ev(v) for v in node.values]
+                out = masks[0]
+                for m in masks[1:]:
+                    out = out & m if isinstance(node.op, ast.And) else out | m
+                return out
+            if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+                return ~ev(node.operand)
+            if isinstance(node, ast.Compare):
+                if len(node.ops) != 1:
+                    raise ValueError("chained comparisons unsupported")
+                left, right = node.left, node.comparators[0]
+                name_node, const_node, flip = (
+                    (left, right, False)
+                    if isinstance(left, ast.Name)
+                    else (right, left, True)
+                )
+                if not isinstance(name_node, ast.Name) or not isinstance(const_node, ast.Constant):
+                    raise ValueError("comparison must be field <op> constant")
+                col = columns.get(name_node.id)
+                if col is None:
+                    raise KeyError(f"unknown filter field '{name_node.id}'")
+                op = type(node.ops[0])
+                fn = self._CMP[op]
+                if flip:  # const <op> field  ->  field <flipped-op> const
+                    flipped = {ast.Lt: ast.Gt, ast.LtE: ast.GtE,
+                               ast.Gt: ast.Lt, ast.GtE: ast.LtE,
+                               ast.Eq: ast.Eq, ast.NotEq: ast.NotEq}[op]
+                    fn = self._CMP[flipped]
+                return np.asarray(fn(col, const_node.value))
+            raise ValueError(f"unsupported node {node!r}")
+
+        mask = ev(self.tree)
+        if mask.shape != (n,):
+            mask = np.broadcast_to(mask, (n,)).copy()
+        return mask

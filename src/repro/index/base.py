@@ -1,0 +1,116 @@
+"""Vector index interface (paper Table 1) and shared serialization.
+
+Indexes are *modular* (paper §7 "Modularized algorithms"): a coarse
+partitioner (IVF lists / k-means buckets / graph), an optional compressor
+(PQ / SQ), and a scanner (the Pallas kernel layer).  Every index implements
+``build / search / save / load`` and reports build parameters so the
+auto-tuner (``autotune.py``) can explore the configuration space.
+
+Search contract: ``search(queries, k, valid=None)`` returns
+``(scores [nq,k], local_idx [nq,k])`` where local_idx indexes into the rows
+the index was built on; -1 marks empty slots.  Scores are L2 distances
+(ascending) or IP similarities (descending) per the index's metric.
+"""
+
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from ..core.collection import Metric
+
+
+@dataclass
+class IndexSpec:
+    kind: str
+    metric: Metric = Metric.L2
+    params: dict[str, Any] | None = None
+
+    def normalized_params(self) -> dict[str, Any]:
+        return dict(self.params or {})
+
+
+class VectorIndex:
+    KIND = "base"
+
+    def __init__(self, metric: Metric = Metric.L2, **params):
+        self.metric = metric
+        self.params = params
+        self.num_rows = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def build(self, vectors: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def search(
+        self, queries: np.ndarray, k: int, valid: np.ndarray | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    # -- (de)serialization to the object store ------------------------------
+    def _state(self) -> dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def _load_state(self, state: dict[str, np.ndarray]) -> None:
+        raise NotImplementedError
+
+    def save(self) -> bytes:
+        import json
+
+        buf = io.BytesIO()
+        meta = {
+            "kind": np.bytes_(self.KIND.encode()),
+            "metric": np.bytes_(self.metric.value.encode()),
+            "num_rows": np.int64(self.num_rows),
+            "params_json": np.bytes_(json.dumps(self.params, default=str).encode()),
+        }
+        np.savez_compressed(buf, **meta, **self._state())
+        return buf.getvalue()
+
+    @classmethod
+    def load(cls, data: bytes) -> "VectorIndex":
+        import json
+
+        from .registry import create_index  # local import to avoid cycle
+
+        _META = ("kind", "metric", "num_rows", "params_json")
+        with np.load(io.BytesIO(data), allow_pickle=False) as z:
+            kind = bytes(z["kind"]).decode()
+            metric = Metric(bytes(z["metric"]).decode())
+            params = json.loads(bytes(z["params_json"]).decode()) if "params_json" in z.files else {}
+            idx = create_index(IndexSpec(kind=kind, metric=metric, params=params))
+            idx.num_rows = int(z["num_rows"])
+            state = {k: z[k] for k in z.files if k not in _META}
+            idx._load_state(state)
+            return idx
+
+    # -- misc ---------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        return sum(v.nbytes for v in self._state().values())
+
+    def metric_is_descending(self) -> bool:
+        return self.metric in (Metric.IP, Metric.COSINE)
+
+
+def normalize_if_cosine(metric: Metric, x: np.ndarray) -> np.ndarray:
+    """Cosine = IP over unit vectors; normalize once at build/query time."""
+    if metric is Metric.COSINE:
+        norms = np.linalg.norm(x, axis=1, keepdims=True)
+        return x / np.maximum(norms, 1e-12)
+    return x
+
+
+def scan_metric(metric: Metric) -> str:
+    return "l2" if metric is Metric.L2 else "ip"
+
+
+def worst_score(metric: Metric) -> float:
+    return np.inf if metric is Metric.L2 else -np.inf
+
+
+def better(metric: Metric, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Elementwise 'a is better than b' under the metric's ordering."""
+    return a < b if metric is Metric.L2 else a > b

@@ -1,0 +1,193 @@
+"""Bucketed hierarchical-k-means index — the paper's SSD design (§4.4),
+adapted to the TPU memory hierarchy.
+
+The paper (winner of NeurIPS'21 big-ANN track 2, SPANN-like):
+
+  * hierarchical k-means packs vectors into buckets sized just under one
+    SSD read unit (4 KB), each bucket 4 KB-aligned on disk;
+  * bucket *centers* stay in DRAM, organized by a fast in-memory index;
+  * queries: (1) search centers in DRAM, (2) fetch the chosen buckets from
+    SSD, (3) scan them — with SQ compression to cut fetched bytes;
+  * multi-assignment: hierarchical k-means runs ``r`` times so border
+    vectors are replicated into several buckets (the LSH multi-table
+    trick), trading space for recall.
+
+TPU translation (DESIGN.md §3): HBM plays the role of SSD and VMEM the role
+of DRAM-page cache.  Buckets are sized to a VMEM tile quantum — a multiple
+of the 128-row MXU tile — so every bucket fetch is one aligned HBM→VMEM
+stream with zero read amplification.  Centers live in an in-"DRAM" index
+(FLAT or IVF over centers).  Bucket payloads are SQ-compressed; distances
+are computed on codes by the fused ``sq_l2_topk`` kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.collection import Metric
+from ..kernels import ops
+from .base import VectorIndex, normalize_if_cosine, scan_metric, worst_score
+from .kmeans import balanced_kmeans
+
+#: Rows per bucket quantum — the "4 KB page" analogue: one 128-row MXU tile.
+BUCKET_ROW_QUANTUM = 128
+
+
+class BucketIndex(VectorIndex):
+    KIND = "bucket"
+
+    def __init__(
+        self,
+        metric: Metric = Metric.L2,
+        target_bucket_rows: int = 96,
+        replicas: int = 2,
+        nprobe_buckets: int = 8,
+        compress: bool = True,
+        **params,
+    ):
+        super().__init__(
+            metric,
+            target_bucket_rows=target_bucket_rows,
+            replicas=replicas,
+            nprobe_buckets=nprobe_buckets,
+            compress=compress,
+            **params,
+        )
+        self.target_bucket_rows = target_bucket_rows
+        self.replicas = replicas
+        self.nprobe_buckets = nprobe_buckets
+        self.compress = compress
+
+        self.centers: np.ndarray | None = None  # [B, d] in-"DRAM"
+        self.bucket_offsets: np.ndarray | None = None  # [B+1]
+        self.bucket_rows: np.ndarray | None = None  # [n_slots] -> original row id
+        self.storage: np.ndarray | None = None  # f32 [n_slots, d] or SQ codes
+        self.vmin: np.ndarray | None = None
+        self.vmax: np.ndarray | None = None
+
+    def build(self, vectors: np.ndarray) -> None:
+        x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
+        n, d = x.shape
+        self.num_rows = n
+        if n == 0:
+            self.centers = np.zeros((0, d), np.float32)
+            self.bucket_offsets = np.zeros(1, np.int64)
+            self.bucket_rows = np.zeros(0, np.int64)
+            self.storage = np.zeros((0, d), np.float32)
+            return
+
+        all_centers: list[np.ndarray] = []
+        slot_rows: list[np.ndarray] = []
+        offsets = [0]
+        # Multi-assignment: r independent hierarchical clusterings; border
+        # vectors land in different buckets each run (paper's LSH trick).
+        max_rows = BUCKET_ROW_QUANTUM
+        for rep in range(self.replicas):
+            centers, assign = balanced_kmeans(
+                x,
+                target_cluster_size=min(self.target_bucket_rows, max_rows),
+                max_cluster_size=max_rows,
+                seed=1000 + rep,
+            )
+            for b in range(len(centers)):
+                rows = np.nonzero(assign == b)[0]
+                if len(rows) == 0:
+                    continue
+                all_centers.append(centers[b])
+                slot_rows.append(rows)
+                offsets.append(offsets[-1] + len(rows))
+
+        self.centers = np.stack(all_centers).astype(np.float32)
+        self.bucket_offsets = np.asarray(offsets, np.int64)
+        self.bucket_rows = np.concatenate(slot_rows).astype(np.int64)
+        payload = x[self.bucket_rows]
+        if self.compress:
+            self.vmin = payload.min(axis=0)
+            self.vmax = payload.max(axis=0)
+            self.storage = ops.sq_encode(payload, self.vmin, self.vmax)
+        else:
+            self.storage = payload
+
+    def _scan_slots(self, q, lo, hi, k, valid_slots):
+        if self.compress:
+            return ops.sq_topk_scan(
+                q, self.storage[lo:hi], self.vmin, self.vmax, k,
+                metric=scan_metric(self.metric), valid=valid_slots,
+            )
+        return ops.topk_scan(
+            q, self.storage[lo:hi], k, metric=scan_metric(self.metric), valid=valid_slots
+        )
+
+    def search(self, queries, k, valid=None):
+        q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
+        nq = len(q)
+        out_s = np.full((nq, k), worst_score(self.metric), np.float32)
+        out_i = np.full((nq, k), -1, np.int64)
+        if self.num_rows == 0 or len(self.centers) == 0:
+            return out_s, out_i
+        nprobe = min(int(self.params.get("nprobe_buckets", self.nprobe_buckets)),
+                     len(self.centers))
+        # Stage 1: center search in-"DRAM".
+        _cs, probes = ops.topk_scan(
+            q, self.centers, nprobe, metric=scan_metric(self.metric)
+        )
+        valid_slots_all = None
+        if valid is not None:
+            valid_slots_all = np.asarray(valid)[self.bucket_rows]
+
+        # Stage 2: stream chosen buckets from "SSD"(HBM) and scan.
+        for r in range(nq):
+            cand_s: list[np.ndarray] = []
+            cand_i: list[np.ndarray] = []
+            for b in probes[r]:
+                if b < 0:
+                    continue
+                lo, hi = int(self.bucket_offsets[b]), int(self.bucket_offsets[b + 1])
+                if hi <= lo:
+                    continue
+                vs = None if valid_slots_all is None else valid_slots_all[lo:hi]
+                s, i = self._scan_slots(q[r : r + 1], lo, hi, min(k, hi - lo), vs)
+                gi = np.where(i >= 0, self.bucket_rows[np.clip(i + lo, 0, len(self.bucket_rows) - 1)], -1)
+                cand_s.append(s)
+                cand_i.append(gi)
+            if not cand_s:
+                continue
+            s = np.concatenate(cand_s, axis=1)[0]
+            i = np.concatenate(cand_i, axis=1)[0]
+            # Dedup multi-assigned rows (keep best), as the proxy does.
+            order = np.argsort(s if self.metric is Metric.L2 else -s, kind="stable")
+            seen: set[int] = set()
+            slot = 0
+            for j in order:
+                if i[j] < 0 or int(i[j]) in seen:
+                    continue
+                seen.add(int(i[j]))
+                out_s[r, slot] = s[j]
+                out_i[r, slot] = i[j]
+                slot += 1
+                if slot >= k:
+                    break
+        return out_s, out_i
+
+    def _state(self):
+        state = {
+            "centers": self.centers,
+            "bucket_offsets": self.bucket_offsets,
+            "bucket_rows": self.bucket_rows,
+            "storage": self.storage,
+            "compress": np.int64(1 if self.compress else 0),
+        }
+        if self.compress:
+            state["vmin"] = self.vmin
+            state["vmax"] = self.vmax
+        return state
+
+    def _load_state(self, state):
+        self.centers = state["centers"]
+        self.bucket_offsets = state["bucket_offsets"]
+        self.bucket_rows = state["bucket_rows"]
+        self.storage = state["storage"]
+        self.compress = bool(int(state["compress"]))
+        if self.compress:
+            self.vmin, self.vmax = state["vmin"], state["vmax"]
+        self.num_rows = int(self.bucket_rows.max()) + 1 if len(self.bucket_rows) else 0

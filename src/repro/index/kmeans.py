@@ -1,0 +1,118 @@
+"""Mini-batch / Lloyd k-means on top of the ``kmeans_assign`` kernel.
+
+Used by: IVF coarse quantizer, PQ codebook training, and the bucket index's
+hierarchical clustering.  k-means++-style seeding (D^2 sampling) for quality,
+empty-cluster re-seeding, early stop on assignment stability.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels import ops
+
+
+def kmeanspp_seed(
+    x: np.ndarray, k: int, rng: np.random.Generator, sample_cap: int = 4096
+) -> np.ndarray:
+    """D^2-weighted seeding on a subsample (full k-means++ is O(nk))."""
+    n = len(x)
+    if n > sample_cap:
+        x = x[rng.choice(n, sample_cap, replace=False)]
+        n = sample_cap
+    centroids = np.empty((k, x.shape[1]), np.float32)
+    centroids[0] = x[rng.integers(n)]
+    d2 = np.sum((x - centroids[0]) ** 2, axis=1)
+    for i in range(1, k):
+        probs = d2 / max(d2.sum(), 1e-12)
+        centroids[i] = x[rng.choice(n, p=probs)]
+        d2 = np.minimum(d2, np.sum((x - centroids[i]) ** 2, axis=1))
+    return centroids
+
+
+def kmeans(
+    x: np.ndarray,
+    k: int,
+    max_iters: int = 25,
+    seed: int = 0,
+    tol: float = 1e-4,
+    sample_cap: int = 100_000,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Lloyd iterations; returns (centroids [k,d], assignments [n]).
+
+    Training runs on a subsample (paper §4.2: 'sampling a subset of the
+    collection for the trials'); the final assignment covers all rows.
+    """
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    if n == 0:
+        raise ValueError("kmeans on empty data")
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+
+    train = x if n <= sample_cap else x[rng.choice(n, sample_cap, replace=False)]
+    centroids = kmeanspp_seed(train, k, rng)
+
+    prev_inertia = np.inf
+    for _ in range(max_iters):
+        assign, d2 = ops.kmeans_assign(train, centroids)
+        inertia = float(d2.sum())
+        # M-step via bincount (vectorized mean per cluster)
+        counts = np.bincount(assign, minlength=k).astype(np.float32)
+        sums = np.zeros((k, x.shape[1]), np.float32)
+        np.add.at(sums, assign, train)
+        nonempty = counts > 0
+        centroids[nonempty] = sums[nonempty] / counts[nonempty, None]
+        # Re-seed empty clusters from the farthest points
+        n_empty = int((~nonempty).sum())
+        if n_empty:
+            far = np.argsort(-d2)[:n_empty]
+            centroids[~nonempty] = train[far]
+        if prev_inertia - inertia <= tol * max(prev_inertia, 1e-12):
+            break
+        prev_inertia = inertia
+
+    assign_full, _ = ops.kmeans_assign(x, centroids)
+    return centroids.astype(np.float32), assign_full
+
+
+def balanced_kmeans(
+    x: np.ndarray,
+    target_cluster_size: int,
+    max_cluster_size: int,
+    seed: int = 0,
+    max_depth: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Hierarchical k-means with bounded cluster sizes (bucket index, §4.4).
+
+    Recursively splits clusters larger than ``max_cluster_size`` so every
+    final bucket fits the paper's 4KB-page analogue (a VMEM tile quantum).
+    Returns (centroids [B,d], assignments [n] -> bucket id).
+    """
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    k0 = max(1, int(round(n / max(target_cluster_size, 1))))
+    centroids, assign = kmeans(x, k0, seed=seed)
+
+    final_centroids: list[np.ndarray] = []
+    final_assign = np.full(n, -1, np.int64)
+
+    stack: list[tuple[np.ndarray, int]] = []  # (row indices, depth)
+    for c in range(len(centroids)):
+        stack.append((np.nonzero(assign == c)[0], 0))
+
+    while stack:
+        rows, depth = stack.pop()
+        if len(rows) == 0:
+            continue
+        if len(rows) <= max_cluster_size or depth >= max_depth or len(rows) <= 1:
+            bucket_id = len(final_centroids)
+            final_centroids.append(x[rows].mean(axis=0))
+            final_assign[rows] = bucket_id
+            continue
+        sub_k = max(2, int(np.ceil(len(rows) / target_cluster_size)))
+        sub_c, sub_a = kmeans(x[rows], sub_k, seed=seed + depth + len(rows))
+        for c in range(len(sub_c)):
+            stack.append((rows[sub_a == c], depth + 1))
+
+    return np.stack(final_centroids).astype(np.float32), final_assign

@@ -1,0 +1,152 @@
+"""Product quantization (PQ) and optimized PQ (OPQ) indexes.
+
+PQ splits each d-dim vector into ``m`` sub-vectors quantized against
+per-subspace codebooks of ``ksub`` centroids; search computes per-query
+lookup tables and scans codes with the ADC Pallas kernel.  OPQ learns an
+orthogonal rotation R minimizing quantization error before PQ-encoding
+(alternating R via SVD / codebooks via k-means, Ge et al. 2013).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.collection import Metric
+from ..kernels import ops
+from .base import VectorIndex, normalize_if_cosine
+from .kmeans import kmeans
+
+
+def train_pq_codebooks(
+    x: np.ndarray, m: int, ksub: int, seed: int = 0, iters: int = 15
+) -> np.ndarray:
+    n, d = x.shape
+    if d % m != 0:
+        raise ValueError(f"dim {d} not divisible by m={m}")
+    dsub = d // m
+    codebooks = np.empty((m, ksub, dsub), np.float32)
+    for j in range(m):
+        sub = x[:, j * dsub : (j + 1) * dsub]
+        codebooks[j], _ = kmeans(sub, ksub, max_iters=iters, seed=seed + j)
+    return codebooks
+
+
+def pq_encode(x: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
+    m, ksub, dsub = codebooks.shape
+    codes = np.empty((len(x), m), np.int32)
+    for j in range(m):
+        sub = x[:, j * dsub : (j + 1) * dsub]
+        assign, _ = ops.kmeans_assign(sub, codebooks[j])
+        codes[:, j] = assign
+    return codes
+
+
+def pq_decode(codes: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
+    m, ksub, dsub = codebooks.shape
+    out = np.empty((len(codes), m * dsub), np.float32)
+    for j in range(m):
+        out[:, j * dsub : (j + 1) * dsub] = codebooks[j][codes[:, j]]
+    return out
+
+
+def adc_tables(queries: np.ndarray, codebooks: np.ndarray, metric: Metric) -> np.ndarray:
+    """Per-query ADC lookup tables [nq, m, ksub]."""
+    m, ksub, dsub = codebooks.shape
+    nq = len(queries)
+    luts = np.empty((nq, m, ksub), np.float32)
+    for j in range(m):
+        qs = queries[:, j * dsub : (j + 1) * dsub]  # [nq, dsub]
+        cb = codebooks[j]  # [ksub, dsub]
+        if metric is Metric.L2:
+            luts[:, j, :] = (
+                np.sum(qs * qs, axis=1, keepdims=True)
+                - 2.0 * qs @ cb.T
+                + np.sum(cb * cb, axis=1)[None, :]
+            )
+        else:  # IP / cosine: ADC accumulates NEGATED similarity (min-scan)
+            luts[:, j, :] = -(qs @ cb.T)
+    return luts
+
+
+class PQIndex(VectorIndex):
+    KIND = "pq"
+
+    def __init__(self, metric: Metric = Metric.L2, m: int = 8, ksub: int = 256, **params):
+        super().__init__(metric, m=m, ksub=ksub, **params)
+        self.m, self.ksub = m, ksub
+        self.codebooks: np.ndarray | None = None
+        self.codes: np.ndarray | None = None
+
+    def build(self, vectors: np.ndarray) -> None:
+        x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
+        self.codebooks = train_pq_codebooks(x, self.m, self.ksub)
+        self.codes = pq_encode(x, self.codebooks)
+        self.num_rows = len(x)
+
+    def search(self, queries, k, valid=None):
+        q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
+        luts = adc_tables(q, self.codebooks, self.metric)
+        vals, idx = ops.pq_adc_topk(luts, self.codes, k, valid=valid)
+        if self.metric is not Metric.L2:
+            vals = -vals  # back to similarity scale
+        return vals, idx
+
+    def _state(self):
+        return {"codebooks": self.codebooks, "codes": self.codes.astype(np.int32)}
+
+    def _load_state(self, state):
+        self.codebooks = state["codebooks"]
+        self.codes = state["codes"]
+        self.m, self.ksub = self.codebooks.shape[0], self.codebooks.shape[1]
+        self.num_rows = len(self.codes)
+
+
+def train_opq_rotation(
+    x: np.ndarray, m: int, ksub: int, iters: int = 5, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Alternating optimization of rotation R and PQ codebooks (OPQ)."""
+    d = x.shape[1]
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((d, d)).astype(np.float32)
+    r, _ = np.linalg.qr(a)
+    codebooks = None
+    for _ in range(iters):
+        xr = x @ r
+        codebooks = train_pq_codebooks(xr, m, ksub, seed=seed, iters=8)
+        recon = pq_decode(pq_encode(xr, codebooks), codebooks)
+        # Procrustes: R = argmin |xR - recon|  =>  SVD of x^T recon
+        u, _s, vt = np.linalg.svd(x.T @ recon, full_matrices=False)
+        r = (u @ vt).astype(np.float32)
+    return r, codebooks
+
+
+class OPQIndex(PQIndex):
+    KIND = "opq"
+
+    def __init__(self, metric: Metric = Metric.L2, m: int = 8, ksub: int = 256, **params):
+        super().__init__(metric, m=m, ksub=ksub, **params)
+        self.rotation: np.ndarray | None = None
+
+    def build(self, vectors: np.ndarray) -> None:
+        x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
+        self.rotation, self.codebooks = train_opq_rotation(x, self.m, self.ksub)
+        self.codes = pq_encode(x @ self.rotation, self.codebooks)
+        self.num_rows = len(x)
+
+    def search(self, queries, k, valid=None):
+        q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
+        q = q @ self.rotation
+        luts = adc_tables(q, self.codebooks, self.metric)
+        vals, idx = ops.pq_adc_topk(luts, self.codes, k, valid=valid)
+        if self.metric is not Metric.L2:
+            vals = -vals
+        return vals, idx
+
+    def _state(self):
+        s = super()._state()
+        s["rotation"] = self.rotation
+        return s
+
+    def _load_state(self, state):
+        super()._load_state({k: v for k, v in state.items() if k != "rotation"})
+        self.rotation = state["rotation"]

@@ -1,0 +1,29 @@
+"""Index factory keyed by kind string (what index nodes instantiate)."""
+
+from __future__ import annotations
+
+from .base import IndexSpec, VectorIndex
+from .bucket import BucketIndex
+from .flat import FlatIndex, SQIndex
+from .hnsw import HNSWIndex
+from .ivf import IVFFlatIndex, IVFPQIndex, IVFSQIndex
+from .pq import OPQIndex, PQIndex
+
+INDEX_KINDS: dict[str, type[VectorIndex]] = {
+    FlatIndex.KIND: FlatIndex,
+    SQIndex.KIND: SQIndex,
+    PQIndex.KIND: PQIndex,
+    OPQIndex.KIND: OPQIndex,
+    IVFFlatIndex.KIND: IVFFlatIndex,
+    IVFSQIndex.KIND: IVFSQIndex,
+    IVFPQIndex.KIND: IVFPQIndex,
+    HNSWIndex.KIND: HNSWIndex,
+    BucketIndex.KIND: BucketIndex,
+}
+
+
+def create_index(spec: IndexSpec) -> VectorIndex:
+    cls = INDEX_KINDS.get(spec.kind)
+    if cls is None:
+        raise KeyError(f"unknown index kind '{spec.kind}'; have {sorted(INDEX_KINDS)}")
+    return cls(metric=spec.metric, **spec.normalized_params())

@@ -1,0 +1,278 @@
+"""Public jit'd entry points for the kernel layer.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
+(this CPU container) the pure-jnp oracles in ``ref.py`` execute by default
+for speed, while the Pallas bodies are validated under ``interpret=True`` in
+the test suite.  Set ``REPRO_FORCE_PALLAS=1`` to force interpret-mode Pallas
+everywhere (slow, but exercises the real kernels end to end).
+
+All wrappers here accept un-padded shapes and handle the 128-alignment the
+kernels require (pad rows, mask padding as invalid, strip outputs).
+"""
+
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .kmeans_assign import kmeans_assign_pallas
+from .l2_topk import l2_topk_pallas
+from .pq_adc import pq_adc_topk_pallas
+from .sq_codec import sq_decode_pallas, sq_encode_pallas, sq_l2_topk_pallas
+
+__all__ = [
+    "topk_scan",
+    "pq_adc_topk",
+    "sq_encode",
+    "sq_decode",
+    "sq_topk_scan",
+    "kmeans_assign",
+    "use_pallas",
+]
+
+
+@lru_cache(maxsize=1)
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    if os.environ.get("REPRO_FORCE_REF") == "1":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Host fast paths.  On CPU the jnp oracles pay dispatch/compile overhead per
+# ragged shape (IVF lists are ragged); BLAS + argpartition is the idiomatic
+# host implementation and is bit-compatible with the oracle semantics.
+# ---------------------------------------------------------------------------
+
+
+def _np_topk_min(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    n = scores.shape[1]
+    k = min(k, n)
+    if k >= n:
+        idx = np.argsort(scores, axis=1, kind="stable")[:, :k]
+    else:
+        part = np.argpartition(scores, k - 1, axis=1)[:, :k]
+        sub = np.take_along_axis(scores, part, 1)
+        order = np.argsort(sub, axis=1, kind="stable")
+        idx = np.take_along_axis(part, order, 1)
+    return np.take_along_axis(scores, idx, 1), idx
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(arr: jnp.ndarray, multiple: int, fill=0) -> jnp.ndarray:
+    n = arr.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths, constant_values=fill)
+
+
+def _choose_tiles(nq: int, n: int) -> tuple[int, int]:
+    tq = 128 if nq >= 128 else max(8, 1 << (nq - 1).bit_length())
+    tn = 512 if n >= 512 else max(128, 1 << (n - 1).bit_length())
+    return tq, tn
+
+
+def topk_scan(
+    queries,
+    base,
+    k: int,
+    metric: str = "l2",
+    valid=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Brute-force top-k scan (the growing-segment / FLAT search path).
+
+    Returns (scores [nq,k], idx [nq,k]); ascending distance for L2,
+    descending similarity for IP.  ``valid`` masks rows (MVCC visibility /
+    delete bitmap).  Invalid or out-of-range results carry idx == -1.
+    """
+    n = base.shape[0]
+    if n == 0:
+        nq = len(queries)
+        fill = np.inf if metric == "l2" else -np.inf
+        return (
+            np.full((nq, k), fill, np.float32),
+            np.full((nq, k), -1, np.int64),
+        )
+    k_eff = min(k, n)
+
+    if use_pallas():
+        queries = jnp.asarray(queries, jnp.float32)
+        base = jnp.asarray(base, jnp.float32)
+        v = jnp.ones(n, jnp.int32) if valid is None else jnp.asarray(valid).astype(jnp.int32)
+        tq, tn = _choose_tiles(queries.shape[0], n)
+        qp = _pad_rows(queries, tq)
+        bp = _pad_rows(base, tn)
+        vp = _pad_rows(v, tn, fill=0)
+        vals, idx = l2_topk_pallas(
+            qp, bp, vp, k_eff, metric=metric, tq=tq, tn=tn, interpret=_interpret()
+        )
+        vals, idx = vals[: queries.shape[0]], idx[: queries.shape[0]]
+        vals, idx = np.asarray(vals), np.asarray(idx, np.int64)
+    else:
+        qn = np.asarray(queries, np.float32)
+        bn = np.asarray(base, np.float32)
+        if metric == "l2":
+            scores = (
+                np.sum(qn * qn, axis=1, keepdims=True)
+                - 2.0 * qn @ bn.T
+                + np.sum(bn * bn, axis=1)[None, :]
+            )
+        else:
+            scores = -(qn @ bn.T)
+        if valid is not None:
+            scores = np.where(np.asarray(valid, bool)[None, :], scores, np.float32(np.inf))
+        vals, idx = _np_topk_min(scores, k_eff)
+        if metric == "ip":
+            vals = -vals
+        idx = idx.astype(np.int64)
+
+    vals = np.asarray(vals, np.float32)
+    bad = np.abs(vals) >= 1e38
+    idx = np.where(bad, -1, idx)
+    if k_eff < k:  # pad out to requested k
+        fill = np.inf if metric == "l2" else -np.inf
+        vals = np.concatenate(
+            [vals, np.full((vals.shape[0], k - k_eff), fill, np.float32)], axis=1
+        )
+        idx = np.concatenate(
+            [idx, np.full((idx.shape[0], k - k_eff), -1, np.int64)], axis=1
+        )
+    return vals, idx
+
+
+def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray]:
+    """ADC top-k over PQ codes.  luts: [nq, m, ksub]; codes: [n, m]."""
+    n = codes.shape[0]
+    nq = luts.shape[0]
+    if n == 0:
+        return np.full((nq, k), np.inf, np.float32), np.full((nq, k), -1, np.int64)
+    k_eff = min(k, n)
+    if use_pallas():
+        luts = jnp.asarray(luts, jnp.float32)
+        codes = jnp.asarray(codes, jnp.int32)
+        v = jnp.ones(n, jnp.int32) if valid is None else jnp.asarray(valid).astype(jnp.int32)
+        tn = 512 if n >= 512 else max(128, 1 << (n - 1).bit_length())
+        cp = _pad_rows(codes, tn)
+        vp = _pad_rows(v, tn, fill=0)
+        vals, idx = pq_adc_topk_pallas(luts, cp, vp, k_eff, tn=tn, interpret=_interpret())
+        vals, idx = np.asarray(vals), np.asarray(idx, np.int64)
+    else:
+        ln = np.asarray(luts, np.float32)
+        cn = np.asarray(codes, np.int64)
+        m = cn.shape[1]
+        scores = np.zeros((nq, n), np.float32)
+        for j in range(m):
+            scores += ln[:, j, cn[:, j]]
+        if valid is not None:
+            scores = np.where(np.asarray(valid, bool)[None, :], scores, np.float32(np.inf))
+        vals, idx = _np_topk_min(scores, k_eff)
+        idx = idx.astype(np.int64)
+    idx = np.where(np.abs(vals) >= 1e38, -1, idx)
+    if k_eff < k:
+        vals = np.concatenate(
+            [vals, np.full((nq, k - k_eff), np.inf, np.float32)], axis=1
+        )
+        idx = np.concatenate([idx, np.full((nq, k - k_eff), -1, np.int64)], axis=1)
+    return vals, idx
+
+
+def sq_encode(x, vmin, vmax) -> np.ndarray:
+    if use_pallas():
+        x = jnp.asarray(x, jnp.float32)
+        n = x.shape[0]
+        tn = 512 if n >= 512 else max(128, 1 << max(0, (n - 1)).bit_length())
+        xp = _pad_rows(x, tn)
+        out = sq_encode_pallas(xp, jnp.asarray(vmin), jnp.asarray(vmax), tn=tn, interpret=_interpret())
+        return np.asarray(out[:n], np.uint8)
+    xn = np.asarray(x, np.float32)
+    vmin = np.asarray(vmin, np.float32)
+    vmax = np.asarray(vmax, np.float32)
+    scale = np.maximum(vmax - vmin, 1e-12) / 255.0
+    q = np.round((xn - vmin[None, :]) / scale[None, :])
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def sq_decode(codes, vmin, vmax) -> np.ndarray:
+    if use_pallas():
+        codes = jnp.asarray(codes)
+        n = codes.shape[0]
+        tn = 512 if n >= 512 else max(128, 1 << max(0, (n - 1)).bit_length())
+        cp = _pad_rows(codes.astype(jnp.int32), tn)
+        out = sq_decode_pallas(cp, jnp.asarray(vmin), jnp.asarray(vmax), tn=tn, interpret=_interpret())
+        return np.asarray(out[:n])
+    vmin = np.asarray(vmin, np.float32)
+    vmax = np.asarray(vmax, np.float32)
+    scale = np.maximum(vmax - vmin, 1e-12) / 255.0
+    return np.asarray(codes, np.float32) * scale[None, :] + vmin[None, :]
+
+
+def sq_topk_scan(
+    queries, codes, vmin, vmax, k: int, metric: str = "l2", valid=None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k against SQ-compressed base with fused dequantization."""
+    n = codes.shape[0]
+    nq = len(queries)
+    if n == 0:
+        fill = np.inf if metric == "l2" else -np.inf
+        return np.full((nq, k), fill, np.float32), np.full((nq, k), -1, np.int64)
+    k_eff = min(k, n)
+    if use_pallas():
+        queries = jnp.asarray(queries, jnp.float32)
+        codes = jnp.asarray(codes)
+        v = jnp.ones(n, jnp.int32) if valid is None else jnp.asarray(valid).astype(jnp.int32)
+        tq, tn = _choose_tiles(nq, n)
+        qp = _pad_rows(queries, tq)
+        cp = _pad_rows(codes.astype(jnp.int32), tn)
+        vp = _pad_rows(v, tn, fill=0)
+        vals, idx = sq_l2_topk_pallas(
+            qp, cp, jnp.asarray(vmin), jnp.asarray(vmax), vp, k_eff,
+            metric=metric, tq=tq, tn=tn, interpret=_interpret(),
+        )
+        vals, idx = np.asarray(vals[:nq]), np.asarray(idx[:nq], np.int64)
+    else:
+        decoded = sq_decode(np.asarray(codes), vmin, vmax)
+        return topk_scan(np.asarray(queries), decoded, k, metric=metric, valid=valid)
+    vals, idx = np.asarray(vals), np.asarray(idx, np.int64)
+    idx = np.where(np.abs(vals) >= 1e38, -1, idx)
+    if k_eff < k:
+        fill = np.inf if metric == "l2" else -np.inf
+        vals = np.concatenate([vals, np.full((nq, k - k_eff), fill, np.float32)], axis=1)
+        idx = np.concatenate([idx, np.full((nq, k - k_eff), -1, np.int64)], axis=1)
+    return vals, idx
+
+
+def kmeans_assign(x, centroids) -> tuple[np.ndarray, np.ndarray]:
+    """Nearest-centroid assignment: returns (assign [n] int, sqdist [n])."""
+    n, ncent = x.shape[0], centroids.shape[0]
+    if use_pallas():
+        x = jnp.asarray(x, jnp.float32)
+        c = jnp.asarray(centroids, jnp.float32)
+        tn = 512 if n >= 512 else max(128, 1 << (max(n, 2) - 1).bit_length())
+        tc = 512 if ncent >= 512 else max(128, 1 << (max(ncent, 2) - 1).bit_length())
+        xp = _pad_rows(x, tn)
+        # pad centroids with far-away sentinels so they never win
+        pad = (-ncent) % tc
+        if pad:
+            c = jnp.concatenate([c, jnp.full((pad, c.shape[1]), 1e18, jnp.float32)])
+        a, d = kmeans_assign_pallas(xp, c, tn=tn, tc=tc, interpret=_interpret())
+        return np.asarray(a[:n], np.int64), np.asarray(d[:n])
+    xn = np.asarray(x, np.float32)
+    cn = np.asarray(centroids, np.float32)
+    d2 = (
+        np.sum(xn * xn, axis=1, keepdims=True)
+        - 2.0 * xn @ cn.T
+        + np.sum(cn * cn, axis=1)[None, :]
+    )
+    return np.argmin(d2, axis=1).astype(np.int64), np.min(d2, axis=1)

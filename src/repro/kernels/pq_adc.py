@@ -1,0 +1,120 @@
+"""PQ asymmetric-distance (ADC) scan + top-k Pallas TPU kernel.
+
+Product quantization stores each vector as ``m`` sub-codes; query-time
+distance is a table lookup: ``d(q, x) = sum_m LUT[m, code_m(x)]``.  The GPU
+version keeps the LUT in shared memory and gathers; on TPU there is no fast
+per-lane gather, so we replace the lookup with a **one-hot MXU contraction**
+per subquantizer:
+
+    onehot(codes[:, m]) [TN, KSUB]  @  LUT[:, m, :].T [KSUB, NQ]  ->  [TN, NQ]
+
+which is exactly the hardware-adaptation pattern DESIGN.md §3 describes:
+LUT pinned in VMEM, codes streamed in int tiles, gathers turned into
+systolic matmuls.  Running top-k identical to ``l2_topk``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .topk_util import BIG_F32, NEG_I32, merge_topk, tile_base_indices
+
+DEFAULT_TN = 512
+
+
+def _adc_kernel(
+    lut_ref,  # [NQ, M, KSUB] f32 — whole query batch resident in VMEM
+    codes_ref,  # [TN, M] int32 tile
+    valid_ref,  # [1, TN] int32
+    out_v_ref,  # [NQ, K]
+    out_i_ref,  # [NQ, K]
+    acc_v,
+    acc_i,
+    *,
+    k: int,
+    n_base_tiles: int,
+):
+    jt = pl.program_id(0)
+
+    @pl.when(jt == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v[...], BIG_F32)
+        acc_i[...] = jnp.full_like(acc_i[...], NEG_I32)
+
+    lut = lut_ref[...]  # [NQ, M, KSUB]
+    codes = codes_ref[...].astype(jnp.int32)  # [TN, M]
+    nq, m, ksub = lut.shape
+    tn = codes.shape[0]
+
+    def per_sub(mi, acc):
+        code_col = jax.lax.dynamic_slice(codes, (0, mi), (tn, 1))[:, 0]  # [TN]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tn, ksub), 1)
+        onehot = (iota == code_col[:, None]).astype(jnp.float32)  # [TN, KSUB]
+        lut_m = jax.lax.dynamic_slice(lut, (0, mi, 0), (nq, 1, ksub))[:, 0, :]
+        part = jax.lax.dot_general(
+            onehot, lut_m, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [TN, NQ]
+        return acc + part
+
+    dist_tn_nq = jax.lax.fori_loop(
+        0, m, per_sub, jnp.zeros((tn, nq), jnp.float32)
+    )
+    scores = dist_tn_nq.T  # [NQ, TN]
+    live = valid_ref[0, :][None, :] > 0
+    scores = jnp.where(live, scores, BIG_F32)
+
+    idx = tile_base_indices(tn, jt, nq)
+    new_v, new_i = merge_topk(acc_v[...], acc_i[...], scores, idx, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(jt == n_base_tiles - 1)
+    def _emit():
+        out_v_ref[...] = acc_v[...]
+        out_i_ref[...] = acc_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tn", "interpret"))
+def pq_adc_topk_pallas(
+    luts: jnp.ndarray,  # [NQ, M, KSUB] f32
+    codes: jnp.ndarray,  # [N, M] int32, N padded to TN multiple
+    valid: jnp.ndarray,  # [N] int32
+    k: int,
+    tn: int = DEFAULT_TN,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    nq, m, ksub = luts.shape
+    n = codes.shape[0]
+    assert n % tn == 0
+    n_b_tiles = n // tn
+
+    kernel = functools.partial(_adc_kernel, k=k, n_base_tiles=n_b_tiles)
+    out_v, out_i = pl.pallas_call(
+        kernel,
+        grid=(n_b_tiles,),
+        in_specs=[
+            pl.BlockSpec((nq, m, ksub), lambda j: (0, 0, 0)),
+            pl.BlockSpec((tn, m), lambda j: (j, 0)),
+            pl.BlockSpec((1, tn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nq, k), lambda j: (0, 0)),
+            pl.BlockSpec((nq, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nq, k), jnp.float32),
+            pltpu.VMEM((nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts.astype(jnp.float32), codes.astype(jnp.int32), valid[None, :].astype(jnp.int32))
+    return out_v, out_i

@@ -1,0 +1,71 @@
+"""Top-k maintenance helpers shared by the Pallas kernel bodies.
+
+TPUs have no warp-shuffle top-k (the CUDA idiom Manu/Faiss use); the
+idiomatic Mosaic equivalent is a K-step selection over a candidate tile
+using only reductions, broadcasted iota, and one-hot arithmetic — all of
+which lower cleanly to the VPU.  ``select_topk_small`` extracts the K
+smallest entries of a [TQ, M] candidate tile; ``merge_topk`` folds a new
+candidate tile into the running per-query buffer kept in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_I32 = -1
+BIG_F32 = 3.0e38
+
+
+def _row_onehot(col_idx: jnp.ndarray, width: int) -> jnp.ndarray:
+    """[TQ] int32 -> one-hot [TQ, width] float32 (Mosaic-safe gather substitute)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (col_idx.shape[0], width), 1)
+    return (iota == col_idx[:, None]).astype(jnp.float32)
+
+
+def select_topk_small(
+    vals: jnp.ndarray, idx: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """K smallest of each row of ``vals`` [TQ, M] with carried indices.
+
+    Pure min/argmin selection loop: K iterations, each picks the row-wise
+    minimum, emits it, and masks it out with a one-hot.  Ascending output.
+    """
+    tq, m = vals.shape
+    out_v = jnp.full((tq, k), BIG_F32, dtype=jnp.float32)
+    out_i = jnp.full((tq, k), NEG_I32, dtype=jnp.int32)
+
+    def body(j, carry):
+        cv, ov, oi = carry
+        row_min = jnp.min(cv, axis=1)  # [TQ]
+        row_arg = jnp.argmin(cv, axis=1).astype(jnp.int32)  # [TQ]
+        oh = _row_onehot(row_arg, m)  # [TQ, M]
+        picked_idx = jnp.sum(oh * idx.astype(jnp.float32), axis=1).astype(jnp.int32)
+        ov = jax.lax.dynamic_update_slice(ov, row_min[:, None], (0, j))
+        oi = jax.lax.dynamic_update_slice(oi, picked_idx[:, None], (0, j))
+        cv = jnp.where(oh > 0, BIG_F32, cv)
+        return cv, ov, oi
+
+    _, out_v, out_i = jax.lax.fori_loop(
+        0, k, body, (vals.astype(jnp.float32), out_v, out_i)
+    )
+    return out_v, out_i
+
+
+def merge_topk(
+    acc_v: jnp.ndarray,
+    acc_i: jnp.ndarray,
+    new_v: jnp.ndarray,
+    new_i: jnp.ndarray,
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge running top-k [TQ,K] with a fresh candidate tile [TQ,M]."""
+    cand_v = jnp.concatenate([acc_v, new_v.astype(jnp.float32)], axis=1)
+    cand_i = jnp.concatenate([acc_i, new_i], axis=1)
+    return select_topk_small(cand_v, cand_i, k)
+
+
+def tile_base_indices(tile_rows: int, tile_idx: jnp.ndarray, tq: int) -> jnp.ndarray:
+    """Global base-row indices for the current [TQ, TN] tile."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tq, tile_rows), 1)
+    return iota + (tile_idx * tile_rows).astype(jnp.int32)

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from the dry-run result JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load_all(d: str) -> list[dict]:
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | kind | mem/dev GiB | compute ms | memory ms | "
+           "collective ms | bound | useful-FLOP ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    order = {"train": 0, "prefill": 1, "decode": 2}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r.get("kind", ""), 3), r["shape"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | FAILED: {r.get('error','?')} | | | | | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {fmt_bytes(r['memory_analysis']['peak_bytes_per_device'])} "
+            f"| {t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} | {t['bound']} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def fit_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compile s | mem/dev GiB | collectives in rolled HLO |\n"
+           "|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | |")
+            continue
+        coll = r.get("collectives_rolled_module", r.get("collectives", {}))
+        ops = coll.get("collective-ops", "?")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s','?')} "
+            f"| {fmt_bytes(r['memory_analysis']['peak_bytes_per_device'])} "
+            f"| {ops} ops / {coll.get('total',0)/2**20:.0f} MiB |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    args = ap.parse_args()
+    single = load_all(os.path.join(args.dir, "16x16"))
+    multi = load_all(os.path.join(args.dir, "2x16x16"))
+    print("## Roofline (single pod, 16x16 = 256 chips, per-device terms)\n")
+    print(roofline_table(single))
+    print("\n## Multi-pod fit pass (2x16x16 = 512 chips)\n")
+    print(fit_table(multi))
+    ok_s = sum(1 for r in single if r.get("ok"))
+    ok_m = sum(1 for r in multi if r.get("ok"))
+    print(f"\nsingle-pod: {ok_s}/{len(single)} cells pass; "
+          f"multi-pod: {ok_m}/{len(multi)} cells pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Production serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --shape decode_32k --dry-run
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --local --tokens 16
+
+``--dry-run`` lowers + compiles prefill/decode steps for the production
+mesh (sequence-sharded KV + flash-decode).  ``--local`` runs real batched
+decode of a reduced config on local devices as a smoke demo.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+
+        os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+        from .dryrun import run_cell
+
+        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+        r = res["roofline"]
+        print(f"{args.arch} x {args.shape} [{res['mesh']}]: compiled OK; "
+              f"mem/dev={res['memory_analysis']['peak_bytes_per_device']/2**30:.2f} GiB; "
+              f"bound={r['bound']} (c={r['compute_s']*1e3:.2f}ms "
+              f"m={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms)")
+        return
+
+    if args.local:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from ..configs import get_arch
+        from ..models import model as M
+
+        cfg = get_arch(args.arch).reduced()
+        params = M.init_params(cfg, jax.random.key(0))
+        B = 4
+        prompt = jax.random.randint(jax.random.key(1), (B, 8), 0, cfg.vocab_size)
+        prefix = None
+        if cfg.frontend == "vlm_stub":
+            prefix = jax.random.normal(
+                jax.random.key(2), (B, cfg.num_prefix_embeddings, cfg.d_model))
+        total = 8 + (cfg.num_prefix_embeddings if prefix is not None else 0)
+        cache = M.init_cache(cfg, B, total + args.tokens)
+        logits, cache = M.prefill(cfg, params, prompt, cache, prefix)
+        step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for _ in range(args.tokens - 1):
+            logits, cache = step(params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        dt = time.time() - t0
+        seq = np.concatenate([np.asarray(t) for t in out], axis=1)
+        print(f"{args.arch}-reduced: decoded {args.tokens} tokens x{B} seqs "
+              f"in {dt:.2f}s ({args.tokens*B/max(dt,1e-9):.1f} tok/s)")
+        print("sample:", seq[0][:12])
+        return
+
+    ap.error("choose --dry-run or --local in this container (no TPU attached)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Step builders + input specs for every (arch × shape) cell.
+
+``build_cell(cfg, shape, mesh)`` returns (step_fn, in_shardings,
+input ShapeDtypeStructs, donate_argnums) ready for
+``jax.jit(...).lower(...).compile()`` — the single entry the dry-run,
+trainer and server all share.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import act_sharding, partition
+from ..distributed.decode_attn import make_gqa_flash_decode, make_mla_flash_decode
+from ..models import model as M
+from ..models.config import ModelConfig, ShapeConfig
+from ..train.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    init_opt_state,
+    opt_state_shape,
+)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:  # decode: one new token against a seq_len KV cache
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    if cfg.frontend == "vlm_stub" and shape.kind != "decode":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_embeddings, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict[str, P]:
+    bspec = partition.batch_spec(mesh, shape.global_batch)
+    structs = batch_struct(cfg, shape)
+    return {k: P(*bspec) if v.ndim >= 1 else P() for k, v in structs.items()}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """Public helper used by dryrun/tests: all model inputs for a cell."""
+    return batch_struct(cfg, shape)
+
+
+def _norm_batch_axes(bspec: P):
+    axes = bspec[0] if len(bspec) else None
+    if axes is None:
+        return None
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+    adamw: AdamWConfig | None = None, remat: bool = True, moe_impl: str = "shard_map",
+    microbatches: int = 1,
+):
+    """``microbatches`` > 1 enables gradient accumulation: the global batch
+    is split into N sequential microbatches whose f32 grads accumulate
+    before one optimizer update.  Divides live activation memory by ~N (the
+    remat residuals dominate large-model training peaks) at the cost of
+    N x FSDP weight-gather traffic — the memory/collective trade measured
+    in EXPERIMENTS.md §Perf."""
+    adamw = adamw or AdamWConfig()
+    p_shape = M.params_shape(cfg)
+    o_shape = opt_state_shape(p_shape)
+    p_specs = partition.param_specs(cfg, mesh, p_shape, fsdp=True)
+    o_specs = {
+        "step": P(),
+        "m": p_specs,
+        "v": p_specs,
+    }
+    b_specs = batch_specs(cfg, shape, mesh)
+    b_struct = batch_struct(cfg, shape)
+
+    b_axes = _norm_batch_axes(partition.batch_spec(mesh, shape.global_batch))
+
+    def train_step(params, opt_state, batch):
+        with act_sharding.policy(mesh, b_axes, moe_impl):
+            def loss_fn(p, mb):
+                return M.lm_loss(
+                    cfg, p, mb["tokens"], mb["labels"],
+                    mb.get("prefix_embeds"), remat=remat,
+                )
+
+            if microbatches <= 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                n = microbatches
+                split = jax.tree_util.tree_map(
+                    lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
+                )
+                # accumulator carry must start param-sharded: a replicated
+                # scan carry would force the whole loop body unsharded
+                zero = jax.tree_util.tree_map(
+                    lambda p, spec: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), NamedSharding(mesh, spec)
+                    ),
+                    params, p_specs,
+                )
+
+                def mb_step(carry, mb):
+                    acc, loss_acc = carry
+                    mb = act_sharding.constrain_tree_batch(mb)
+                    loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, gi: a + gi.astype(jnp.float32) / n, acc, g
+                    )
+                    return (acc, loss_acc + loss / n), None
+
+                from ..models import scan_util
+
+                (grads, loss), _ = scan_util.scan(
+                    mb_step, (zero, jnp.zeros((), jnp.float32)), split
+                )
+            grads, gnorm = clip_by_global_norm(grads, adamw.grad_clip)
+            new_params, new_opt = adamw_update(adamw, params, grads, opt_state)
+            return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    in_shardings = (
+        partition.tree_shardings(mesh, p_specs),
+        partition.tree_shardings(mesh, o_specs),
+        partition.tree_shardings(mesh, b_specs),
+    )
+    in_structs = (p_shape, o_shape, b_struct)
+    return train_step, in_shardings, in_structs, (0, 1)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, remat: bool = True,
+                       moe_impl: str = "shard_map"):
+    p_shape = M.params_shape(cfg)
+    p_specs = partition.param_specs(cfg, mesh, p_shape, fsdp=False)
+    b_specs = batch_specs(cfg, shape, mesh)
+    b_struct = batch_struct(cfg, shape)
+    total_seq = shape.seq_len + (
+        cfg.num_prefix_embeddings if cfg.frontend == "vlm_stub" else 0
+    )
+    c_shape = M.cache_shape(cfg, shape.global_batch, total_seq)
+    c_specs = partition.cache_specs(cfg, mesh, c_shape, shape.global_batch)
+
+    b_axes = _norm_batch_axes(partition.batch_spec(mesh, shape.global_batch))
+
+    def prefill_step(params, batch, cache):
+        with act_sharding.policy(mesh, b_axes, moe_impl):
+            logits, cache = M.prefill(
+                cfg, params, batch["tokens"], cache, batch.get("prefix_embeds"),
+                remat=remat, last_only=True,
+            )
+            return logits, cache
+
+    in_shardings = (
+        partition.tree_shardings(mesh, p_specs),
+        partition.tree_shardings(mesh, b_specs),
+        partition.tree_shardings(mesh, c_specs),
+    )
+    return prefill_step, in_shardings, (p_shape, b_struct, c_shape), (2,)
+
+
+def build_decode_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+    flash_decode: bool = True, moe_impl: str = "shard_map",
+    cache_mode: str = "carry",
+):
+    p_shape = M.params_shape(cfg)
+    p_specs = partition.param_specs(cfg, mesh, p_shape, fsdp=False)
+    b_specs = batch_specs(cfg, shape, mesh)
+    b_struct = batch_struct(cfg, shape)
+    c_shape = M.cache_shape(cfg, shape.global_batch, shape.seq_len)
+    c_specs = partition.cache_specs(cfg, mesh, c_shape, shape.global_batch)
+
+    if flash_decode and "model" in mesh.shape and mesh.shape["model"] > 1:
+        bspec = partition.batch_spec(mesh, shape.global_batch)
+        gqa_impl = make_gqa_flash_decode(mesh, "model", bspec)
+        mla_impl = make_mla_flash_decode(mesh, "model", bspec)
+    else:
+        gqa_impl = M.dense_gqa_decode_attn
+        mla_impl = M.dense_mla_decode_attn
+
+    b_axes = _norm_batch_axes(partition.batch_spec(mesh, shape.global_batch))
+
+    def serve_step(params, cache, batch):
+        with act_sharding.policy(mesh, b_axes, moe_impl):
+            logits, cache = M.decode_step(
+                cfg, params, cache, batch["tokens"],
+                gqa_attn_impl=gqa_impl, mla_attn_impl=mla_impl,
+                cache_mode=cache_mode,
+            )
+            return logits, cache
+
+    in_shardings = (
+        partition.tree_shardings(mesh, p_specs),
+        partition.tree_shardings(mesh, c_specs),
+        partition.tree_shardings(mesh, b_specs),
+    )
+    return serve_step, in_shardings, (p_shape, c_shape, b_struct), (1,)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, **kw):
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, **kw)
+    return build_decode_cell(cfg, shape, mesh, **kw)

@@ -1,0 +1,54 @@
+"""Embedding extraction: the bridge between the model zoo and Manu.
+
+Any decoder config doubles as an embedding model (the paper's §7
+"embedding generation toolbox"): mean-pooled final hidden states, L2
+normalized — the standard decoder-as-embedder recipe.  ``Embedder`` wraps
+a jitted batch-embed function plus a request micro-batcher for serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import ModelConfig
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean-pooled, L2-normalized embeddings [B, d_model] (f32)."""
+    h = M.hidden_states(cfg, params, tokens, remat=False)
+    h = h.astype(jnp.float32)
+    if mask is None:
+        pooled = h.mean(axis=1)
+    else:
+        w = mask.astype(jnp.float32)[..., None]
+        pooled = (h * w).sum(axis=1) / jnp.maximum(w.sum(axis=1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+class Embedder:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self._fn = jax.jit(lambda p, t, m: embed_tokens(cfg, p, t, m))
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.d_model
+
+    def embed(self, token_batches: np.ndarray, mask: np.ndarray | None = None) -> np.ndarray:
+        """tokens [N, S] -> embeddings [N, d] (internally micro-batched)."""
+        n = len(token_batches)
+        out = []
+        for lo in range(0, n, self.max_batch):
+            hi = min(lo + self.max_batch, n)
+            t = jnp.asarray(token_batches[lo:hi], jnp.int32)
+            m = None if mask is None else jnp.asarray(mask[lo:hi])
+            if m is None:
+                m = jnp.ones(t.shape, jnp.int32)
+            out.append(np.asarray(self._fn(self.params, t, m)))
+        return np.concatenate(out) if out else np.empty((0, self.dim), np.float32)

@@ -1,0 +1,305 @@
+"""Transformer building blocks: RMSNorm, RoPE, flash attention (online
+softmax over KV blocks), GQA/MQA with qk-norm / qkv-bias options, MLA.
+
+All functions are pure (params passed explicitly) and written so GSPMD can
+partition them: batch on the ``data`` mesh axis, heads / hidden features on
+``model``.  Flash attention is a ``lax.scan`` over KV blocks with running
+(max, denom, acc) — O(S·blk) memory, which is what makes prefill_32k fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act_sharding import constrain, model_axis_size
+from . import scan_util
+from .config import ModelConfig
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+DEFAULT_KV_BLOCK = 1_024
+DEFAULT_Q_BLOCK = 2_048
+
+
+# ----------------------------------------------------------------- norms --
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------- flash attention --
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Sk, KVH, hd]  (KVH may divide H: GQA/MQA)
+    v: jnp.ndarray,  # [B, Sk, KVH, hd]
+    causal_offset: int | None = 0,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    q_block: int = DEFAULT_Q_BLOCK,
+) -> jnp.ndarray:
+    """Online-softmax attention, O(Sq·blk) live memory, GQA-aware.
+
+    KV heads are NEVER materialized repeated to H — queries are grouped
+    [B,S,KVH,G,hd] and contracted against the raw KV (repeat_kv would
+    amplify KV HBM traffic by H/KVH, 8x on the GQA configs).
+
+    ``causal_offset``: query i attends to keys j <= i + offset (offset =
+    Sk - Sq for decode/prefix setups).  None disables masking entirely.
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    vd = v.shape[-1]  # MLA has v_head_dim != qk head_dim (96 vs 64)
+    # Partial KV repeat up to the tensor-parallel width: grouped attention
+    # with kvh < TP < H cannot 16-way-shard the (KVH, G) reshape, so GSPMD
+    # replicates the whole attention.  Repeating KV to exactly TP heads
+    # (2-4x, not H/KVH=8-16x) restores head sharding at minimal HBM cost
+    # (EXPERIMENTS.md §Perf iter 6).
+    tp = model_axis_size()
+    if tp > 1 and kvh < tp <= h and h % tp == 0 and tp % kvh == 0:
+        reps = tp // kvh
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+        kvh = tp
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    if scan_util.unrolling():
+        # cost-analysis mode: fewer/bigger tiles so the unrolled HLO stays
+        # compilable; FLOPs/bytes are invariant to the blocking.
+        kv_block = max(kv_block, sk // 8)
+        q_block = max(q_block, sq // 4)
+    kv_block = min(kv_block, sk)
+    q_block = min(q_block, sq)
+    n_kv = -(-sk // kv_block)
+    n_q = -(-sq // q_block)
+    # pad seq dims to block multiples
+    sq_p, sk_p = n_q * q_block, n_kv * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+
+    kb = kp.reshape(b, n_kv, kv_block, kvh, hd)
+    vb = vp.reshape(b, n_kv, kv_block, kvh, vd)
+
+    kb = constrain(kb, "batch", None, None, "model", None)
+    vb = constrain(vb, "batch", None, None, "model", None)
+
+    def one_q_block(qi, q_tile):
+        # q_tile: [B, q_block, H, hd] -> grouped [B, qb, KVH, G, hd]
+        q5 = constrain(q_tile.reshape(b, q_block, kvh, g, hd),
+                       "batch", None, "model", None, None)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry  # [B,KVH,G,qb], ..., [B,KVH,G,qb,hd]
+            kj, k_tile, v_tile = inputs  # tiles [B, kv_block, KVH, hd]
+            s = jnp.einsum(
+                "bqkgd,bekd->bkgqe", q5, k_tile,
+                preferred_element_type=jnp.float32,
+            ) * scale  # [B,KVH,G,qb,kb]
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            mask = k_pos[None, :] < sk  # padding mask
+            if causal_offset is not None:
+                mask = mask & (
+                    k_pos[None, :] <= q_pos[:, None] + causal_offset
+                )
+            s = jnp.where(mask[None, None, None, :, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqe,bekd->bkgqd", p, v_tile, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        # scan carries must start with the right sharding or GSPMD
+        # replicates the whole loop body (see act_sharding docstring)
+        m0 = constrain(jnp.full((b, kvh, g, q_block), -jnp.inf, jnp.float32), "batch")
+        l0 = constrain(jnp.zeros((b, kvh, g, q_block), jnp.float32), "batch")
+        a0 = constrain(jnp.zeros((b, kvh, g, q_block, vd), jnp.float32), "batch")
+        (m, l, acc), _ = scan_util.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(n_kv), kb.swapaxes(0, 1), vb.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # [B,KVH,G,qb,vd]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, vd)
+
+    q_tiles = qp.reshape(b, n_q, q_block, h, hd).swapaxes(0, 1)  # [n_q, B, qb, H, hd]
+    out_tiles = scan_util.map_(lambda args: one_q_block(*args), (jnp.arange(n_q), q_tiles))
+    out = out_tiles.swapaxes(0, 1).reshape(b, sq_p, h, vd)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def repeat_kv(x: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """[B, S, KVH, hd] -> [B, S, H, hd] by repeating each kv head."""
+    b, s, kvh, hd = x.shape
+    if kvh == num_heads:
+        return x
+    reps = num_heads // kvh
+    return jnp.repeat(x, reps, axis=2)
+
+
+# --------------------------------------------------------------- GQA core --
+def init_attention_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    if cfg.attn_type == "mla":
+        qr = cfg.q_lora_rank or d
+        qhd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p = {
+            "w_dq": jax.random.normal(k1, (d, qr), PARAM_DTYPE) * s,
+            "q_norm": jnp.ones(qr, PARAM_DTYPE),
+            "w_uq": jax.random.normal(k2, (qr, cfg.num_heads * qhd), PARAM_DTYPE)
+            * (1.0 / math.sqrt(qr)),
+            "w_dkv": jax.random.normal(
+                k3, (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), PARAM_DTYPE
+            )
+            * s,
+            "kv_norm": jnp.ones(cfg.kv_lora_rank, PARAM_DTYPE),
+            "w_ukv": jax.random.normal(
+                k4,
+                (cfg.kv_lora_rank, cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+                PARAM_DTYPE,
+            )
+            * (1.0 / math.sqrt(cfg.kv_lora_rank)),
+            "w_o": jax.random.normal(k5, (cfg.num_heads * cfg.v_head_dim, d), PARAM_DTYPE)
+            * (1.0 / math.sqrt(cfg.num_heads * cfg.v_head_dim)),
+        }
+        return p
+    p = {
+        "w_q": jax.random.normal(k1, (d, cfg.q_dim), PARAM_DTYPE) * s,
+        "w_k": jax.random.normal(k2, (d, cfg.kv_dim), PARAM_DTYPE) * s,
+        "w_v": jax.random.normal(k3, (d, cfg.kv_dim), PARAM_DTYPE) * s,
+        "w_o": jax.random.normal(k4, (cfg.q_dim, d), PARAM_DTYPE)
+        * (1.0 / math.sqrt(cfg.q_dim)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros(cfg.q_dim, PARAM_DTYPE)
+        p["b_k"] = jnp.zeros(cfg.kv_dim, PARAM_DTYPE)
+        p["b_v"] = jnp.zeros(cfg.kv_dim, PARAM_DTYPE)
+    if cfg.qk_norm:
+        p["q_head_norm"] = jnp.ones(cfg.head_dim, PARAM_DTYPE)
+        p["k_head_norm"] = jnp.ones(cfg.head_dim, PARAM_DTYPE)
+    return p
+
+
+def gqa_qkv(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project to (q [B,S,H,hd], k [B,S,KVH,hd], v [B,S,KVH,hd]) with rope."""
+    b, s, _ = x.shape
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q = q + p["b_q"]
+        k = k + p["b_k"]
+        v = v + p["b_v"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_head_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_head_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Pin attention sharding: heads on `model` when divisible, otherwise
+    # fully replicated.  Without this GSPMD shards head_dim and ALL-REDUCES
+    # the partial scores — 165 GiB/step on paligemma prefill_32k (§Perf).
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def mla_qkv(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MLA projections.  Returns (q [B,S,H,qhd], k [B,S,H,qhd], v [B,S,H,vhd],
+    compressed cache payload c [B,S,kv_lora+rope]).
+
+    The compressed c_kv (+ shared rope key) is what a serving cache stores —
+    the MLA memory saving.  k/v here are the decompressed views.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    dkv = x @ p["w_dkv"]  # [B,S,kv_lora+rope]
+    c_kv = rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., cfg.kv_lora_rank :].reshape(b, s, 1, rope_d)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    ukv = (c_kv @ p["w_ukv"]).reshape(b, s, h, nope + vd)
+    k_nope, v = ukv[..., :nope], ukv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope_d))], axis=-1)
+    # NOTE: no sharding pin here — for MLA (40 heads, not divisible by 16)
+    # replicating q/k/v measured WORSE than GSPMD's layout (coll 2.4s->5.7s,
+    # §Perf refuted-hypothesis log), and MLA prefill is memory-bound anyway.
+    # cache stores the compressed c_kv and the *post-rope* shared key part —
+    # exactly what the absorbed decode consumes.
+    cache_payload = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    return q, k, v, cache_payload
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    kv_block: int = DEFAULT_KV_BLOCK,
+) -> jnp.ndarray:
+    """Full causal self-attention for train/prefill."""
+    if cfg.attn_type == "mla":
+        q, k, v, _c = mla_qkv(cfg, p, x, positions)
+        out = flash_attention(q, k, v, causal_offset=0, kv_block=kv_block)
+        b, s = x.shape[:2]
+        return out.reshape(b, s, cfg.num_heads * cfg.v_head_dim) @ p["w_o"]
+    q, k, v = gqa_qkv(cfg, p, x, positions)
+    out = flash_attention(q, k, v, causal_offset=0, kv_block=kv_block)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, cfg.q_dim) @ p["w_o"]
+
+
+# ------------------------------------------------------------------- MLP --
+def init_mlp_params(d: int, f: int, key: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), PARAM_DTYPE) / math.sqrt(d),
+        "w_up": jax.random.normal(k2, (d, f), PARAM_DTYPE) / math.sqrt(d),
+        "w_down": jax.random.normal(k3, (f, d), PARAM_DTYPE) / math.sqrt(f),
+    }
+
+
+def mlp_block(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,590 @@
+"""The assembled decoder-only model covering all 10 assigned architectures.
+
+One generic ``Transformer`` parameterized by ``ModelConfig``:
+
+* layer kinds come from ``cfg.layer_pattern`` (attn / ssm), repeated over
+  depth; MoE FFNs appear on layers selected by ``moe_every``;
+* layers are **stacked and scanned**: parameters of equal-structure layers
+  are stacked along a leading ``periods`` axis and the forward pass is a
+  ``jax.lax.scan`` over that axis (HLO size O(1) in depth — essential for
+  compiling 64-layer configs in the dry-run).  Heterogeneous stacks (Jamba)
+  scan over *periods* of the pattern with the slots unrolled inside;
+* three entry points per the assigned shapes: ``forward`` (train loss),
+  ``prefill`` (logits + cache), ``decode_step`` (1 token against a cache).
+
+Caches: GQA stores (k, v) [B, S, KVH, hd]; MLA stores the *compressed*
+c_kv ‖ k_rope payload [B, S, r+rope] and uses the absorbed-matmul decode
+(the DeepSeek inference trick); SSM stores the O(1) recurrent state.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act_sharding import constrain
+from .config import ModelConfig
+from .layers import (
+    ACT_DTYPE,
+    PARAM_DTYPE,
+    apply_rope,
+    attention_block,
+    gqa_qkv,
+    init_attention_params,
+    init_mlp_params,
+    mla_qkv,
+    mlp_block,
+    repeat_kv,
+    rms_norm,
+)
+from . import scan_util
+from .moe import init_moe_params, moe_block
+from .ssm import (
+    init_ssm_params,
+    init_ssm_state,
+    ssm_block,
+    ssm_block_with_state,
+    ssm_decode_step,
+)
+
+Params = dict[str, Any]
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def effective_pattern(cfg: ModelConfig) -> list[tuple[str, bool]]:
+    """Per-slot (kind, is_moe) over one effective period."""
+    pat = cfg.pattern()
+    period = _lcm(len(pat), cfg.moe_every if cfg.moe_num_experts else 1)
+    if cfg.num_layers % period != 0:
+        raise ValueError(
+            f"{cfg.name}: layers {cfg.num_layers} not divisible by period {period}"
+        )
+    return [(pat[s % len(pat)], cfg.is_moe_layer(s)) for s in range(period)]
+
+
+def num_periods(cfg: ModelConfig) -> int:
+    return cfg.num_layers // len(effective_pattern(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, kind: str, is_moe: bool, key: jax.Array) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "ln_attn": jnp.ones(cfg.d_model, PARAM_DTYPE),
+        "ln_mlp": jnp.ones(cfg.d_model, PARAM_DTYPE),
+    }
+    if kind == "attn":
+        p["attn"] = init_attention_params(cfg, k1)
+    else:
+        p["ssm"] = init_ssm_params(cfg, k2)
+    if is_moe:
+        p["moe"] = init_moe_params(cfg, k3)
+    elif cfg.d_ff > 0:
+        p["mlp"] = init_mlp_params(cfg.d_model, cfg.d_ff, k4)
+    else:
+        del p["ln_mlp"]  # pure mamba blocks have no MLP sublayer
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 4)
+    pattern = effective_pattern(cfg)
+    periods = num_periods(cfg)
+
+    def init_slot(s: int, kind: str, is_moe: bool) -> Params:
+        slot_keys = jax.random.split(jax.random.fold_in(keys[0], s), periods)
+        stacked = [
+            _init_layer(cfg, kind, is_moe, slot_keys[pi]) for pi in range(periods)
+        ]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+
+    params: Params = {
+        "embed": jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model), PARAM_DTYPE)
+        * 0.02,
+        "ln_final": jnp.ones(cfg.d_model, PARAM_DTYPE),
+        "layers": {
+            f"slot{s}": init_slot(s, kind, is_moe)
+            for s, (kind, is_moe) in enumerate(pattern)
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size), PARAM_DTYPE) * 0.02
+        )
+    if cfg.frontend == "vlm_stub":
+        # projection applied to precomputed patch embeddings (SigLIP stub)
+        params["vision_proj"] = (
+            jax.random.normal(keys[3], (cfg.d_model, cfg.d_model), PARAM_DTYPE)
+            / math.sqrt(cfg.d_model)
+        )
+    return params
+
+
+def params_shape(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) and prefill
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(
+    cfg: ModelConfig, kind: str, is_moe: bool, p: Params, x: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> jnp.ndarray:
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    if kind == "attn":
+        x = x + attention_block(cfg, p["attn"], h, positions)
+    else:
+        x = x + ssm_block(cfg, p["ssm"], h)
+    if is_moe:
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        x = x + moe_block(cfg, p["moe"], h)
+    elif cfg.d_ff > 0:
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        x = x + mlp_block(p["mlp"], h)
+    return x
+
+
+def embed_inputs(
+    cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    if cfg.frontend == "vlm_stub":
+        if prefix_embeds is None:
+            raise ValueError(f"{cfg.name} needs prefix patch embeddings")
+        pe = prefix_embeds.astype(ACT_DTYPE) @ params["vision_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return constrain(x, "batch")
+
+
+def hidden_states(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: bool = True,
+) -> jnp.ndarray:
+    """Final-norm hidden states [B, S_total, D] (no LM head)."""
+    x = embed_inputs(cfg, params, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pattern = effective_pattern(cfg)
+
+    def period_body(x, period_params):
+        x = constrain(x, "batch")
+        for si, (kind, is_moe) in enumerate(pattern):
+            x = _layer_forward(cfg, kind, is_moe, period_params[f"slot{si}"], x, positions)
+        return constrain(x, "batch"), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, _ = scan_util.scan(body, x, params["layers"])
+    return rms_norm(x, params["ln_final"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,  # [B, S] int32
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: bool = True,
+) -> jnp.ndarray:
+    """Causal LM logits [B, S_total, V]."""
+    x = hidden_states(cfg, params, tokens, prefix_embeds, remat=remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum(
+        "bsd,dv->bsv", x, head, preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=ACT_DTYPE) -> Params:
+    """Zeroed decode cache for every slot, stacked over periods."""
+    periods = num_periods(cfg)
+    cache: Params = {"length": jnp.zeros((), jnp.int32)}
+    for s, (kind, _moe) in enumerate(effective_pattern(cfg)):
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                payload = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+                cache[f"slot{s}"] = {
+                    "c": jnp.zeros((periods, batch, max_seq, payload), dtype)
+                }
+            else:
+                shp = (periods, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+                cache[f"slot{s}"] = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        else:
+            st = init_ssm_state(cfg, batch)
+            cache[f"slot{s}"] = {
+                "h": jnp.zeros((periods,) + st["h"].shape, jnp.float32),
+                "conv": jnp.zeros((periods,) + st["conv"].shape, PARAM_DTYPE),
+            }
+    return cache
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Prefill: logits for all positions + populated cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,  # [B, S]
+    cache: Params,
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: bool = True,
+    last_only: bool = False,
+    cache_mode: str = "carry",
+) -> tuple[jnp.ndarray, Params]:
+    x = embed_inputs(cfg, params, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    max_seq = _cache_max_seq(cfg, cache)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pattern = effective_pattern(cfg)
+
+    def period_body(x, inputs):
+        period_params, period_cache = inputs
+        x = constrain(x, "batch")
+        new_cache = {}
+        for si, (kind, is_moe) in enumerate(pattern):
+            p = period_params[f"slot{si}"]
+            h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+            if kind == "attn":
+                attn_out, slot_cache = _attn_prefill(
+                    cfg, p["attn"], h, positions, period_cache[f"slot{si}"]
+                )
+            else:
+                # prefill starts from a fresh SSM state ({} -> zero init)
+                attn_out, slot_cache = ssm_block_with_state(cfg, p["ssm"], h, {})
+            x = x + attn_out
+            if is_moe or cfg.d_ff > 0:
+                h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+                x = x + (moe_block(cfg, p["moe"], h) if is_moe else mlp_block(p["mlp"], h))
+            new_cache[f"slot{si}"] = slot_cache
+        return x, new_cache
+
+    layer_caches_in = {k: v for k, v in cache.items() if k.startswith("slot")}
+    if cache_mode == "carry":
+        # Thread the stacked cache as scan CARRY with per-period indexed
+        # updates: the while-loop carry aliases in place and KEEPS the
+        # cache's input sharding.  The ys formulation lets GSPMD defer the
+        # output reshard and keep multiple UNSHARDED f32 cache copies live
+        # inside the loop (observed +15 GiB/dev on qwen3 prefill, §Perf).
+        periods = num_periods(cfg)
+
+        def _carry_body(carry, inputs):
+            x, cache_all = carry
+            period_params, idx = inputs
+            period_cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                cache_all,
+            )
+            x, new_cache = period_body(x, (period_params, period_cache))
+            cache_all = jax.tree_util.tree_map(
+                lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                    c, nc.astype(c.dtype), idx, 0
+                ),
+                cache_all, new_cache,
+            )
+            return (x, cache_all), None
+
+        body = jax.checkpoint(_carry_body) if remat else _carry_body
+        (x, new_caches), _ = scan_util.scan(
+            body, (x, layer_caches_in), (params["layers"], jnp.arange(periods))
+        )
+    else:
+        body = jax.checkpoint(period_body, static_argnums=()) if remat else period_body
+        x, new_caches = scan_util.scan(body, x, (params["layers"], layer_caches_in))
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    if last_only:
+        # serving only needs the next-token distribution: never materialize
+        # the full [B, S, V] logits (67 GiB at 257k vocab x 32k seq).
+        x = x[:, -1:, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    out_cache = dict(new_caches)
+    out_cache["length"] = jnp.asarray(s, jnp.int32)
+    return logits, out_cache
+
+
+def _attn_prefill(cfg, p, h, positions, slot_cache):
+    """Attention + cache fill (writes into the provided cache buffers)."""
+    from .layers import flash_attention
+
+    b, s, _ = h.shape
+    if cfg.attn_type == "mla":
+        q, k, v, payload = mla_qkv(cfg, p, h, positions)
+        out = flash_attention(q, k, v, causal_offset=0)
+        attn_out = out.reshape(b, s, cfg.num_heads * cfg.v_head_dim) @ p["w_o"]
+        c = jax.lax.dynamic_update_slice(
+            slot_cache["c"], payload.astype(slot_cache["c"].dtype), (0, 0, 0)
+        )
+        return attn_out, {"c": c}
+    q, k, v = gqa_qkv(cfg, p, h, positions)
+    out = flash_attention(q, k, v, causal_offset=0)
+    attn_out = out.reshape(b, s, cfg.q_dim) @ p["w_o"]
+    kc = jax.lax.dynamic_update_slice(
+        slot_cache["k"], k.astype(slot_cache["k"].dtype), (0, 0, 0, 0)
+    )
+    vc = jax.lax.dynamic_update_slice(
+        slot_cache["v"], v.astype(slot_cache["v"].dtype), (0, 0, 0, 0)
+    )
+    return attn_out, {"k": kc, "v": vc}
+
+
+def _cache_max_seq(cfg: ModelConfig, cache: Params) -> int:
+    for s, (kind, _m) in enumerate(effective_pattern(cfg)):
+        if kind == "attn":
+            slot = cache[f"slot{s}"]
+            arr = slot["c"] if cfg.attn_type == "mla" else slot["k"]
+            return arr.shape[2]
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+# Decode attention implementations are injectable: the distributed layer
+# provides shard_map flash-decode over sequence-sharded caches
+# (repro.distributed.decode_attn); the dense defaults below are the
+# single-host reference.  Signatures:
+#   gqa: (q, k_new, v_new, k_cache, v_cache, pos) -> (out, k_cache, v_cache)
+#   mla: (q_c, q_rope, payload, c_cache, pos, r, scale_dim) -> (ctx, c_cache)
+DecodeAttnFn = Callable[..., tuple]
+
+
+def dense_gqa_decode_attn(q, k_new, v_new, k_cache, v_cache, pos):
+    b, _one, h, hd = q.shape
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0)
+    )
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    q5 = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q5, k_cache.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    mask = jnp.arange(s)[None, None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype), k_cache, v_cache
+
+
+def dense_mla_decode_attn(q_c, q_rope, payload, c_cache, pos, r, scale_dim):
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, payload.astype(c_cache.dtype), (0, pos, 0)
+    )
+    s = c_cache.shape[1]
+    c_kv = c_cache[..., :r].astype(jnp.float32)
+    k_rope = c_cache[..., r:].astype(jnp.float32)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32), c_kv)
+        + jnp.einsum("bqhn,bsn->bhqs", q_rope.astype(jnp.float32), k_rope)
+    ) / math.sqrt(scale_dim)
+    mask = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, c_kv)
+    return ctx.astype(q_c.dtype), c_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    tokens: jnp.ndarray,  # [B, 1] the newest token ids
+    gqa_attn_impl: DecodeAttnFn = dense_gqa_decode_attn,
+    mla_attn_impl: DecodeAttnFn = dense_mla_decode_attn,
+    cache_mode: str = "carry",
+) -> tuple[jnp.ndarray, Params]:
+    """One decode step: returns (logits [B,1,V], updated cache).
+
+    ``cache_mode="carry"`` threads the stacked cache through the period scan
+    as CARRY with per-period dynamic-index updates — the while-loop carry
+    aliases in place, so the cache exists once.  ``"ys"`` (the naive
+    formulation) re-emits each period's cache as stacked scan outputs, which
+    double-buffers the entire multi-GiB cache (input xs + output ys live
+    simultaneously) — kept as the §Perf baseline.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    b = x.shape[0]
+    pos = cache["length"]  # scalar: index where the new token is written
+    positions = jnp.broadcast_to(pos, (b, 1))
+    pattern = effective_pattern(cfg)
+    layer_caches_in = {k: v for k, v in cache.items() if k.startswith("slot")}
+
+    def slots_forward(x, period_params, period_cache):
+        new_cache = {}
+        for si, (kind, is_moe) in enumerate(pattern):
+            p = period_params[f"slot{si}"]
+            sc = period_cache[f"slot{si}"]
+            h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+            if kind == "attn":
+                attn_out, sc = _attn_decode(cfg, p["attn"], h, sc, pos, positions,
+                                            gqa_attn_impl, mla_attn_impl)
+            else:
+                attn_out, sc = ssm_decode_step(cfg, p["ssm"], h, sc)
+            x = x + attn_out
+            if is_moe or cfg.d_ff > 0:
+                h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+                x = x + (moe_block(cfg, p["moe"], h) if is_moe else mlp_block(p["mlp"], h))
+            new_cache[f"slot{si}"] = sc
+        return x, new_cache
+
+    if cache_mode == "ys":
+        def period_body(x, inputs):
+            period_params, period_cache = inputs
+            return slots_forward(x, period_params, period_cache)
+
+        x, new_caches = scan_util.scan(period_body, x, (params["layers"], layer_caches_in))
+    else:
+        periods = num_periods(cfg)
+
+        def period_body(carry, inputs):
+            x, cache_all = carry
+            period_params, idx = inputs
+            period_cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                cache_all,
+            )
+            x, new_cache = slots_forward(x, period_params, period_cache)
+            cache_all = jax.tree_util.tree_map(
+                lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                    c, nc.astype(c.dtype), idx, 0
+                ),
+                cache_all, new_cache,
+            )
+            return (x, cache_all), None
+
+        (x, new_caches), _ = scan_util.scan(
+            period_body, (x, layer_caches_in),
+            (params["layers"], jnp.arange(periods)),
+        )
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    out_cache = dict(new_caches)
+    out_cache["length"] = pos + 1
+    return logits, out_cache
+
+
+def _attn_decode(cfg, p, h, slot_cache, pos, positions, gqa_attn_impl,
+                 mla_attn_impl):
+    b = h.shape[0]
+    if cfg.attn_type == "mla":
+        nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        r = cfg.kv_lora_rank
+        vd = cfg.v_head_dim
+        hn = cfg.num_heads
+        cq = rms_norm(h @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+        q = (cq @ p["w_uq"]).reshape(b, 1, hn, nope + rope_d)
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        dkv = h @ p["w_dkv"]  # [B,1,r+rope]
+        c_kv = rms_norm(dkv[..., :r], p["kv_norm"], cfg.norm_eps)
+        k_rope = apply_rope(
+            dkv[..., r:].reshape(b, 1, 1, rope_d), positions, cfg.rope_theta
+        ).reshape(b, 1, rope_d)
+        payload = jnp.concatenate([c_kv, k_rope], axis=-1)
+        # Absorbed query/value projections (DeepSeek inference trick):
+        # scoring and reading happen entirely in the compressed space.
+        w_ukv = p["w_ukv"].reshape(r, hn, nope + vd)
+        w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]
+        q_c = jnp.einsum(
+            "bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+        ).astype(h.dtype)
+        ctx, c_cache = mla_attn_impl(
+            q_c, q_rope, payload, slot_cache["c"], pos, r, nope + rope_d
+        )
+        out = jnp.einsum(
+            "bqhr,rhv->bqhv", ctx.astype(jnp.float32), w_uv.astype(jnp.float32)
+        ).astype(h.dtype)
+        attn_out = out.reshape(b, 1, hn * vd) @ p["w_o"]
+        return attn_out, {"c": c_cache}
+    q, k, v = gqa_qkv(cfg, p, h, positions)
+    out, kc, vc = gqa_attn_impl(q, k, v, slot_cache["k"], slot_cache["v"], pos)
+    attn_out = out.reshape(b, 1, cfg.q_dim) @ p["w_o"]
+    return attn_out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,  # [B, S]
+    labels: jnp.ndarray,  # [B, S] next-token targets; -100 = ignore
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: bool = True,
+    seq_chunk: int = 1_024,
+) -> jnp.ndarray:
+    """Sequence-chunked cross entropy.
+
+    The [B, S, V] logits tensor is never materialized: the head matmul +
+    log-softmax run per sequence chunk under remat, so peak memory is
+    [B, seq_chunk, V] — at 151k vocab and 4k seq that is the difference
+    between ~50 GiB and ~1.5 GiB per device.
+    """
+    x = hidden_states(cfg, params, tokens, prefix_embeds, remat=remat)
+    if cfg.frontend == "vlm_stub" and prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1] :, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = x.shape
+    chunk = min(seq_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    nchunks = (s + pad) // chunk
+    xc = x.reshape(b, nchunks, chunk, d).swapaxes(0, 1)  # [nc, B, C, D]
+    lc = labels.reshape(b, nchunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(carry, inputs):
+        x_c, l_c = inputs
+        logits = jnp.einsum(
+            "bcd,dv->bcv", x_c, head, preferred_element_type=jnp.float32
+        )
+        valid = l_c >= 0
+        safe = jnp.where(valid, l_c, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + (nll * valid).sum(), cnt + valid.sum()), None
+
+    (total, count), _ = scan_util.scan(
+        chunk_nll,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc),
+    )
+    return total / jnp.maximum(count, 1)

@@ -1,0 +1,40 @@
+"""Switchable scan: rolled (default) vs fully unrolled (cost-analysis mode).
+
+XLA's ``cost_analysis()`` counts each while-loop body ONCE — it does not
+multiply by trip count — so FLOPs/bytes of scan-structured models are
+undercounted by ~num_layers (observed 28x on yi-9b).  The dry-run therefore
+runs a second *cost pass*: shallow (1- and 2-period) model variants with
+every scan unrolled, whose costs extrapolate linearly to full depth
+(EXPERIMENTS.md §Dry-run describes the method).  ``set_unroll(True)``
+switches every model-internal scan/map to ``unroll=True``.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+
+_STATE = threading.local()
+
+
+def set_unroll(value: bool) -> None:
+    _STATE.unroll = bool(value)
+
+
+def unrolling() -> bool:
+    return getattr(_STATE, "unroll", False)
+
+
+def scan(body, init, xs, length=None):
+    return jax.lax.scan(body, init, xs, length=length, unroll=unrolling() or 1)
+
+
+def map_(fn, xs):
+    if unrolling():
+        def body(carry, x):
+            return carry, fn(x)
+
+        _c, ys = jax.lax.scan(body, (), xs, unroll=True)
+        return ys
+    return jax.lax.map(fn, xs)

@@ -1,0 +1,244 @@
+"""Mamba2 / SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks of
+Q tokens; within a chunk the output is a masked quadratic form (MXU
+matmuls), across chunks a small recurrent state [H, hd, N] is carried by a
+``lax.scan``.  Decode is the O(1) recurrence ``h = a·h + dt·B⊗x``;
+``y = C·h + D·x`` — which is what makes long_500k serveable.
+
+Single-group B/C (G=1), scalar A per head (the Mamba2 default).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act_sharding import constrain
+from . import scan_util
+from .config import ModelConfig
+from .layers import PARAM_DTYPE
+
+
+def init_ssm_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv = cfg.ssm_conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z(di), x(di), B(n), C(n), dt(h)]
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "w_in": jax.random.normal(k1, (d, proj_out), PARAM_DTYPE) / math.sqrt(d),
+        "conv_w": jax.random.normal(k2, (conv, di + 2 * n), PARAM_DTYPE) * 0.1,
+        "conv_b": jnp.zeros(di + 2 * n, PARAM_DTYPE),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones(h, jnp.float32),
+        "dt_bias": jnp.zeros(h, jnp.float32),
+        "norm": jnp.ones(di, PARAM_DTYPE),
+        "w_out": jax.random.normal(k3, (di, d), PARAM_DTYPE) / math.sqrt(di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d over [B, S, C] with window len(w)."""
+    conv = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(conv):  # conv is tiny (4): unrolled taps
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, S, H, hd]
+    dt: jnp.ndarray,  # [B, S, H] (post softplus)
+    a: jnp.ndarray,  # [H] (negative decay rates)
+    b_in: jnp.ndarray,  # [B, S, N]
+    c_in: jnp.ndarray,  # [B, S, N]
+    chunk: int,
+    h_init: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y [B,S,H,hd], final state [B,H,hd,N])."""
+    bsz, s, h, hd = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    nc = s_p // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, hd)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    # per-step log decay: da[b,t,h] = a[h] * dt[b,t,h]  (a < 0)
+    da = dtc * a[None, None, None, :]  # [B,nc,Q,H]
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative decay
+
+    def chunk_step(h_state, inputs):
+        # h_state: [B, H, hd, N].  Every contraction below is an explicit
+        # pairwise binary op with rank <= 4 intermediates — multi-operand
+        # einsums here let opt_einsum/autodiff materialize rank-6 monsters
+        # (observed 128 GiB/chunk in the dry-run before this decomposition).
+        xj, dtj, bj, cj, daj, cumj = inputs  # leading dim B
+        xf = xj.astype(jnp.float32)
+        # within-chunk decay matrix L[b,h,t,t'] = exp(cum_t - cum_t') * (t>=t')
+        diff = cumj[:, :, None, :].transpose(0, 3, 1, 2) - cumj[:, :, None, :].transpose(0, 3, 2, 1)
+        # diff[b,h,t,t'] = cum[b,t,h] - cum[b,t',h]; causal (t>=t') => diff<=0.
+        # Clamp before exp: the masked (t<t') region has diff>0 and would
+        # overflow to inf, and inf*0 = NaN.
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        l_mat = jnp.exp(jnp.minimum(diff, 0.0)) * tri[None, None]
+        # scores[b,t,t'] over state dim: (C_t · B_t')
+        cb = jnp.einsum("btn,bun->btu", cj, bj)  # [B,Q,Q]
+        # y_diag[b,t,h,d] = sum_u cb[t,u] * L[h,t,u] * dt[u,h] * x[u,h,d]
+        w_tu = cb[:, None, :, :] * l_mat  # [B,H,Q,Q]
+        w_tu = w_tu * dtj.transpose(0, 2, 1)[:, :, None, :]  # fold dt_u
+        y_diag = jnp.einsum("bhtu,buhd->bthd", w_tu, xf)
+        # contribution of the carried state: y_off[t] = exp(cum_t) * C_t · h
+        decay_in = jnp.exp(cumj)  # [B,Q,H]
+        cd = cj[:, :, None, :] * decay_in[:, :, :, None]  # [B,Q,H,N]
+        y_off = jnp.einsum("bthn,bhdn->bthd", cd, h_state)
+        # state update: h' = exp(sum da) * h + sum_u exp(cum_last - cum_u) dt_u B_u x_u
+        total = cumj[:, -1, :]  # [B,H]
+        decay_out = jnp.exp(total[:, None, :] - cumj)  # [B,Q,H]
+        xw = xf * (decay_out * dtj)[..., None]  # [B,Q,H,hd]
+        h_inc = jnp.einsum("bun,buhd->bhdn", bj, xw)
+        h_new = jnp.exp(total)[:, :, None, None] * h_state + h_inc
+        return h_new, (y_diag + y_off)
+
+    # Remat each chunk: the backward pass recomputes the chunk forward
+    # instead of saving O(Q^2) residuals per chunk per layer.
+    chunk_step = jax.checkpoint(chunk_step)
+
+    h0 = (
+        h_init.astype(jnp.float32)
+        if h_init is not None
+        else jnp.zeros((bsz, h, hd, n), jnp.float32)
+    )
+    h0 = constrain(h0, "batch")
+    inputs = (
+        xc.swapaxes(0, 1),
+        dtc.swapaxes(0, 1),
+        bc.swapaxes(0, 1),
+        cc.swapaxes(0, 1),
+        da.swapaxes(0, 1),
+        cum.swapaxes(0, 1),
+    )
+    h_final, ys = scan_util.scan(chunk_step, h0, inputs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s_p, h, hd)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_block(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray,
+) -> jnp.ndarray:
+    """Full-sequence SSD block (train/prefill)."""
+    from .layers import rms_norm
+
+    bsz, s, _ = x.shape
+    di, n, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, s, h, hd)
+    b_in = xbc[..., di : di + n]
+    c_in = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H], negative
+    y, _hf = ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm_chunk)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def ssm_block_with_state(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, state: dict,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill variant returning the carry state for subsequent decode."""
+    from .layers import rms_norm
+
+    bsz, s, _ = x.shape
+    di, n, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc_conv[..., :di].reshape(bsz, s, h, hd)
+    b_in = xbc_conv[..., di : di + n]
+    c_in = xbc_conv[..., di + n :]
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, h_final = ssd_chunked(xs, dt_sp, a, b_in, c_in, cfg.ssm_chunk,
+                             h_init=state.get("h"))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = (y.reshape(bsz, s, di) * jax.nn.silu(z))
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):, :] if s >= cfg.ssm_conv - 1 else jnp.pad(
+        xbc, ((0, 0), (cfg.ssm_conv - 1 - s, 0), (0, 0))
+    )
+    new_state = {"h": h_final, "conv": conv_tail}
+    return y @ p["w_out"], new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state),
+                          PARAM_DTYPE),
+    }
+
+
+def ssm_decode_step(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, state: dict
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode: x [B, 1, D] -> (y [B, 1, D], new state)."""
+    from .layers import rms_norm
+
+    bsz = x.shape[0]
+    di, n, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x[:, 0] @ p["w_in"]  # [B, proj_out]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # conv window: previous conv-1 inputs + current
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [B,conv,C]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    xbc_act = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs = xbc_act[..., :di].reshape(bsz, h, hd)
+    b_in = xbc_act[..., di : di + n].astype(jnp.float32)
+    c_in = xbc_act[..., di + n :].astype(jnp.float32)
+
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_sp * a[None, :])  # [B,H]
+    h_state = state["h"]  # [B,H,hd,N]
+    h_new = decay[:, :, None, None] * h_state + jnp.einsum(
+        "bh,bn,bhd->bhdn", dt_sp, b_in, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhdn->bhd", c_in, h_new)  # [B,H,hd]
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    new_state = {"h": h_new, "conv": window[:, 1:, :]}
+    return out, new_state

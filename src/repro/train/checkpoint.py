@@ -1,0 +1,109 @@
+"""Step-atomic checkpoint/restart to the object store.
+
+Training state (params + optimizer moments + step) serializes to flat
+``ckpt/<name>/<step>/<leaf-path>`` objects plus a manifest written LAST —
+a partially written checkpoint is never visible (the manifest is the
+commit record), which is what makes preemption/node-failure recovery safe.
+``restore_latest`` resumes from the newest committed step.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.object_store import ObjectStore
+
+Params = Any
+
+
+def _flatten(tree: Params) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(
+    store: ObjectStore, name: str, step: int, params: Params, opt_state: Params,
+    extra: dict | None = None,
+) -> str:
+    prefix = f"ckpt/{name}/{step:010d}"
+    leaves: dict[str, dict] = {"params": {}, "opt": {}}
+    for group, tree in (("params", params), ("opt", opt_state)):
+        for key, arr in _flatten(tree).items():
+            obj_key = f"{prefix}/{group}/{key}"
+            real_dtype = str(arr.dtype)
+            if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                                 np.uint8, np.uint32, np.bool_):
+                # np.save cannot round-trip ml_dtypes (bfloat16): store as
+                # f32 — a lossless widening for bf16 — and cast on restore.
+                arr = arr.astype(np.float32)
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            store.put(obj_key, buf.getvalue())
+            leaves[group][key] = {"key": obj_key, "dtype": real_dtype,
+                                  "shape": list(arr.shape)}
+    manifest = {
+        "name": name,
+        "step": step,
+        "leaves": leaves,
+        "extra": extra or {},
+    }
+    # the manifest is the atomic commit record — written last
+    store.put(f"{prefix}/MANIFEST", json.dumps(manifest).encode())
+    return prefix
+
+
+def committed_steps(store: ObjectStore, name: str) -> list[int]:
+    steps = []
+    for meta in store.list(f"ckpt/{name}/"):
+        parts = meta.key.split("/")
+        if parts[-1] == "MANIFEST":
+            steps.append(int(parts[2]))
+    return sorted(steps)
+
+
+def restore_checkpoint(
+    store: ObjectStore, name: str, step: int, params_like: Params, opt_like: Params,
+) -> tuple[Params, Params, dict]:
+    prefix = f"ckpt/{name}/{step:010d}"
+    manifest = json.loads(store.get(f"{prefix}/MANIFEST").decode())
+
+    def load_tree(group: str, like: Params) -> Params:
+        flat_info = manifest["leaves"][group]
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+            arr = np.load(io.BytesIO(store.get(flat_info[key]["key"])), allow_pickle=False)
+            leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return load_tree("params", params_like), load_tree("opt", opt_like), manifest["extra"]
+
+
+def restore_latest(
+    store: ObjectStore, name: str, params_like: Params, opt_like: Params,
+) -> tuple[int, Params, Params, dict] | None:
+    steps = committed_steps(store, name)
+    if not steps:
+        return None
+    step = steps[-1]
+    p, o, extra = restore_checkpoint(store, name, step, params_like, opt_like)
+    return step, p, o, extra
+
+
+def prune_checkpoints(store: ObjectStore, name: str, keep: int = 2) -> None:
+    steps = committed_steps(store, name)
+    for step in steps[:-keep]:
+        prefix = f"ckpt/{name}/{step:010d}"
+        for meta in list(store.list(prefix)):
+            store.delete(meta.key)

@@ -1,0 +1,101 @@
+"""Fault-tolerant training loop: resume-from-checkpoint, periodic commits,
+simple synthetic LM data pipeline.  Used by examples/train_embedder.py and
+the launchers; on a real cluster the same loop runs under pjit with the
+production mesh (launch/train.py)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.object_store import ObjectStore
+from ..models import model as M
+from ..models.config import ModelConfig
+from .checkpoint import prune_checkpoints, restore_latest, save_checkpoint
+from .optimizer import AdamWConfig, adamw_update, clip_by_global_norm, init_opt_state
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 64
+    checkpoint_every: int = 25
+    log_every: int = 10
+    run_name: str = "run0"
+    seed: int = 0
+
+
+def synthetic_lm_batches(cfg: ModelConfig, tc: TrainConfig):
+    """Deterministic synthetic corpus: structured (learnable) token streams —
+    a Zipfian unigram mixed with a copy pattern so loss decreases visibly."""
+    rng = np.random.default_rng(tc.seed)
+    zipf_p = 1.0 / np.arange(1, cfg.vocab_size + 1)
+    zipf_p /= zipf_p.sum()
+    step = 0
+    while True:
+        toks = rng.choice(cfg.vocab_size, size=(tc.batch, tc.seq_len), p=zipf_p)
+        # periodic copy pattern: position i repeats position i-4
+        toks[:, 4::4] = toks[:, : tc.seq_len - 4 : 4][:, : toks[:, 4::4].shape[1]]
+        tokens = toks.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = -100
+        yield {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        step += 1
+
+
+def train(
+    cfg: ModelConfig,
+    store: ObjectStore,
+    tc: TrainConfig,
+    adamw: AdamWConfig | None = None,
+    batch_iter=None,
+    on_step: Callable[[int, float], None] | None = None,
+) -> tuple[dict, dict, list[float]]:
+    """Run (or resume) training; returns (params, opt_state, loss history)."""
+    adamw = adamw or AdamWConfig(lr=3e-3, warmup_steps=20)
+    params = M.init_params(cfg, jax.random.key(tc.seed))
+    opt_state = init_opt_state(params)
+    start_step = 0
+    resumed = restore_latest(store, tc.run_name, params, opt_state)
+    if resumed is not None:
+        start_step, params, opt_state, _extra = resumed
+        print(f"[train] resumed '{tc.run_name}' from step {start_step}")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            return M.lm_loss(cfg, p, batch["tokens"], batch["labels"],
+                             remat=True, seq_chunk=min(64, tc.seq_len))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = clip_by_global_norm(grads, adamw.grad_clip)
+        params, opt_state = adamw_update(adamw, params, grads, opt_state)
+        return params, opt_state, loss
+
+    batches = batch_iter or synthetic_lm_batches(cfg, tc)
+    # data-pipeline restore: advance the stream to the resume point so a
+    # resumed run consumes exactly the batches the lost run would have
+    for _ in range(start_step):
+        next(batches)
+    losses: list[float] = []
+    t0 = time.time()
+    for step in range(start_step, tc.steps):
+        batch = next(batches)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if on_step:
+            on_step(step, float(loss))
+        if (step + 1) % tc.log_every == 0:
+            rate = (step + 1 - start_step) / max(time.time() - t0, 1e-9)
+            print(f"[train] step {step+1}/{tc.steps} loss={float(loss):.4f} "
+                  f"({rate:.1f} steps/s)")
+        if (step + 1) % tc.checkpoint_every == 0 or step + 1 == tc.steps:
+            save_checkpoint(store, tc.run_name, step + 1, params, opt_state)
+            prune_checkpoints(store, tc.run_name, keep=2)
+    return params, opt_state, losses

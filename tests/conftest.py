@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device (multi-device tests spawn
+# subprocesses with their own XLA_FLAGS).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,193 @@
+"""TSO/HLC, log broker, meta store, object store — unit + property tests."""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.log import (
+    COORD_CHANNEL,
+    EntryType,
+    LogBroker,
+    LogEntry,
+    Subscription,
+    dml_channel,
+    shard_of_pk,
+)
+from repro.core.meta_store import MetaStore
+from repro.core.object_store import FileObjectStore, MemoryObjectStore
+from repro.core.timestamp import (
+    TSO,
+    ManualClock,
+    Timestamp,
+    logical_of,
+    pack,
+    physical_of,
+)
+
+
+# ------------------------------------------------------------------ HLC/TSO
+@given(st.integers(0, 2**40), st.integers(0, 2**18 - 1))
+def test_hlc_pack_roundtrip(phys, logical):
+    ts = pack(phys, logical)
+    assert physical_of(ts) == phys
+    assert logical_of(ts) == logical
+    assert Timestamp.unpack(ts).packed() == ts
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_tso_strictly_increasing(advances):
+    """Property: regardless of clock behaviour, TSO output is strictly
+    monotone (the total-order MVCC depends on)."""
+    clock = ManualClock(1000)
+    tso = TSO(clock)
+    last = 0
+    for adv in advances:
+        clock.advance(adv)
+        ts = tso.next()
+        assert ts > last
+        last = ts
+
+
+def test_tso_physical_tracks_clock():
+    clock = ManualClock(5_000)
+    tso = TSO(clock)
+    assert physical_of(tso.next()) == 5_000
+    clock.advance(123)
+    assert physical_of(tso.next()) == 5_123
+
+
+def test_tso_thread_safety():
+    tso = TSO(ManualClock(0))
+    out: list[int] = []
+    lock = threading.Lock()
+
+    def worker():
+        for _ in range(500):
+            ts = tso.next()
+            with lock:
+                out.append(ts)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(out)) == len(out), "duplicate timestamps issued"
+
+
+# ------------------------------------------------------------------- broker
+def test_broker_ordering_and_positions():
+    broker = LogBroker()
+    broker.create_channel("c")
+    for i in range(5):
+        pos = broker.publish("c", LogEntry(ts=i + 1, type=EntryType.COORD, payload={"i": i}))
+        assert pos == i
+    entries = broker.read("c", 2)
+    assert [e.payload["i"] for e in entries] == [2, 3, 4]
+    with pytest.raises(ValueError):
+        broker.publish("c", LogEntry(ts=1, type=EntryType.COORD, payload={}))  # out of order
+
+
+def test_subscription_poll_and_seek():
+    broker = LogBroker()
+    broker.create_channel("c")
+    sub = Subscription(broker, "c")
+    for i in range(4):
+        broker.publish("c", LogEntry(ts=i + 1, type=EntryType.COORD, payload={"i": i}))
+    got = sub.poll()
+    assert [e.payload["i"] for e in got] == [0, 1, 2, 3]
+    assert sub.poll() == []
+    sub.seek(1)
+    assert [e.payload["i"] for e in sub.poll()] == [1, 2, 3]
+
+
+def test_time_ticks_update_watermark():
+    broker = LogBroker()
+    broker.create_channel("c")
+    sub = Subscription(broker, "c")
+    broker.publish("c", LogEntry(ts=10, type=EntryType.TIME_TICK, payload={}))
+    broker.publish("c", LogEntry(ts=20, type=EntryType.INSERT, payload={}))
+    broker.publish("c", LogEntry(ts=30, type=EntryType.TIME_TICK, payload={}))
+    sub.poll()
+    assert sub.last_tick_seen == 30
+    assert broker.last_tick("c") == 30
+
+
+def test_truncate_before():
+    broker = LogBroker()
+    broker.create_channel("c")
+    for i in range(10):
+        broker.publish("c", LogEntry(ts=(i + 1) * 10, type=EntryType.COORD, payload={}))
+    dropped = broker.truncate_before("c", 55)
+    assert dropped == 5
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=50), st.integers(1, 8))
+def test_shard_of_pk_stable_and_in_range(pks, shards):
+    for pk in pks:
+        s = shard_of_pk(pk, shards)
+        assert 0 <= s < shards
+        assert s == shard_of_pk(pk, shards)
+
+
+# --------------------------------------------------------------- meta store
+def test_meta_cas_and_watch():
+    ms = MetaStore()
+    events = []
+    ms.watch("a/", lambda k, v: events.append((k, v)))
+    rev = ms.put("a/x", {"v": 1})
+    assert ms.cas("a/x", rev, {"v": 2})
+    assert not ms.cas("a/x", rev, {"v": 3})  # stale rev
+    assert ms.get("a/x") == {"v": 2}
+    assert not ms.cas("a/new", 5, {})  # create requires expected None
+    assert ms.cas("a/new", None, {"v": 0})
+    ms.delete("a/x")
+    keys = [k for k, _ in events]
+    assert keys == ["a/x", "a/x", "a/new", "a/x"]
+    assert events[-1][1] is None  # delete notification
+
+
+def test_meta_lease_expiry():
+    clock = ManualClock(0)
+    ms = MetaStore(clock)
+    lease = ms.grant_lease(ttl_ms=100)
+    ms.put("node/1", {"alive": True}, lease_id=lease)
+    assert ms.get("node/1") is not None
+    clock.advance(50)
+    ms.keepalive(lease)
+    clock.advance(80)
+    assert ms.expire_now() == []  # keepalive extended it
+    clock.advance(200)
+    assert "node/1" in ms.expire_now()
+    assert ms.get("node/1") is None
+
+
+def test_meta_isolation():
+    ms = MetaStore()
+    value = {"nested": [1, 2]}
+    ms.put("k", value)
+    value["nested"].append(3)  # caller mutation must not leak in
+    assert ms.get("k") == {"nested": [1, 2]}
+    got = ms.get("k")
+    got["nested"].append(4)  # reader mutation must not leak back
+    assert ms.get("k") == {"nested": [1, 2]}
+
+
+# -------------------------------------------------------------- object store
+@pytest.mark.parametrize("factory", [MemoryObjectStore, None])
+def test_object_store_semantics(tmp_path, factory):
+    store = factory() if factory else FileObjectStore(str(tmp_path / "os"))
+    meta = store.put("a/b/c", b"hello")
+    assert meta.size == 5
+    assert store.get("a/b/c") == b"hello"
+    assert store.exists("a/b/c")
+    store.put("a/b/d", b"x")
+    keys = [m.key for m in store.list("a/b/")]
+    assert keys == ["a/b/c", "a/b/d"]
+    store.delete("a/b/c")
+    assert not store.exists("a/b/c")
+    with pytest.raises(KeyError):
+        store.get("a/b/c")

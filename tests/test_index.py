@@ -1,0 +1,143 @@
+"""Index library: exactness of FLAT, recall thresholds for ANN indexes,
+save/load, MVCC valid-masks, attribute filtering, auto-tuning."""
+
+import numpy as np
+import pytest
+
+from repro.core.collection import Metric
+from repro.index import FlatIndex, IndexSpec, create_index
+from repro.index.attribute import FilterExpr, LabelIndex, SortedListIndex
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    # clustered data (ANN-friendlier than pure gaussian, like SIFT)
+    centers = rng.standard_normal((20, 32)) * 4
+    base = (centers[rng.integers(0, 20, 4000)] + rng.standard_normal((4000, 32))).astype(np.float32)
+    queries = (centers[rng.integers(0, 20, 16)] + rng.standard_normal((16, 32))).astype(np.float32)
+    return base, queries
+
+
+def brute_force(base, queries, k, metric=Metric.L2):
+    if metric is Metric.L2:
+        d = np.sum(queries**2, 1, keepdims=True) - 2 * queries @ base.T + np.sum(base**2, 1)
+        return np.argsort(d, axis=1)[:, :k]
+    return np.argsort(-(queries @ base.T), axis=1)[:, :k]
+
+
+def recall_of(idx, gt):
+    hits = sum(len(set(idx[r].tolist()) & set(gt[r].tolist())) for r in range(len(gt)))
+    return hits / gt.size
+
+
+def test_flat_is_exact(data):
+    base, queries = data
+    gt = brute_force(base, queries, 10)
+    flat = FlatIndex(metric=Metric.L2)
+    flat.build(base)
+    _s, i = flat.search(queries, 10)
+    assert recall_of(i, gt) == 1.0
+
+
+CASES = [
+    ("sq", {}, 0.95),
+    ("ivf_flat", {"nlist": 32, "nprobe": 8}, 0.80),
+    ("ivf_sq", {"nlist": 32, "nprobe": 8}, 0.75),
+    ("ivf_pq", {"nlist": 16, "nprobe": 8, "m": 8}, 0.35),
+    ("pq", {"m": 8}, 0.35),
+    ("opq", {"m": 8}, 0.35),
+    ("hnsw", {"m": 16, "ef_construction": 100, "ef_search": 128}, 0.80),
+    ("bucket", {"target_bucket_rows": 96, "replicas": 2, "nprobe_buckets": 16}, 0.70),
+]
+
+
+@pytest.mark.parametrize("kind,params,min_recall", CASES)
+def test_index_recall_and_roundtrip(data, kind, params, min_recall):
+    base, queries = data
+    k = 10
+    gt = brute_force(base, queries, k)
+    idx = create_index(IndexSpec(kind=kind, metric=Metric.L2, params=params))
+    idx.build(base)
+    s, i = idx.search(queries, k)
+    r = recall_of(i, gt)
+    assert r >= min_recall, f"{kind} recall {r} < {min_recall}"
+    # serialization roundtrip is bit-identical in results
+    idx2 = type(idx).load(idx.save())
+    s2, i2 = idx2.search(queries, k)
+    np.testing.assert_array_equal(i, i2)
+
+
+def test_ip_metric(data):
+    base, queries = data
+    gt = brute_force(base, queries, 10, Metric.IP)
+    idx = create_index(IndexSpec(kind="ivf_flat", metric=Metric.IP,
+                                 params={"nlist": 32, "nprobe": 16}))
+    idx.build(base)
+    _s, i = idx.search(queries, 10)
+    assert recall_of(i, gt) >= 0.7
+
+
+def test_valid_mask_filters_results(data):
+    base, queries = data
+    valid = np.zeros(len(base), bool)
+    valid[: len(base) // 2] = True
+    for kind, params, _r in CASES[:4]:
+        idx = create_index(IndexSpec(kind=kind, metric=Metric.L2, params=params))
+        idx.build(base)
+        _s, i = idx.search(queries, 10, valid=valid)
+        live = i[i >= 0]
+        assert (live < len(base) // 2).all(), f"{kind} leaked masked rows"
+
+
+def test_hnsw_valid_mask(data):
+    base, queries = data
+    valid = np.zeros(len(base), bool)
+    valid[::2] = True
+    idx = create_index(IndexSpec(kind="hnsw", metric=Metric.L2,
+                                 params={"m": 8, "ef_construction": 40, "ef_search": 64}))
+    idx.build(base)
+    _s, i = idx.search(queries, 5, valid=valid)
+    live = i[i >= 0]
+    assert (live % 2 == 0).all()
+
+
+# ------------------------------------------------------------- attributes
+def test_sorted_list_ranges():
+    vals = np.array([5.0, 1.0, 3.0, 9.0, 7.0])
+    sl = SortedListIndex(vals)
+    np.testing.assert_array_equal(sl.range_mask(lo=3, hi=7), [True, False, True, False, True])
+    np.testing.assert_array_equal(sl.range_mask(lo=3, hi=7, lo_open=True, hi_open=True),
+                                  [True, False, False, False, False])
+
+
+def test_label_postings():
+    vals = np.array(["a", "b", "a", "c"])
+    li = LabelIndex(vals)
+    np.testing.assert_array_equal(li.eq_mask("a"), [True, False, True, False])
+    np.testing.assert_array_equal(li.in_mask(["b", "c"]), [False, True, False, True])
+
+
+def test_filter_expr():
+    cols = {"price": np.array([10.0, 200.0, 50.0]), "stock": np.array([0, 5, 3])}
+    m = FilterExpr("price < 100 and stock > 0").evaluate(cols, 3)
+    np.testing.assert_array_equal(m, [False, False, True])
+    m = FilterExpr("not (price >= 50)").evaluate(cols, 3)
+    np.testing.assert_array_equal(m, [True, False, False])
+    m = FilterExpr("100 > price").evaluate(cols, 3)  # flipped comparison
+    np.testing.assert_array_equal(m, [True, False, True])
+    with pytest.raises(ValueError):
+        FilterExpr("__import__('os')")
+
+
+# --------------------------------------------------------------- autotune
+def test_bohb_finds_working_config(data):
+    from repro.index.autotune import bohb_tune
+
+    base, queries = data
+    res = bohb_tune("ivf_flat", base[:2000], queries[:8], k=10, max_trials=6,
+                    min_budget_rows=500, seed=3)
+    assert res.best_config["nlist"] in [16, 32, 64, 128, 256]
+    assert len(res.trials) == 6
+    best_recall = max(t.recall for t in res.trials)
+    assert best_recall >= 0.6

@@ -1,0 +1,214 @@
+"""End-to-end behaviour of the Manu system: ingestion through the log
+backbone, delta consistency, sealing/indexing, failover, elasticity,
+time travel, filtering, batching, dedup."""
+
+import numpy as np
+import pytest
+
+from repro.core import FieldSchema, FieldType, ManuConfig, ManuSystem, Metric
+
+
+def brute_force(base, queries, k):
+    d = np.sum(queries**2, 1, keepdims=True) - 2 * queries @ base.T + np.sum(base**2, 1)
+    return np.argsort(d, axis=1)[:, :k]
+
+
+@pytest.fixture
+def system():
+    return ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=400, slice_rows=128,
+                                 num_shards=2))
+
+
+def ingest(coll, rng, n, dim, batches=4):
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    step = n // batches
+    for i in range(batches):
+        coll.insert({"vector": vecs[i * step : (i + 1) * step]})
+    return vecs
+
+
+def test_strong_consistency_sees_all_inserts(system, rng):
+    coll = system.create_collection("c", dim=16)
+    vecs = ingest(coll, rng, 1200, 16)
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    res = coll.search(q, limit=5, staleness_ms=0.0)
+    gt = brute_force(vecs, q, 5)
+    hits = sum(len(set(res.pks[r].tolist()) & set(gt[r].tolist())) for r in range(4))
+    assert hits / 20 >= 0.9  # growing-slice temp index is approximate
+
+
+def test_flush_seal_index_build_improves_to_exact(system, rng):
+    coll = system.create_collection("c", dim=16)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 8, "nprobe": 8})
+    vecs = ingest(coll, rng, 1200, 16)
+    coll.flush()
+    assert system.stats()["index_builds"] >= 2
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    res = coll.search(q, limit=5, staleness_ms=0.0)
+    gt = brute_force(vecs, q, 5)
+    hits = sum(len(set(res.pks[r].tolist()) & set(gt[r].tolist())) for r in range(4))
+    assert hits / 20 == 1.0  # nprobe == nlist: exhaustive => exact
+
+
+def test_deletes_respect_mvcc_and_time_travel(system, rng):
+    coll = system.create_collection("c", dim=16)
+    vecs = ingest(coll, rng, 800, 16)
+    q = rng.standard_normal((1, 16)).astype(np.float32)
+    before = coll.search(q, limit=5, staleness_ms=0.0)
+    victims = before.pks[0][:2]
+    coll.delete(victims)
+    after = coll.search(q, limit=5, staleness_ms=0.0)
+    assert not set(victims.tolist()) & set(after.pks[0].tolist())
+    # time travel to before the delete resurrects them
+    old = coll.search(q, limit=5, time_travel_ts=before.query_ts)
+    assert set(victims.tolist()) <= set(old.pks[0].tolist())
+
+
+def test_restore_collection_checkpoint_replay(system, rng):
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 600, 8)
+    coll.flush()
+    system.checkpoint_collection("c")
+    mark = system.tso.last_issued()
+    coll.insert({"vector": rng.standard_normal((100, 8)).astype(np.float32)})
+    coll.delete(np.arange(10))
+    restored = system.restore_collection("c", mark)
+    assert restored.num_rows() == 600  # no late insert, no late delete
+    assert set(np.arange(10).tolist()) <= set(restored.pks().tolist())
+    # restored snapshot is searchable
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    s, p = restored.search(q, 3)
+    assert (p >= 0).all()
+
+
+def test_query_node_failover_preserves_results(system, rng):
+    coll = system.create_collection("c", dim=16)
+    coll.create_index("vector", kind="flat")
+    vecs = ingest(coll, rng, 1200, 16)
+    coll.flush()
+    q = rng.standard_normal((3, 16)).astype(np.float32)
+    before = coll.search(q, limit=10, staleness_ms=0.0)
+
+    victim = next(iter(system.query_coord.assignment.values()))
+    system.kill_query_node(victim)
+    dead = system.recover_failures()
+    assert victim in dead
+    after = coll.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(
+        np.sort(before.pks, axis=1), np.sort(after.pks, axis=1)
+    )
+
+
+def test_scale_up_down_rebalances(system, rng):
+    coll = system.create_collection("c", dim=8, seal_rows=200)
+    ingest(coll, rng, 1000, 8, batches=5)
+    coll.flush()
+    new_node = system.add_query_node()
+    counts = {n: len(st.segments) for n, st in system.query_coord.nodes.items()}
+    assert max(counts.values()) - min(counts.values()) <= 1
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    r1 = coll.search(q, limit=5, staleness_ms=0.0)
+    system.remove_query_node(new_node)
+    r2 = coll.search(q, limit=5, staleness_ms=0.0)
+    np.testing.assert_array_equal(np.sort(r1.pks, 1), np.sort(r2.pks, 1))
+
+
+def test_attribute_filtering(system, rng):
+    coll = system.create_collection(
+        "c", dim=8,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT)],
+    )
+    vecs = rng.standard_normal((500, 8)).astype(np.float32)
+    price = rng.uniform(0, 100, 500).astype(np.float64)
+    coll.insert({"vector": vecs, "price": price})
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    res = coll.query(q, limit=10, expr="price < 20", staleness_ms=0.0)
+    live = res.pks[res.pks >= 0]
+    assert len(live) and (price[live] < 20).all()
+
+
+def test_read_your_writes_session(system, rng):
+    coll = system.create_collection("c", dim=8)
+    coll.insert({"vector": rng.standard_normal((50, 8)).astype(np.float32)})
+    q = rng.standard_normal((1, 8)).astype(np.float32)
+    res = coll.search(q, limit=5, read_your_writes=True)
+    assert (res.pks[0] >= 0).sum() == 5
+
+
+def test_batching_proxy_groups_requests(system, rng):
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 400, 8, batches=2)
+    qs = rng.standard_normal((6, 8)).astype(np.float32)
+    from repro.core.consistency import GuaranteeTs
+    from repro.core.timestamp import INFINITE_STALENESS
+
+    for r in range(6):
+        system.batcher.submit(coll.info, qs[r : r + 1], 4,
+                              GuaranteeTs(system.tso.next(), 0.0))
+    results = system.batcher.flush(wait_fn=system._cooperative_wait)
+    assert len(results) == 6
+    direct = coll.search(qs, limit=4, staleness_ms=0.0)
+    for r in range(6):
+        np.testing.assert_array_equal(results[r].pks[0], direct.pks[r])
+
+
+def test_proxy_dedups_duplicate_segments(system, rng):
+    """A segment may live on two nodes during redistribution — results must
+    still contain unique pks (paper §3.6)."""
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 600, 8)
+    coll.flush()
+    # force-load every sealed segment onto BOTH query nodes
+    sealed = system.data_coord.sealed_segments("c")
+    for node in system.query_nodes.values():
+        for sid in sealed:
+            node.load_sealed("c", sid)
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    res = coll.search(q, limit=10, staleness_ms=0.0)
+    for r in range(2):
+        live = res.pks[r][res.pks[r] >= 0]
+        assert len(set(live.tolist())) == len(live)
+
+
+def test_hedged_request_straggler(system, rng):
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 400, 8, batches=2)
+    coll.flush()
+    # make one node a straggler
+    straggler = list(system.query_nodes.values())[0]
+    straggler.inject_delay_s = 0.5
+    q = rng.standard_normal((1, 8)).astype(np.float32)
+    res = coll.search(q, limit=5, staleness_ms=0.0, hedge_timeout_s=0.05)
+    assert (res.pks[0] >= 0).any()
+
+
+def test_wal_to_binlog_column_equivalence(system, rng):
+    """Data nodes' columnar binlog must reproduce the WAL rows exactly."""
+    from repro.core.binlog import load_segment, read_binlog_column
+
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 500, 8)
+    coll.flush()
+    sealed = system.data_coord.sealed_segments("c")
+    assert sealed
+    total = 0
+    for sid in sealed:
+        seg = load_segment(system.store, "c", sid)
+        col = read_binlog_column(system.store, "c", sid, "vector")
+        np.testing.assert_array_equal(seg.vectors(), col)
+        pks = seg.pks()
+        np.testing.assert_array_equal(vecs[pks], seg.vectors())
+        total += seg.num_rows
+    assert total == 500
+
+
+def test_eventual_vs_strong_visibility(rng):
+    """With no ticks pumped, eventual reads may miss fresh rows but strong
+    reads must wait for them."""
+    system = ManuSystem(ManuConfig(num_query_nodes=1, seal_rows=10_000,
+                                   tick_interval_ms=1e12))  # ticks ~never fire
+    coll = system.create_collection("c", dim=4)
+    coll.insert({"vector": rng.standard_normal((20, 4)).astype(np.float32)})
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    res = coll.search(q, limit=5, staleness_ms=0.0)  # strong must still work
+    assert (res.pks[0] >= 0).sum() == 5

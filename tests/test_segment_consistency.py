@@ -1,0 +1,142 @@
+"""Segment MVCC + delta-consistency semantics (incl. hypothesis properties)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import ConsistencyLevel, GuaranteeTs, staleness_ms_of
+from repro.core.segment import Segment, merge_segments
+from repro.core.timestamp import INFINITE_STALENESS, pack
+
+
+def make_segment(n=100, dim=8, ts_start=100):
+    seg = Segment(1, "c", 0, dim)
+    rng = np.random.default_rng(0)
+    seg.append(
+        np.arange(n),
+        rng.standard_normal((n, dim)).astype(np.float32),
+        np.arange(ts_start, ts_start + n, dtype=np.int64),
+    )
+    return seg
+
+
+def test_visibility_by_timestamp():
+    seg = make_segment(10, ts_start=100)
+    assert seg.visible_mask(99).sum() == 0
+    assert seg.visible_mask(104).sum() == 5  # rows ts 100..104
+    assert seg.visible_mask(10_000).sum() == 10
+
+
+def test_delete_mvcc():
+    seg = make_segment(10, ts_start=100)
+    seg.delete(np.array([3, 4]), ts=200)
+    assert seg.visible_mask(150).sum() == 10  # before delete: all visible
+    m = seg.visible_mask(250)
+    assert m.sum() == 8 and not m[3] and not m[4]
+    # time travel: a query pinned before the delete still sees the rows
+    assert seg.visible_mask(199)[3]
+
+
+@given(
+    n=st.integers(1, 60),
+    delete_frac=st.floats(0, 1),
+    query_offset=st.integers(-5, 70),
+)
+@settings(max_examples=40, deadline=None)
+def test_visibility_property(n, delete_frac, query_offset):
+    """Property: visible(ts) == {rows inserted <= ts} - {deleted <= ts}."""
+    seg = Segment(1, "c", 0, 4)
+    rng = np.random.default_rng(1)
+    ts_col = np.arange(100, 100 + n, dtype=np.int64)
+    seg.append(np.arange(n), rng.standard_normal((n, 4)).astype(np.float32), ts_col)
+    n_del = int(n * delete_frac)
+    del_ts = 100 + n + 10
+    if n_del:
+        seg.delete(np.arange(n_del), ts=del_ts)
+    q_ts = 100 + query_offset
+    mask = seg.visible_mask(q_ts)
+    for i in range(n):
+        expected = ts_col[i] <= q_ts and not (i < n_del and del_ts <= q_ts)
+        assert mask[i] == expected
+
+
+def test_binlog_roundtrip_preserves_everything():
+    seg = make_segment(50)
+    seg.delete(np.array([7]), ts=500)
+    seg.checkpoint_pos = 42
+    seg.seal()
+    blob = seg.to_binlog()
+    seg2 = Segment.from_binlog("c", blob)
+    assert seg2.num_rows == 50
+    assert seg2.checkpoint_pos == 42
+    np.testing.assert_array_equal(seg.pks(), seg2.pks())
+    np.testing.assert_array_equal(seg.vectors(), seg2.vectors())
+    np.testing.assert_array_equal(seg.visible_mask(10_000), seg2.visible_mask(10_000))
+
+
+def test_merge_segments_drops_tombstones():
+    a = make_segment(20, ts_start=100)
+    b = make_segment(20, ts_start=300)
+    a.delete(np.array([1, 2]), ts=400)
+    a.seal(), b.seal()
+    merged = merge_segments(99, [a, b])
+    assert merged.num_rows == 38  # 40 - 2 deleted
+    assert merged.state.value == "sealed"
+
+
+def test_slices_and_tail():
+    seg = Segment(1, "c", 0, 4, slice_rows=10)
+    rng = np.random.default_rng(0)
+    seg.append(np.arange(25), rng.standard_normal((25, 4)).astype(np.float32),
+               np.arange(25, dtype=np.int64))
+    assert seg.full_slices() == [0, 1]
+    assert seg.slice_bounds(1) == (10, 20)
+    assert seg.tail_rows() == (20, 25)
+
+
+# ----------------------------------------------------------- delta guarantee
+def test_guarantee_strong_vs_eventual():
+    q_ts = pack(10_000, 0)
+    strong = GuaranteeTs(query_ts=q_ts, staleness_ms=0.0)
+    eventual = GuaranteeTs(query_ts=q_ts, staleness_ms=INFINITE_STALENESS)
+    old_watermark = pack(9_000, 0)
+    fresh_watermark = pack(10_001, 0)
+    assert not strong.satisfied_by(old_watermark)
+    assert strong.satisfied_by(fresh_watermark)
+    assert eventual.satisfied_by(old_watermark)
+
+
+@given(
+    q_phys=st.integers(1_000, 1_000_000),
+    lag_ms=st.integers(0, 10_000),
+    tau=st.one_of(st.just(float("inf")), st.floats(0, 10_000)),
+)
+@settings(max_examples=100, deadline=None)
+def test_guarantee_property(q_phys, lag_ms, tau):
+    """Property: satisfied iff watermark lag < tau (or watermark >= query)."""
+    q_ts = pack(q_phys, 0)
+    wm = pack(q_phys - lag_ms, 0)
+    g = GuaranteeTs(query_ts=q_ts, staleness_ms=tau)
+    expected = (lag_ms < tau) or (wm >= q_ts)
+    assert g.satisfied_by(wm) == expected
+    # the wait target is the *minimal* satisfying watermark
+    if not g.satisfied_by(wm) and tau != float("inf"):
+        target = g.wait_target_ts()
+        assert g.satisfied_by(target)
+        if target >= (1 << 18):  # minimality check only when un-clamped
+            assert not g.satisfied_by(target - (1 << 18))  # 1ms earlier fails
+
+
+def test_session_consistency_read_your_writes():
+    q_ts = pack(10_000, 0)
+    write_ts = pack(10_500, 0)  # user's write is *after* query issue? no: before next read
+    g = GuaranteeTs(query_ts=pack(11_000, 0), staleness_ms=INFINITE_STALENESS,
+                    session_ts=write_ts)
+    assert not g.satisfied_by(pack(10_400, 0))  # hasn't seen the write
+    assert g.satisfied_by(pack(10_500, 0))
+
+
+def test_consistency_levels():
+    assert staleness_ms_of(ConsistencyLevel.STRONG) == 0
+    assert staleness_ms_of(ConsistencyLevel.EVENTUAL) == INFINITE_STALENESS
+    assert staleness_ms_of(ConsistencyLevel.BOUNDED, 1234.0) == 1234.0

@@ -1,0 +1,57 @@
+"""End-to-end behaviour test for the paper's system: the full Manu
+lifecycle in one scenario — the "video recommendation" running example of
+§2 (streaming inserts, bounded-staleness search, deletes + audit via time
+travel, transparent failure recovery)."""
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem, Metric
+
+
+def test_video_recommendation_lifecycle():
+    rng = np.random.default_rng(42)
+    dim = 48
+    manu = ManuSystem(ManuConfig(num_query_nodes=2, num_index_nodes=1,
+                                 seal_rows=600, slice_rows=256))
+    videos = manu.create_collection("videos", dim=dim, metric=Metric.IP)
+    videos.create_index("vector", kind="ivf_flat", params={"nlist": 16, "nprobe": 16})
+
+    # day 0: catalogue ingest (normalized embeddings, IP similarity)
+    def embed(n):
+        v = rng.standard_normal((n, dim)).astype(np.float32)
+        return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+    catalogue = embed(2_400)
+    for lo in range(0, len(catalogue), 600):
+        videos.insert({"vector": catalogue[lo : lo + 600]})
+
+    user = embed(3)
+    # bounded staleness: a recommendation may lag up to 2s
+    recs = videos.search(user, limit=10, staleness_ms=2_000.0)
+    assert (recs.pks >= 0).all()
+
+    # a fresh upload must be visible to a strong read immediately
+    fresh = embed(1)
+    videos.insert({"vector": fresh})
+    fresh_pk = 2_400
+    hit = videos.search(fresh, limit=1, staleness_ms=0.0)
+    assert hit.pks[0, 0] == fresh_pk, "strong read must see the new upload"
+
+    # takedowns disappear; time travel for audit still sees them
+    before = videos.search(user[:1], limit=5, staleness_ms=0.0)
+    takedown = before.pks[0][:2]
+    videos.delete(takedown)
+    after = videos.search(user[:1], limit=5, staleness_ms=0.0)
+    assert not set(takedown.tolist()) & set(after.pks[0].tolist())
+    audit = videos.search(user[:1], limit=5, time_travel_ts=before.query_ts)
+    assert set(takedown.tolist()) <= set(audit.pks[0].tolist())
+
+    # node failure is transparent to serving
+    victim = next(iter(manu.query_coord.assignment.values()))
+    manu.kill_query_node(victim)
+    manu.recover_failures()
+    recovered = videos.search(user[:1], limit=5, staleness_ms=0.0)
+    np.testing.assert_array_equal(np.sort(recovered.pks, 1), np.sort(after.pks, 1))
+
+    st = manu.stats()
+    assert st["index_builds"] >= 4
