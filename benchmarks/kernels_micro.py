@@ -1,45 +1,100 @@
 """Kernel microbenchmarks: host fast path vs Pallas interpret (correctness
-path); on TPU the pallas path compiles natively."""
+path); on TPU the pallas path compiles natively.
+
+``REPRO_BENCH_SMOKE=1`` switches to reduced sizes so the suite doubles as
+a fast CI regression gate (seconds, not minutes).
+"""
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.l2_topk import l2_topk_pallas
 
-from .common import emit, timeit_us
+from .common import emit, python_dedup_merge, timeit_us
 
 import jax.numpy as jnp
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def merge_rows(rng) -> list[tuple[str, float, str]]:
+    """merge_topk vs the Python dedup loop: the §3.6 reduce stage at
+    nq queries x n_segments pools of k candidates each."""
+    nq, n_seg, k = (32, 8, 20) if SMOKE else (64, 16, 50)
+    m = n_seg * k
+    s = np.abs(rng.standard_normal((nq, m))).astype(np.float32)
+    p = rng.integers(0, m // 2, (nq, m)).astype(np.int64)  # heavy pk dup rate
+    p[rng.random((nq, m)) < 0.05] = -1
+    t_py = timeit_us(lambda: python_dedup_merge(s, p, k, "l2"), best_of=5)
+    t_vec = timeit_us(lambda: ops.merge_topk(s, p, k, "l2"), best_of=5)
+    speedup = t_py / max(t_vec, 1e-9)
+    return [
+        ("kern-merge_topk-python-loop", t_py, f"nq={nq},segs={n_seg},k={k}"),
+        ("kern-merge_topk-vectorized", t_vec,
+         f"nq={nq},segs={n_seg},k={k};speedup={speedup:.1f}x"),
+    ]
+
+
+def fused_scan_rows(rng) -> list[tuple[str, float, str]]:
+    """topk_scan_segmented vs one topk_scan dispatch per segment: the
+    batched-scan stage over many small segments."""
+    nq, n_seg, rows, dim, k = (8, 4, 256, 32, 10) if SMOKE else (64, 64, 256, 128, 50)
+    q = rng.standard_normal((nq, dim)).astype(np.float32)
+    bases = [rng.standard_normal((rows, dim)).astype(np.float32) for _ in range(n_seg)]
+    valids = [rng.random(rows) < 0.9 for _ in range(n_seg)]
+
+    def per_segment():
+        for b, v in zip(bases, valids):
+            ops.topk_scan(q, b, k, metric="l2", valid=v)
+
+    t_seg = timeit_us(per_segment, best_of=5)
+    t_fused = timeit_us(
+        lambda: ops.topk_scan_segmented(q, bases, k, metric="l2", valids=valids),
+        best_of=5,
+    )
+    speedup = t_seg / max(t_fused, 1e-9)
+    return [
+        ("kern-scan-per-segment", t_seg, f"nq={nq},segs={n_seg}x{rows}x{dim},k={k}"),
+        ("kern-scan-fused", t_fused,
+         f"nq={nq},segs={n_seg}x{rows}x{dim},k={k};speedup={speedup:.1f}x"),
+    ]
 
 
 def main() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     rows = []
-    q = rng.standard_normal((32, 128)).astype(np.float32)
-    x = rng.standard_normal((8_192, 128)).astype(np.float32)
-    rows.append(("kern-topk_scan-host", timeit_us(lambda: ops.topk_scan(q, x, 50)),
-                 "8192x128,k=50"))
+    n, nq, k = (1_024, 8, 10) if SMOKE else (8_192, 32, 50)
+    q = rng.standard_normal((nq, 128)).astype(np.float32)
+    x = rng.standard_normal((n, 128)).astype(np.float32)
+    rows.append(("kern-topk_scan-host", timeit_us(lambda: ops.topk_scan(q, x, k)),
+                 f"{n}x128,k={k}"))
     qj, xj = jnp.asarray(q), jnp.asarray(x)
-    vj = jnp.ones(8_192, jnp.int32)
+    vj = jnp.ones(n, jnp.int32)
     rows.append((
         "kern-l2topk-pallas-interpret",
-        timeit_us(lambda: l2_topk_pallas(qj[:32], xj, vj, 50, tq=32, tn=512,
+        timeit_us(lambda: l2_topk_pallas(qj, xj, vj, k, tq=max(8, nq), tn=512,
                                          interpret=True).__getitem__(0).block_until_ready(),
                   warmup=1, iters=1),
         "interpret-mode(correctness-path)",
     ))
     luts = rng.standard_normal((8, 16, 256)).astype(np.float32)
-    codes = rng.integers(0, 256, (8_192, 16)).astype(np.int32)
-    rows.append(("kern-pq_adc-host", timeit_us(lambda: ops.pq_adc_topk(luts, codes, 50)),
-                 "8192x16sub"))
+    codes = rng.integers(0, 256, (n, 16)).astype(np.int32)
+    rows.append(("kern-pq_adc-host", timeit_us(lambda: ops.pq_adc_topk(luts, codes, k)),
+                 f"{n}x16sub"))
     vmin, vmax = x.min(0), x.max(0)
     c = ops.sq_encode(x, vmin, vmax)
     rows.append(("kern-sq_scan-host",
-                 timeit_us(lambda: ops.sq_topk_scan(q, c, vmin, vmax, 50)), "8192x128-int8"))
+                 timeit_us(lambda: ops.sq_topk_scan(q, c, vmin, vmax, k)),
+                 f"{n}x128-int8"))
     cents = rng.standard_normal((256, 128)).astype(np.float32)
     rows.append(("kern-kmeans_assign-host",
-                 timeit_us(lambda: ops.kmeans_assign(x, cents)), "8192rows-256cents"))
+                 timeit_us(lambda: ops.kmeans_assign(x, cents)), f"{n}rows-256cents"))
+    rows += merge_rows(rng)
+    rows += fused_scan_rows(rng)
     return rows
 
 

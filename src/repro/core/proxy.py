@@ -21,6 +21,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..kernels import ops
 from .collection import CollectionInfo, Metric
 from .consistency import GuaranteeTs
 from .coordinator import QueryCoordinator
@@ -158,24 +159,15 @@ class Proxy:
                 guarantee.query_ts,
                 waited_ms,
             )
-        s = np.concatenate([p[0] for p in partials], axis=1)
-        p = np.concatenate([p[1] for p in partials], axis=1)
-        out_s = np.full((nq, k), np.inf if metric is Metric.L2 else -np.inf, np.float32)
-        out_p = np.full((nq, k), -1, np.int64)
-        order = np.argsort(s if metric is Metric.L2 else -s, axis=1, kind="stable")
-        for r in range(nq):
-            seen: set[int] = set()
-            slot = 0
-            for j in order[r]:
-                pk = int(p[r, j])
-                if pk < 0 or pk in seen or not np.isfinite(s[r, j]):
-                    continue
-                seen.add(pk)
-                out_s[r, slot] = s[r, j]
-                out_p[r, slot] = pk
-                slot += 1
-                if slot >= k:
-                    break
+        # Global reduce: segmented k-way merge of the node-wise partials
+        # with pk-dedup (a segment may surface from two nodes during
+        # redistribution) — vectorized in the merge_topk kernel.
+        out_s, out_p = ops.merge_topk(
+            np.concatenate([p[0] for p in partials], axis=1),
+            np.concatenate([p[1] for p in partials], axis=1),
+            k,
+            metric="l2" if metric is Metric.L2 else "ip",
+        )
         return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms)
 
     def _filters(self, node: QueryNode, info: CollectionInfo, filter_expr):
@@ -219,7 +211,9 @@ def _run_with_timeout(fn, timeout_s: float):
 
 class BatchingProxy:
     """Request batching (paper §3.6): requests of the same type are grouped
-    into one batch and handled together."""
+    into one batch and handled together.  Each flushed group runs through
+    ``Proxy.search`` and therefore the same fused-scan + ``merge_topk``
+    global reduce as single requests."""
 
     def __init__(self, proxy: Proxy, max_batch: int = 64):
         self.proxy = proxy

@@ -44,6 +44,46 @@ class SealedHandle:
 
 
 @dataclass
+class ScanUnit:
+    """One plannable piece of search work: rows, masks, and how to run them.
+
+    ``index`` set -> the unit executes through that index; otherwise
+    ``vectors`` holds the rows for a brute-force scan.  ``pks`` maps the
+    unit's local row indices back to primary keys.
+    """
+
+    segment_id: int
+    pks: np.ndarray
+    mask: np.ndarray  # visibility & delta-delete & attribute filter
+    index: VectorIndex | None = None
+    vectors: np.ndarray | None = None
+
+
+@dataclass
+class SearchPlan:
+    """Planner output: candidate units grouped by execution class.
+
+    The two brute classes run as ONE fused scan each
+    (``ops.topk_scan_segmented``); index-backed classes dispatch per
+    unit since every index owns its own structure.
+    """
+
+    indexed: list[ScanUnit] = field(default_factory=list)  # sealed, index loaded
+    brute_sealed: list[ScanUnit] = field(default_factory=list)  # sealed, no index
+    growing_slice: list[ScanUnit] = field(default_factory=list)  # temp slice index
+    brute_tail: list[ScanUnit] = field(default_factory=list)  # growing tail rows
+
+    def units(self) -> "list[ScanUnit]":
+        return self.indexed + self.brute_sealed + self.growing_slice + self.brute_tail
+
+
+def _map_pks(idx: np.ndarray, pks: np.ndarray) -> np.ndarray:
+    """Local row indices -> primary keys; -1 slots pass through."""
+    pks = np.asarray(pks)
+    return np.where(idx >= 0, pks[np.clip(idx, 0, len(pks) - 1)], -1)
+
+
+@dataclass
 class GrowingState:
     segment: Segment
     slice_index_built: dict[int, VectorIndex] = field(default_factory=dict)
@@ -249,6 +289,97 @@ class QueryNode:
             mask = mask & dd
         return mask
 
+    def plan_search(
+        self,
+        collection: str,
+        ts: int,
+        filter_masks: "dict[int, np.ndarray] | None" = None,
+    ) -> SearchPlan:
+        """Gather every candidate (segment, visibility, filter) unit for a
+        request pinned at ``ts`` and group it by execution class."""
+        plan = SearchPlan()
+
+        # ---- sealed segments: indexed or brute ----
+        for (coll, sid), handle in self.sealed.items():
+            if coll != collection:
+                continue
+            seg = handle.segment
+            if seg.num_rows == 0:
+                continue
+            mask = self._visible(collection, seg, ts)
+            if filter_masks and sid in filter_masks:
+                mask = mask & filter_masks[sid]
+            if not mask.any():
+                continue
+            if handle.index is not None:
+                plan.indexed.append(
+                    ScanUnit(sid, seg.pks(), mask, index=handle.index)
+                )
+            else:
+                plan.brute_sealed.append(
+                    ScanUnit(sid, seg.pks(), mask, vectors=seg.vectors())
+                )
+
+        # ---- growing segments: temp slice indexes + brute tail ----
+        for (coll, sid), gs in self.growing.items():
+            if coll != collection:
+                continue
+            seg = gs.segment
+            if seg.num_rows == 0:
+                continue
+            mask = self._visible(collection, seg, ts)
+            if filter_masks and sid in filter_masks:
+                mask = mask & filter_masks[sid]
+            pks = seg.pks()
+            covered = np.zeros(seg.num_rows, dtype=bool)
+            for s_idx, temp in gs.slice_index_built.items():
+                lo, hi = seg.slice_bounds(s_idx)
+                covered[lo:hi] = True
+                if not mask[lo:hi].any():
+                    continue
+                plan.growing_slice.append(
+                    ScanUnit(sid, pks[lo:hi], mask[lo:hi], index=temp)
+                )
+            # tail = rows not covered by any temp index yet
+            tail_mask = mask & ~covered
+            if tail_mask.any():
+                plan.brute_tail.append(
+                    ScanUnit(sid, pks, tail_mask, vectors=seg.vectors())
+                )
+        return plan
+
+    def _execute_plan(
+        self, plan: SearchPlan, queries: np.ndarray, k: int, metric: Metric
+    ) -> tuple["list[np.ndarray]", "list[np.ndarray]"]:
+        """Run a plan's units and return per-unit top-k candidate pools."""
+        from ..kernels import ops
+
+        metric_str = "l2" if metric is Metric.L2 else "ip"
+        pool_s: list[np.ndarray] = []
+        pool_p: list[np.ndarray] = []
+        # Index-backed units dispatch per index (each owns its structure).
+        for unit in plan.indexed + plan.growing_slice:
+            s, i = unit.index.search(queries, k, valid=unit.mask)
+            pool_s.append(s)
+            pool_p.append(_map_pks(i, unit.pks))
+        # Brute classes run as one fused scan per class: a single shared
+        # distance contraction, per-segment top-k extracted from it.
+        for units in (plan.brute_sealed, plan.brute_tail):
+            if not units:
+                continue
+            s, i = ops.topk_scan_segmented(
+                queries,
+                [u.vectors for u in units],
+                k,
+                metric=metric_str,
+                valids=[u.mask for u in units],
+            )
+            for j, unit in enumerate(units):
+                blk = slice(j * k, (j + 1) * k)
+                pool_s.append(s[:, blk])
+                pool_p.append(_map_pks(i[:, blk], unit.pks))
+        return pool_s, pool_p
+
     def search(
         self,
         collection: str,
@@ -262,6 +393,12 @@ class QueryNode:
 
         ``filter_masks`` optionally maps segment_id -> row mask (attribute
         filtering, resolved by the proxy per segment).
+
+        Execution is plan -> fused scans -> vectorized merge: the planner
+        groups candidate segments by execution class, brute classes run as
+        one batched scan each, and the node-wise reduce (pk-dedup,
+        keep-best-occurrence) is the ``merge_topk`` kernel rather than a
+        per-row Python loop.
         """
         if not self.alive:
             raise RuntimeError(f"query node {self.node_id} is down")
@@ -270,73 +407,11 @@ class QueryNode:
 
             _t.sleep(self.inject_delay_s)
         self.search_count += 1
-        ts = guarantee.query_ts
-        nq = len(queries)
-        pool_s: list[np.ndarray] = []
-        pool_p: list[np.ndarray] = []
-
         from ..kernels import ops
 
-        def scan_metric_str() -> str:
-            return "l2" if metric is Metric.L2 else "ip"
-
-        # ---- sealed segments (indexed or brute) ----
-        for (coll, sid), handle in self.sealed.items():
-            if coll != collection:
-                continue
-            seg = handle.segment
-            if seg.num_rows == 0:
-                continue
-            mask = self._visible(collection, seg, ts)
-            if filter_masks and sid in filter_masks:
-                mask = mask & filter_masks[sid]
-            if not mask.any():
-                continue
-            if handle.index is not None:
-                s, i = handle.index.search(queries, k, valid=mask)
-            else:
-                s, i = ops.topk_scan(
-                    queries, seg.vectors(), k, metric=scan_metric_str(), valid=mask
-                )
-            pks = seg.pks()
-            p = np.where(i >= 0, pks[np.clip(i, 0, len(pks) - 1)], -1)
-            pool_s.append(s)
-            pool_p.append(p)
-
-        # ---- growing segments (slice temp indexes + brute tail) ----
-        for (coll, sid), gs in self.growing.items():
-            if coll != collection:
-                continue
-            seg = gs.segment
-            if seg.num_rows == 0:
-                continue
-            mask = self._visible(collection, seg, ts)
-            if filter_masks and sid in filter_masks:
-                mask = mask & filter_masks[sid]
-            pks = seg.pks()
-            vecs = seg.vectors()
-            for s_idx, temp in gs.slice_index_built.items():
-                lo, hi = seg.slice_bounds(s_idx)
-                if not mask[lo:hi].any():
-                    continue
-                s, i = temp.search(queries, k, valid=mask[lo:hi])
-                p = np.where(i >= 0, pks[lo:hi][np.clip(i, 0, hi - lo - 1)], -1)
-                pool_s.append(s)
-                pool_p.append(p)
-            # tail (and any slice without a temp index yet)
-            built = set(gs.slice_index_built)
-            covered = np.zeros(seg.num_rows, dtype=bool)
-            for s_idx in built:
-                lo, hi = seg.slice_bounds(s_idx)
-                covered[lo:hi] = True
-            tail_mask = mask & ~covered
-            if tail_mask.any():
-                s, i = ops.topk_scan(
-                    queries, vecs, k, metric=scan_metric_str(), valid=tail_mask
-                )
-                p = np.where(i >= 0, pks[np.clip(i, 0, len(pks) - 1)], -1)
-                pool_s.append(s)
-                pool_p.append(p)
+        nq = len(queries)
+        plan = self.plan_search(collection, guarantee.query_ts, filter_masks)
+        pool_s, pool_p = self._execute_plan(plan, queries, k, metric)
 
         if not pool_s:
             fill = np.inf if metric is Metric.L2 else -np.inf
@@ -344,26 +419,9 @@ class QueryNode:
                 np.full((nq, k), fill, np.float32),
                 np.full((nq, k), -1, np.int64),
             )
-
-        s = np.concatenate(pool_s, axis=1)
-        p = np.concatenate(pool_p, axis=1)
-        # node-wise merge with pk dedup (keep best occurrence)
-        out_s = np.full((nq, k), np.inf if metric is Metric.L2 else -np.inf, np.float32)
-        out_p = np.full((nq, k), -1, np.int64)
-        order = np.argsort(s if metric is Metric.L2 else -s, axis=1, kind="stable")
-        for r in range(nq):
-            seen: set[int] = set()
-            slot = 0
-            for j in order[r]:
-                pk = int(p[r, j])
-                if pk < 0 or pk in seen:
-                    continue
-                if not np.isfinite(s[r, j]):
-                    continue
-                seen.add(pk)
-                out_s[r, slot] = s[r, j]
-                out_p[r, slot] = pk
-                slot += 1
-                if slot >= k:
-                    break
-        return out_s, out_p
+        return ops.merge_topk(
+            np.concatenate(pool_s, axis=1),
+            np.concatenate(pool_p, axis=1),
+            k,
+            metric="l2" if metric is Metric.L2 else "ip",
+        )

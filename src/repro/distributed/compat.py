@@ -1,0 +1,46 @@
+"""Version-compat shims for JAX API drift.
+
+``shard_map`` has moved twice: older releases expose it only as
+``jax.experimental.shard_map.shard_map`` with a ``check_rep`` kwarg;
+newer ones promote it to ``jax.shard_map`` and rename the kwarg to
+``check_vma``.  ``shard_map`` below resolves whichever spelling the
+installed JAX provides, so the distributed code runs unchanged across
+the range pinned in pyproject.toml.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _resolve():
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return fn, check_kw
+
+
+_SHARD_MAP, _CHECK_KW = _resolve()
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg normalized."""
+    return _SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KW: check}
+    )
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a flat dict.
+
+    Older JAX returns a one-element list of per-program dicts; newer JAX
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

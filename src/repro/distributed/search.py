@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 
 def _local_topk(queries, base_shard, k, metric, row_offset, valid=None):
     q = queries.astype(jnp.float32)
@@ -70,12 +72,12 @@ def make_distributed_search(mesh: Mesh, k: int, metric: str = "l2"):
             out_i = jnp.take_along_axis(cand_i, sel, axis=1)
             return out_v, out_i
 
-        out = jax.shard_map(
+        out = shard_map(
             local,
             mesh=mesh,
             in_specs=(P(None, None), P(axes, None), P(axes)),
             out_specs=(P(), P()),
-            check_vma=False,
+            check=False,
         )(queries, base, valid)
         vals, idx = out
         if metric == "l2":

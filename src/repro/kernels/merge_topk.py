@@ -1,0 +1,105 @@
+"""Segmented k-way top-k merge with pk-dedup — Pallas TPU kernel.
+
+The two-phase reduce (paper §3.6) pools per-segment / per-node top-k
+candidates into [NQ, M] score+pk tiles; this kernel folds them into the
+final per-query top-k while dropping duplicate primary keys (a row may
+surface from both a growing copy and the sealed segment, or from two
+nodes during segment hand-off).  Keep-best-occurrence semantics: for
+each pk the minimum key (L2 distance, negated IP similarity) wins.
+
+The body is the K-step min/argmin selection loop from ``topk_util`` with
+one extension: after emitting a winner, EVERY candidate carrying the
+same pk is masked out with a vectorized compare against the picked pk —
+the per-row dedup the host merge used to run as a Python loop.  The
+candidate pool [TQ, M] stays VMEM-resident across the whole loop (M is
+n_partials * k, a few thousand lanes at most); the grid tiles queries
+only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .topk_util import BIG_F32, NEG_I32
+
+DEFAULT_TQ = 128
+
+
+def _merge_kernel(
+    s_ref,  # [TQ, M] pooled candidate scores
+    p_ref,  # [TQ, M] int32 pks, -1 = empty slot
+    out_v_ref,  # [TQ, K]
+    out_p_ref,  # [TQ, K]
+    *,
+    k: int,
+    metric: str,
+):
+    s = s_ref[...].astype(jnp.float32)
+    p = p_ref[...]
+    key = s if metric == "l2" else -s
+    ok = (p >= 0) & (key < BIG_F32) & (key > -BIG_F32) & ~jnp.isnan(key)
+    key = jnp.where(ok, key, BIG_F32)
+    tq, m = key.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tq, m), 1)
+
+    def body(j, carry):
+        cand, ov, op = carry
+        row_min = jnp.min(cand, axis=1)
+        row_arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+        picked_oh = iota == row_arg[:, None]  # [TQ, M] one-hot
+        # integer one-hot reduce: exact for any int32 pk (no f32 rounding)
+        picked_pk = jnp.sum(jnp.where(picked_oh, p, 0), axis=1)
+        have = row_min < BIG_F32
+        picked_pk = jnp.where(have, picked_pk, NEG_I32)
+        ov = jax.lax.dynamic_update_slice(
+            ov, jnp.where(have, row_min, BIG_F32)[:, None], (0, j)
+        )
+        op = jax.lax.dynamic_update_slice(op, picked_pk[:, None], (0, j))
+        # pk-dedup: retire every occurrence of the picked pk, not just the
+        # winning slot (keep-best-occurrence)
+        kill = (p == picked_pk[:, None]) & have[:, None]
+        return jnp.where(kill, BIG_F32, cand), ov, op
+
+    out_v = jnp.full((tq, k), BIG_F32, jnp.float32)
+    out_p = jnp.full((tq, k), NEG_I32, jnp.int32)
+    _, out_v, out_p = jax.lax.fori_loop(0, k, body, (key, out_v, out_p))
+    if metric == "ip":
+        out_v = -out_v  # back to similarity scale (empty slots -> -BIG)
+    out_v_ref[...] = out_v
+    out_p_ref[...] = out_p
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tq", "interpret"))
+def merge_topk_pallas(
+    scores: jnp.ndarray,  # [NQ, M] padded to TQ multiple, M lane-aligned
+    pks: jnp.ndarray,  # [NQ, M] int32
+    k: int,
+    metric: str = "l2",
+    tq: int = DEFAULT_TQ,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    nq, m = scores.shape
+    assert nq % tq == 0, (nq, tq)
+    kernel = functools.partial(_merge_kernel, k=k, metric=metric)
+    out_v, out_p = pl.pallas_call(
+        kernel,
+        grid=(nq // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, m), lambda i: (i, 0)),
+            pl.BlockSpec((tq, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores, pks.astype(jnp.int32))
+    return out_v, out_p

@@ -22,11 +22,14 @@ import numpy as np
 from . import ref
 from .kmeans_assign import kmeans_assign_pallas
 from .l2_topk import l2_topk_pallas
+from .merge_topk import merge_topk_pallas
 from .pq_adc import pq_adc_topk_pallas
 from .sq_codec import sq_decode_pallas, sq_encode_pallas, sq_l2_topk_pallas
 
 __all__ = [
     "topk_scan",
+    "topk_scan_segmented",
+    "merge_topk",
     "pq_adc_topk",
     "sq_encode",
     "sq_decode",
@@ -53,16 +56,17 @@ def use_pallas() -> bool:
 
 
 def _np_topk_min(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
-    n = scores.shape[1]
+    """K smallest along the LAST axis (any leading batch dims)."""
+    n = scores.shape[-1]
     k = min(k, n)
     if k >= n:
-        idx = np.argsort(scores, axis=1, kind="stable")[:, :k]
+        idx = np.argsort(scores, axis=-1, kind="stable")[..., :k]
     else:
-        part = np.argpartition(scores, k - 1, axis=1)[:, :k]
-        sub = np.take_along_axis(scores, part, 1)
-        order = np.argsort(sub, axis=1, kind="stable")
-        idx = np.take_along_axis(part, order, 1)
-    return np.take_along_axis(scores, idx, 1), idx
+        part = np.argpartition(scores, k - 1, axis=-1)[..., :k]
+        sub = np.take_along_axis(scores, part, -1)
+        order = np.argsort(sub, axis=-1, kind="stable")
+        idx = np.take_along_axis(part, order, -1)
+    return np.take_along_axis(scores, idx, -1), idx
 
 
 def _interpret() -> bool:
@@ -150,6 +154,304 @@ def topk_scan(
             [idx, np.full((idx.shape[0], k - k_eff), -1, np.int64)], axis=1
         )
     return vals, idx
+
+
+def topk_scan_segmented(
+    queries,
+    bases: "list",
+    k: int,
+    metric: str = "l2",
+    valids: "list | None" = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fused brute-force scan over one execution class of segments.
+
+    Computes a single distance evaluation over the row-concatenation of
+    ``bases`` and extracts the per-segment top-k from column slices of
+    the shared score matrix — replacing S separate ``topk_scan``
+    dispatches (S small gemms + S top-k passes) with one large gemm.
+    This is the batched-scan half of the fused search engine; the merge
+    half is :func:`merge_topk`.
+
+    Returns (scores [nq, S*k], idx [nq, S*k]) where block
+    ``idx[:, s*k:(s+1)*k]`` holds row indices LOCAL to ``bases[s]``
+    (-1 = invalid slot), each block BIT-IDENTICAL to
+    ``topk_scan(queries, bases[s], k, metric, valid=valids[s])``: the
+    per-segment gemm shapes are preserved (cache-blocked execution), and
+    the score combine runs as in-place passes whose float semantics match
+    the expression in ``topk_scan`` exactly.  The fusion removes the
+    per-dispatch overheads instead: query norms are computed once, the
+    masking/combine passes allocate no broadcast temporaries, and the
+    outputs land directly in the pooled candidate arrays.
+    """
+    n_seg = len(bases)
+    nq = len(queries)
+    fill = np.inf if metric == "l2" else -np.inf
+    if n_seg == 0:
+        return (
+            np.full((nq, 0), fill, np.float32),
+            np.full((nq, 0), -1, np.int64),
+        )
+    if valids is None:
+        valids = [None] * n_seg
+    if use_pallas():
+        # TPU path: the scan kernel already streams base tiles through
+        # VMEM; per-segment kernel launches keep the same semantics.
+        parts = [
+            topk_scan(queries, b, k, metric=metric, valid=v)
+            for b, v in zip(bases, valids)
+        ]
+        return (
+            np.concatenate([p[0] for p in parts], axis=1),
+            np.concatenate([p[1] for p in parts], axis=1),
+        )
+
+    qn = np.ascontiguousarray(np.asarray(queries, np.float32))
+    q_norm = np.sum(qn * qn, axis=1, keepdims=True) if metric == "l2" else None
+    out_v = np.full((nq, n_seg * k), fill, np.float32)
+    out_i = np.full((nq, n_seg * k), -1, np.int64)
+
+    def emit_block(s_idx: int, vals: np.ndarray, idx: np.ndarray) -> None:
+        if metric == "ip":
+            vals = -vals
+        vals = np.asarray(vals, np.float32)
+        idx = np.where(np.abs(vals) >= 1e38, -1, idx.astype(np.int64))
+        lo = s_idx * k
+        out_v[:, lo : lo + vals.shape[-1]] = vals
+        out_i[:, lo : lo + vals.shape[-1]] = idx
+
+    # Group segments with equal row counts (the common case: slices and
+    # seal-sized segments are uniform) so each group runs as ONE batched
+    # gemm + ONE batched top-k instead of a per-segment dispatch chain.
+    # Per-gemm shapes are preserved, so results stay bit-identical to the
+    # per-segment scan.
+    groups: dict[int, list[int]] = {}
+    for s_idx, b in enumerate(bases):
+        groups.setdefault(b.shape[0], []).append(s_idx)
+
+    for n_s, members in groups.items():
+        if n_s == 0:
+            continue
+        k_eff = min(k, n_s)
+        # The batched cube pays off while it stays cache-resident (many
+        # tiny segments, where per-dispatch overhead dominates); past
+        # that, streaming the whole [S,nq,n_s] cube through each pass is
+        # DRAM-bound and cache-blocked per-segment execution wins.
+        if len(members) == 1 or len(members) * nq * n_s > 1 << 17:
+            for s_idx in members:
+                bn = np.asarray(bases[s_idx], np.float32)
+                scores = qn @ bn.T
+                if metric == "l2":
+                    # In-place equivalent of q_norm - 2*q@b.T + b_norm (the
+                    # float ops commute bitwise with topk_scan's expression).
+                    scores *= -2.0
+                    scores += q_norm
+                    scores += np.sum(bn * bn, axis=1)[None, :]
+                else:
+                    np.negative(scores, out=scores)
+                v = valids[s_idx]
+                if v is not None:
+                    scores[:, ~np.asarray(v, bool)] = np.float32(np.inf)
+                vals, idx = _np_topk_min(scores, k_eff)
+                emit_block(s_idx, vals, idx)
+            continue
+        # Per-slice BLAS gemms into one preallocated cube (numpy's stacked
+        # matmul bypasses BLAS); all later passes are batched over [S,nq,n_s].
+        n_grp = len(members)
+        scores = np.empty((n_grp, nq, n_s), np.float32)
+        b_norm = np.empty((n_grp, n_s), np.float32) if metric == "l2" else None
+        for g, i in enumerate(members):
+            bn = np.asarray(bases[i], np.float32)
+            np.matmul(qn, bn.T, out=scores[g])
+            if metric == "l2":
+                b_norm[g] = np.sum(bn * bn, axis=1)
+        if metric == "l2":
+            scores *= -2.0
+            scores += q_norm[None, :, :]
+            scores += b_norm[:, None, :]
+        else:
+            np.negative(scores, out=scores)
+        if any(valids[i] is not None for i in members):
+            vstack = np.stack(
+                [
+                    np.ones(n_s, bool)
+                    if valids[i] is None
+                    else np.asarray(valids[i], bool)
+                    for i in members
+                ]
+            )
+            np.copyto(scores, np.float32(np.inf), where=~vstack[:, None, :])
+        vals, idx = _np_topk_min(scores, k_eff)  # [S, nq, k_eff]
+        for g, s_idx in enumerate(members):
+            emit_block(s_idx, vals[g], idx[g])
+    return out_v, out_i
+
+
+def merge_topk(scores, pks, k: int, metric: str = "l2") -> tuple[np.ndarray, np.ndarray]:
+    """Segmented k-way top-k merge with pk-dedup (two-phase reduce, §3.6).
+
+    Merges pooled per-segment / per-node top-k candidates
+    (scores [nq, m], pks [nq, m], -1 = empty slot) into the final
+    per-query top-k, keeping the best occurrence of each pk.  Candidates
+    with pk < 0 or a non-finite score are ignored.  Output slots beyond
+    the number of distinct live pks carry pk == -1 and the metric's fill
+    score (+inf for L2, -inf for IP).  Ties break by pool column order —
+    bit-identical to a stable per-row selection over the pools.
+    """
+    s = np.asarray(scores, np.float32)
+    p = np.asarray(pks)
+    nq, m = s.shape
+    fill = np.inf if metric == "l2" else -np.inf
+    if m == 0 or nq == 0:
+        return (
+            np.full((nq, k), fill, np.float32),
+            np.full((nq, k), -1, np.int64),
+        )
+
+    if use_pallas() and (p.size == 0 or np.abs(p).max() < 2**31 - 1):
+        sp = jnp.asarray(s, jnp.float32)
+        pp = jnp.asarray(p.astype(np.int32))
+        tq = 128 if nq >= 128 else max(8, 1 << (nq - 1).bit_length())
+        pad_m = (-m) % 128
+        if pad_m:
+            sp = jnp.pad(sp, ((0, 0), (0, pad_m)), constant_values=np.float32(fill))
+            pp = jnp.pad(pp, ((0, 0), (0, pad_m)), constant_values=-1)
+        sp = _pad_rows(sp, tq)
+        pp = _pad_rows(pp, tq, fill=-1)
+        k_eff = min(k, m)
+        vals, opk = merge_topk_pallas(
+            sp, pp, k_eff, metric=metric, tq=tq, interpret=_interpret()
+        )
+        vals = np.asarray(vals[:nq], np.float32)
+        opk = np.asarray(opk[:nq], np.int64)
+        bad = np.abs(vals) >= 1e38
+        vals = np.where(bad, np.float32(fill), vals)
+        opk = np.where(bad, -1, opk)
+        if k_eff < k:
+            vals = np.concatenate(
+                [vals, np.full((nq, k - k_eff), fill, np.float32)], axis=1
+            )
+            opk = np.concatenate([opk, np.full((nq, k - k_eff), -1, np.int64)], axis=1)
+        return vals, opk
+
+    # Host fast path: optimistic top-k by packed integer key, then full
+    # dedup only for the rows whose top-k actually contains a duplicate
+    # pk.  The common case (disjoint pks across segments/nodes) never
+    # pays for grouping sorts: one argpartition + one k-wide sort.
+    p = p.astype(np.int64, copy=False)
+    alive = (p >= 0) & np.isfinite(s)
+    key = np.where(alive, s if metric == "l2" else -s, np.float32(np.inf))
+    key += np.float32(0.0)  # canonicalize -0.0 -> +0.0 (they compare equal)
+    # Order-preserving f32 -> uint32 bit twiddle (IEEE trick: flip all
+    # bits of negatives, flip just the sign bit of non-negatives), with
+    # the column index in the low bits so a NON-stable uint64 sort
+    # reproduces the stable column tie-break.
+    u = key.view(np.uint32)
+    ub = (u ^ (np.uint32(0x80000000) | (u >> 31) * np.uint32(0x7FFFFFFF))).astype(
+        np.uint64
+    )
+    if m >= 1 << 20:  # column bits would overflow the compound
+        return _merge_topk_host_dedup(s, p, key, alive, ub, k, fill, metric)
+    cc = (ub << np.uint64(20)) | np.arange(m, dtype=np.uint64)[None, :]
+    order = _topk_by_compound(cc, min(k, m))
+    out_s, out_p = _merge_gather(s, p, alive, order, nq, m, k, fill)
+    # pk-dedup check: rows whose optimistic top-k holds a repeated pk
+    # must re-merge with grouping (dropping a duplicate pulls in
+    # candidates from beyond the cut).
+    p_sorted = np.sort(out_p, axis=1)
+    dup_rows = ((p_sorted[:, 1:] == p_sorted[:, :-1]) & (p_sorted[:, 1:] >= 0)).any(1)
+    if dup_rows.any():
+        r = np.nonzero(dup_rows)[0]
+        out_s[r], out_p[r] = _merge_topk_host_widen(
+            s[r], p[r], key[r], alive[r], ub[r], cc[r], k, fill, metric
+        )
+    return out_s, out_p
+
+
+def _merge_topk_host_widen(s, p, key, alive, ub, cc, k: int, fill, metric: str):
+    """Dedup'd merge via iterative widening: gather the k' globally-best
+    candidates per row (cc order), dedup inside that small slice, and
+    widen k' until every row has k distinct pks (or the pool is spent).
+
+    The slice is gathered in (key, col) order, so positions inside it
+    preserve the stable tie-break, and any candidate left outside has a
+    strictly worse compound than everything inside — it can neither
+    displace a survivor nor improve a kept score.
+    """
+    nq, m = s.shape
+    k_pr = min(m, max(2 * k, k + 8))
+    while True:
+        order = _topk_by_compound(cc, k_pr)
+        out_s, out_p = _merge_topk_host_dedup(
+            np.take_along_axis(s, order, 1),
+            np.take_along_axis(p, order, 1),
+            np.take_along_axis(key, order, 1),
+            np.take_along_axis(alive, order, 1),
+            np.take_along_axis(ub, order, 1),
+            k,
+            fill,
+            metric,
+        )
+        if k_pr >= m or not ((out_p >= 0).sum(1) < k).any():
+            return out_s, out_p
+        k_pr = min(m, 4 * k_pr)
+
+
+def _merge_topk_host_dedup(s, p, key, alive, ub, k: int, fill, metric: str):
+    """Full grouping merge: kill all but the best occurrence of each pk,
+    then take the top-k of the survivors."""
+    nq, m = s.shape
+    if p.min() >= -1 and p.max() < 2**31 - 1:
+        # Group by (pk, key): pk+1 in the high 32 bits, key bits low.  The
+        # stable sort keeps equal (pk, key) pairs in column order, so the
+        # surviving occurrence is the seed merge's (its column position
+        # decides later equal-score tie-breaks across pks).
+        perm = np.argsort(
+            ((p + 1).astype(np.uint64) << np.uint64(32)) | ub, axis=1, kind="stable"
+        )
+    else:  # pks outside the packable range: two stable float/int sorts
+        ord_key = np.argsort(key, axis=1, kind="stable")
+        ord_pk = np.argsort(np.take_along_axis(p, ord_key, 1), axis=1, kind="stable")
+        perm = np.take_along_axis(ord_key, ord_pk, 1)
+    p_grouped = np.take_along_axis(p, perm, 1)
+    dup = np.zeros((nq, m), bool)
+    dup[:, 1:] = p_grouped[:, 1:] == p_grouped[:, :-1]
+    killed = np.empty((nq, m), bool)
+    np.put_along_axis(killed, perm, dup, axis=1)  # scatter to column order
+    k_take = min(k, m)
+    if m < 1 << 20:
+        # survivors' top-k by (key, col) compound — argpartition beats a
+        # stable float sort and the column bits keep the tie-break stable
+        cc = np.where(killed, np.uint64(0xFFFFFFFF), ub)
+        cc = (cc << np.uint64(20)) | np.arange(m, dtype=np.uint64)[None, :]
+        order = _topk_by_compound(cc, k_take)
+    else:
+        key = np.where(killed, np.float32(np.inf), key)
+        order = np.argsort(key, axis=1, kind="stable")[:, :k_take]
+    return _merge_gather(s, p, alive & ~killed, order, nq, m, k, fill)
+
+
+def _topk_by_compound(cc: np.ndarray, k_take: int) -> np.ndarray:
+    """Row-wise indices of the k_take smallest compound keys, ascending.
+    Compounds are unique per row (column bits), so the non-stable
+    partition+sort reproduces the stable (key, col) order."""
+    m = cc.shape[1]
+    if k_take >= m:
+        return np.argsort(cc, axis=1)
+    part = np.argpartition(cc, k_take - 1, axis=1)[:, :k_take]
+    sub = np.take_along_axis(cc, part, 1)
+    return np.take_along_axis(part, np.argsort(sub, axis=1), 1)
+
+
+def _merge_gather(s, p, live, order, nq, m, k, fill):
+    sel_alive = np.take_along_axis(live, order, 1)
+    out_s = np.where(sel_alive, np.take_along_axis(s, order, 1), fill).astype(np.float32)
+    out_p = np.where(sel_alive, np.take_along_axis(p, order, 1), -1)
+    if m < k:
+        out_s = np.concatenate(
+            [out_s, np.full((nq, k - m), fill, np.float32)], axis=1
+        )
+        out_p = np.concatenate([out_p, np.full((nq, k - m), -1, np.int64)], axis=1)
+    return out_s, out_p
 
 
 def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray]:

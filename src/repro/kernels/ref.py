@@ -18,6 +18,7 @@ __all__ = [
     "sq_decode_ref",
     "sq_l2_topk_ref",
     "kmeans_assign_ref",
+    "merge_topk_ref",
 ]
 
 
@@ -101,6 +102,58 @@ def sq_l2_topk_ref(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """L2 top-k computed against SQ-compressed base (dequant fused)."""
     return l2_topk_ref(queries, sq_decode_ref(codes, vmin, vmax), k, valid)
+
+
+def merge_topk_ref(
+    scores: jnp.ndarray,  # [nq, m] pooled candidate scores
+    pks: jnp.ndarray,  # [nq, m] integer pks, -1 = empty slot
+    k: int,
+    metric: str = "l2",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Segmented k-way top-k merge with pk-dedup (two-phase reduce, §3.6).
+
+    Pools of per-segment/per-node top-k candidates are merged into the
+    final per-query top-k, keeping the best occurrence of each pk.
+    Candidates with pk < 0 or a non-finite score are ignored.  Output is
+    ascending distance for L2, descending similarity for IP; empty output
+    slots carry pk == -1 and the metric's fill score (+inf L2 / -inf IP).
+
+    Ties are broken by pool column order (stable), matching a stable
+    per-row selection over the concatenated pools.
+    """
+    s = scores.astype(jnp.float32)
+    p = pks
+    nq, m = s.shape
+    fill = jnp.inf if metric == "l2" else -jnp.inf
+    if m == 0:
+        return (
+            jnp.full((nq, k), fill, jnp.float32),
+            jnp.full((nq, k), -1, p.dtype),
+        )
+    alive = (p >= 0) & jnp.isfinite(s)
+    key = jnp.where(alive, s if metric == "l2" else -s, jnp.inf)
+    # Group rows by (pk, key, column) via two stable argsorts; the first
+    # element of each pk group is its best occurrence.
+    ord_key = jnp.argsort(key, axis=1, stable=True)
+    ord_pk = jnp.argsort(jnp.take_along_axis(p, ord_key, 1), axis=1, stable=True)
+    perm = jnp.take_along_axis(ord_key, ord_pk, 1)
+    p_grouped = jnp.take_along_axis(p, perm, 1)
+    dup = jnp.concatenate(
+        [jnp.zeros((nq, 1), bool), p_grouped[:, 1:] == p_grouped[:, :-1]], axis=1
+    )
+    # Scatter the duplicate flags back to pool-column order.
+    killed = jnp.take_along_axis(dup, jnp.argsort(perm, axis=1, stable=True), 1)
+    key = jnp.where(killed, jnp.inf, key)
+    order = jnp.argsort(key, axis=1, stable=True)[:, : min(k, m)]
+    sel_alive = jnp.take_along_axis(alive & ~killed, order, 1)
+    out_s = jnp.where(sel_alive, jnp.take_along_axis(s, order, 1), fill)
+    out_p = jnp.where(sel_alive, jnp.take_along_axis(p, order, 1), -1)
+    if m < k:
+        out_s = jnp.concatenate(
+            [out_s, jnp.full((nq, k - m), fill, jnp.float32)], axis=1
+        )
+        out_p = jnp.concatenate([out_p, jnp.full((nq, k - m), -1, p.dtype)], axis=1)
+    return out_s.astype(jnp.float32), out_p
 
 
 def kmeans_assign_ref(

@@ -5,6 +5,8 @@ import sys
 # tests and benches must see 1 device (multi-device tests spawn
 # subprocesses with their own XLA_FLAGS).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import the benchmarks package (shared baselines)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.consistency import ConsistencyLevel, GuaranteeTs, staleness_ms_of
 from repro.core.segment import Segment, merge_segments
