@@ -1,0 +1,81 @@
+"""fig_compaction: the delete-heavy workload the compaction subsystem opens.
+
+Mechanism under test (paper §3.1/§3.6 maintenance story): out-of-place
+deletes accumulate as tombstones that every search must mask out, and the
+dead rows keep getting scanned — so throughput degrades as the delete
+ratio grows.  A compaction cycle folds the tombstones into rewritten
+binlogs and the GC reaper reclaims the old objects; search throughput
+must recover to at least the pre-delete level (fewer live rows, empty
+delta-delete map).
+
+Emits:
+    fig_compaction-pre-delete        us/search over the freshly sealed set
+    fig_compaction-post-delete       ... with ~40% tombstones
+    fig_compaction-post-compaction   ... after compact+GC (recovered=...)
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import ManuConfig, ManuSystem
+
+from .common import emit, timeit_us
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def main() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(7)
+    n, dim, seal, nq, iters = (
+        (4_096, 16, 256, 4, 3) if SMOKE else (16_384, 32, 1_024, 8, 5)
+    )
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=2, seal_rows=seal, slice_rows=seal // 4)
+    )
+    coll = system.create_collection("c", dim=dim)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    for lo in range(0, n, seal):
+        coll.insert({"vector": vecs[lo : lo + seal]})
+    coll.flush()
+    q = rng.standard_normal((nq, dim)).astype(np.float32)
+    n_seg = len(system.data_coord.sealed_segments("c"))
+
+    def qps():  # eventual reads: measure the pure scan path
+        return timeit_us(lambda: coll.search(q, limit=10), iters=iters, best_of=3)
+
+    t_pre = qps()
+
+    n_del = int(0.4 * n)
+    victims = rng.choice(n, n_del, replace=False)
+    step = max(1, n_del // 8)
+    for lo in range(0, n_del, step):  # batched deletes, WAL-realistic
+        coll.delete(victims[lo : lo + step])
+    t_deleted = qps()
+
+    coll.compact()
+    coll.gc()
+    t_compacted = qps()
+
+    recovered = t_compacted <= 1.1 * t_pre  # the acceptance bar
+    reclaimed = getattr(system.store, "bytes_deleted", 0)
+    return [
+        ("fig_compaction-pre-delete", t_pre, f"n={n},segs={n_seg},nq={nq}"),
+        (
+            "fig_compaction-post-delete",
+            t_deleted,
+            f"tombstones={n_del};slowdown={t_deleted / t_pre:.2f}x",
+        ),
+        (
+            "fig_compaction-post-compaction",
+            t_compacted,
+            f"vs_pre={t_compacted / t_pre:.2f}x;recovered={recovered};"
+            f"gc_bytes={reclaimed}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    emit(main())

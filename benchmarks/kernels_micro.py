@@ -64,6 +64,40 @@ def fused_scan_rows(rng) -> list[tuple[str, float, str]]:
     ]
 
 
+def delta_mask_rows(rng) -> list[tuple[str, float, str]]:
+    """Per-request doomed-pk materialization + sorted probe vs the old
+    per-segment np.array rebuild + np.isin (QueryNode delta-delete masks)."""
+    n_del, n_seg, rows = (1_000, 4, 512) if SMOKE else (10_000, 16, 4_096)
+    all_pks = rng.permutation(n_seg * rows)
+    dd = {int(pk): 100 + i for i, pk in enumerate(all_pks[:n_del])}
+    seg_pks = [
+        np.sort(all_pks[s * rows : (s + 1) * rows]).astype(np.int64)
+        for s in range(n_seg)
+    ]
+    ts = 1 << 60
+
+    def per_segment():  # the seed path: rebuilt once per segment per query
+        for pks in seg_pks:
+            doomed = np.array([pk for pk, dts in dd.items() if dts <= ts])
+            np.isin(pks, doomed)
+
+    def per_request():  # materialize once, binary-search probe per segment
+        pks_a = np.asarray(list(dd.keys()))
+        dts_a = np.asarray(list(dd.values()), np.int64)
+        doomed = np.sort(pks_a[dts_a <= ts])
+        for pks in seg_pks:
+            ops.isin_sorted(pks, doomed)
+
+    t_old = timeit_us(per_segment, best_of=3)
+    t_new = timeit_us(per_request, best_of=3)
+    speedup = t_old / max(t_new, 1e-9)
+    return [
+        ("kern-delta-mask-per-segment", t_old, f"dels={n_del},segs={n_seg}"),
+        ("kern-delta-mask-per-request", t_new,
+         f"dels={n_del},segs={n_seg};speedup={speedup:.1f}x"),
+    ]
+
+
 def main() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     rows = []
@@ -95,6 +129,7 @@ def main() -> list[tuple[str, float, str]]:
                  timeit_us(lambda: ops.kmeans_assign(x, cents)), f"{n}rows-256cents"))
     rows += merge_rows(rng)
     rows += fused_scan_rows(rng)
+    rows += delta_mask_rows(rng)
     return rows
 
 

@@ -14,6 +14,7 @@ from . import (
     fig11_scaling_data,
     fig12_grace_time,
     fig13_index_build,
+    fig_compaction,
     kernels_micro,
 )
 from .common import emit
@@ -26,6 +27,7 @@ MODULES = [
     ("fig11", fig11_scaling_data),
     ("fig12", fig12_grace_time),
     ("fig13", fig13_index_build),
+    ("fig_compaction", fig_compaction),
     ("kernels", kernels_micro),
 ]
 

@@ -2,6 +2,7 @@
 # time-ticks), delta consistency, segments with MVCC, the decoupled
 # coordinator/worker services, and the PyManu-style public API.
 from .collection import FieldSchema, FieldType, Metric, Schema
+from .compaction import CompactionCoordinator, CompactionNode, GCReaper
 from .consistency import ConsistencyLevel, GuaranteeTs
 from .manu import ManuCollection, ManuConfig, ManuSystem
 from .timestamp import TSO, Clock, ManualClock
@@ -11,6 +12,9 @@ __all__ = [
     "FieldType",
     "Metric",
     "Schema",
+    "CompactionCoordinator",
+    "CompactionNode",
+    "GCReaper",
     "ConsistencyLevel",
     "GuaranteeTs",
     "ManuCollection",

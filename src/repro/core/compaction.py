@@ -1,0 +1,551 @@
+"""Compaction & garbage collection: maintenance as log subscribers.
+
+Manu's binlog is the *base* part of the data and segments are the unit of
+placement (paper §3.3, §3.6); maintenance is therefore "just another
+subscriber" of the log services:
+
+* The **compaction coordinator** watches the coord channel for sealed
+  segments and the DML channels for delete tombstones, applies the policy
+  (delete-ratio threshold, small-segment merging up to the seal size), and
+  publishes ``compaction_task`` messages on the coord channel.  It also
+  owns the versioned segment-mapping epoch in the meta store and the
+  tombstone/time-travel retention horizon.
+* Stateless **compaction nodes** claim tasks with a meta-store CAS
+  (mirroring the index nodes), read the source segments' columnar binlogs,
+  fold the delta-delete tombstones in with vectorized mask/gather column
+  rewrites, write the merged/purged binlog back to the object store, and
+  announce ``segment_compacted``.
+* The **GC reaper** deletes binlog/index objects of segments retired
+  before the retention horizon, skipping anything still referenced by a
+  time-travel checkpoint, and announces ``segment_gc`` so coordinators
+  drop their metadata.
+
+MVCC through the swap: the query coordinator loads the rewrite gated at
+``compact_ts`` and retires the sources at the same timestamp, so a query
+pinned at a pre-compaction ``ts`` keeps reading the old versions (and the
+tombstones they need) until ``retention_advance`` moves the horizon past
+the swap.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels import ops
+from .binlog import read_binlog_column, read_binlog_meta, write_segment_binlog
+from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
+from .meta_store import MetaStore, SegmentMap
+from .object_store import ObjectStore
+from .segment import Segment
+from .timestamp import TSO
+
+DEFAULT_DELETE_RATIO = 0.2
+DEFAULT_SMALL_FRACTION = 0.5
+MAX_TASK_SEAL_FACTOR = 4  # one task rewrites at most this many seals of rows
+
+
+def prune_folded(dd: dict, folded_pks: np.ndarray, compact_ts: int) -> dict | None:
+    """Drop tombstones folded into a compaction from a pk->delete-ts map.
+
+    A tombstone dies iff its pk was rewritten out (``folded_pks``, sorted)
+    AND its delete predates the swap (``dts <= compact_ts``); later deletes
+    of the same pk and tombstones for other segments survive.  Returns the
+    pruned dict, or None when nothing changed.  Shared by the query nodes'
+    retention handler and the compaction coordinator so the two tombstone
+    views can never drift apart.
+    """
+    folded_pks = np.asarray(folded_pks)
+    if not dd or folded_pks.size == 0:
+        return None
+    pks = np.asarray(list(dd.keys()))
+    dts = np.asarray(list(dd.values()), np.int64)
+    kill = ops.isin_sorted(pks, folded_pks) & (dts <= compact_ts)
+    if not kill.any():
+        return None
+    return {
+        pk: int(t)
+        for pk, t, dead in zip(pks.tolist(), dts.tolist(), kill.tolist())
+        if not dead
+    }
+
+
+# ---------------------------------------------------------------------------
+# Coordinator: policy + task fan-out + epoch bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class CompactionCoordinator:
+    """Decides *what* to compact; the nodes decide *who* does it (CAS)."""
+
+    def __init__(
+        self,
+        broker: LogBroker,
+        meta: MetaStore,
+        tso: TSO,
+        data_coord,
+        store: ObjectStore,
+        delete_ratio: float = DEFAULT_DELETE_RATIO,
+        small_fraction: float = DEFAULT_SMALL_FRACTION,
+        retention_ms: float = 0.0,
+    ):
+        self.broker = broker
+        self.meta = meta
+        self.tso = tso
+        self.data_coord = data_coord
+        self.store = store
+        self.delete_ratio = delete_ratio
+        self.small_fraction = small_fraction
+        self.retention_ms = retention_ms
+        self.sub = Subscription(broker, COORD_CHANNEL)
+        self._dml_subs: dict[str, Subscription] = {}
+        # collection -> pk -> delete ts (the coordinator's tombstone view,
+        # fed by subscribing to every DML channel like any query node)
+        self.tombstones: dict[str, dict] = {}
+        # (collection, segment_id) -> {"rows", "shard"} for live sealed segs
+        self.sealed: dict[tuple[str, int], dict] = {}
+        self._seg_pks: dict[tuple[str, int], np.ndarray] = {}  # sorted cache
+        self.pending: dict[str, dict] = {}  # task_id -> task payload
+        self._next_task = 1
+        self.segment_map = SegmentMap(meta)
+        self.compactions_completed = 0
+
+    # ------------------------------------------------------------------ log
+    def _refresh_dml_subs(self) -> None:
+        for ch in self.broker.channels("dml/"):
+            if ch not in self._dml_subs:
+                self._dml_subs[ch] = Subscription(self.broker, ch)
+
+    def step(self) -> bool:
+        progress = False
+        self._refresh_dml_subs()
+        for sub in self._dml_subs.values():
+            for entry in sub.poll():
+                if entry.type is EntryType.DELETE:
+                    p = entry.payload
+                    dd = self.tombstones.setdefault(p["collection"], {})
+                    for pk in np.asarray(p["pk"]).tolist():
+                        dd.setdefault(pk, entry.ts)
+                    progress = True
+        for entry in self.sub.poll():
+            if entry.type is not EntryType.COORD:
+                continue
+            p = entry.payload
+            msg = p.get("msg")
+            if msg == "segment_sealed":
+                self.sealed[(p["collection"], p["segment_id"])] = {
+                    "rows": p["num_rows"],
+                    "shard": p["shard"],
+                }
+                progress = True
+            elif msg == "segment_compacted":
+                progress |= self._on_compacted(p)
+        return progress
+
+    def _on_compacted(self, p: dict) -> bool:
+        task = self.pending.pop(p["task_id"], None)
+        if task is None:
+            return False  # duplicate announcement / replay
+        coll = p["collection"]
+        targets = list(p["segments"])  # [{"segment_id", "num_rows"}, ...]
+        sources = list(p["sources"])
+        for sid in sources:
+            self.sealed.pop((coll, sid), None)
+            self._seg_pks.pop((coll, sid), None)
+            self.meta.put(
+                f"retired_segment/{coll}/{sid}",
+                {
+                    "retired_at_ts": p["compact_ts"],
+                    "compacted_into": [t["segment_id"] for t in targets],
+                },
+            )
+        for t in targets:
+            self.sealed[(coll, t["segment_id"])] = {
+                "rows": t["num_rows"],
+                "shard": p["shard"],
+            }
+        self.segment_map.apply(
+            coll,
+            add=[t["segment_id"] for t in targets],
+            remove=sources,
+            ts=p["compact_ts"],
+        )
+        self.data_coord.on_compacted(coll, sources, targets)
+        # Folded tombstones left the live data entirely (their pks existed
+        # only in the rewritten sources), so the coordinator's own view can
+        # drop them — same unbounded-growth fix as the query nodes'.
+        pruned = prune_folded(
+            self.tombstones.get(coll) or {}, p["folded_pks"], p["compact_ts"]
+        )
+        if pruned is not None:
+            self.tombstones[coll] = pruned
+        self.meta.delete(f"compaction_claim/{coll}/{p['task_id']}")
+        self.compactions_completed += 1
+        return True
+
+    def lag(self) -> int:
+        """Unconsumed log entries across this coordinator's subscriptions."""
+        return self.sub.lag() + sum(s.lag() for s in self._dml_subs.values())
+
+    # --------------------------------------------------------------- policy
+    def _pks_of(self, collection: str, segment_id: int) -> np.ndarray:
+        key = (collection, segment_id)
+        pks = self._seg_pks.get(key)
+        if pks is None:
+            pks = np.sort(read_binlog_column(self.store, collection, segment_id, "pk"))
+            self._seg_pks[key] = pks
+        return pks
+
+    def _doomed_now(self, collection: str) -> np.ndarray:
+        dd = self.tombstones.get(collection)
+        if not dd:
+            return np.empty(0, np.int64)
+        return np.sort(np.asarray(list(dd.keys())))
+
+    def plan(self, collection: str) -> list[dict]:
+        """Evaluate the policy and publish the rewrite tasks.
+
+        A segment becomes a rewrite candidate when >= ``delete_ratio`` of
+        its rows are tombstoned (purge) or its live rows fall below
+        ``small_fraction * seal_rows`` (fragment).  Candidates are grouped
+        per shard (a rewrite never crosses shard boundaries: delta deletes
+        travel on per-shard DML channels, so a target must stay aligned
+        with one channel's subscriber) and packed into tasks of at most
+        ``MAX_TASK_SEAL_FACTOR`` seals of live rows; each task's output is
+        repacked into seal-size target segments, so compaction
+        simultaneously purges dead rows, merges fragments, and restores
+        the uniform segment sizes the fused scan path batches best on.  A
+        lone candidate with nothing to fold is left alone (rewriting it
+        would churn forever).
+        """
+        seal_rows = self.data_coord.seal_rows_for(collection)
+        busy = {
+            sid
+            for t in self.pending.values()
+            if t["collection"] == collection
+            for sid in t["sources"]
+        }
+        doomed = self._doomed_now(collection)
+        # shard -> [(segment_id, live, dead), ...]
+        cands: dict[int, list[tuple[int, int, int]]] = {}
+        for (coll, sid), info in sorted(self.sealed.items()):
+            if coll != collection or sid in busy:
+                continue
+            rows = info["rows"]
+            if rows == 0:
+                continue
+            n_dead = (
+                int(ops.isin_sorted(self._pks_of(coll, sid), doomed).sum())
+                if doomed.size
+                else 0
+            )
+            if (
+                n_dead / rows >= self.delete_ratio
+                or rows - n_dead < self.small_fraction * seal_rows
+            ):
+                cands.setdefault(info["shard"], []).append(
+                    (sid, rows - n_dead, n_dead)
+                )
+
+        tasks = []
+        max_rows = MAX_TASK_SEAL_FACTOR * seal_rows
+        for shard in sorted(cands):
+            group: list[tuple[int, int, int]] = []
+            group_live = 0
+
+            def emit_group():
+                nonlocal group, group_live
+                if group and (len(group) >= 2 or any(d for _s, _l, d in group)):
+                    tasks.append(
+                        self._publish_task(
+                            collection, shard, [s for s, _l, _d in group],
+                            group_live, seal_rows,
+                        )
+                    )
+                group, group_live = [], 0
+
+            for cand in cands[shard]:
+                if group and group_live + cand[1] > max_rows:
+                    emit_group()
+                group.append(cand)
+                group_live += cand[1]
+            emit_group()
+        # The pk columns are only needed while scoring candidates; holding
+        # them between plans would pin the whole corpus' pks in memory.
+        self._seg_pks.clear()
+        return tasks
+
+    def _publish_task(
+        self,
+        collection: str,
+        shard: int,
+        sources: list[int],
+        live_rows: int,
+        seal_rows: int,
+    ) -> dict:
+        compact_ts = self.tso.next()
+        dd = self.tombstones.get(collection) or {}
+        if dd:
+            pks = np.asarray(list(dd.keys()))
+            dts = np.asarray(list(dd.values()), np.int64)
+            doomed = np.sort(pks[dts <= compact_ts])
+        else:
+            doomed = np.empty(0, np.int64)
+        n_targets = max(1, -(-live_rows // seal_rows))  # ceil
+        task_id = f"ct-{self._next_task}"
+        self._next_task += 1
+        payload = {
+            "msg": "compaction_task",
+            "task_id": task_id,
+            "collection": collection,
+            "shard": shard,
+            "sources": list(sources),
+            "targets": [
+                self.data_coord.allocate_segment_id() for _ in range(n_targets)
+            ],
+            "seal_rows": seal_rows,
+            "compact_ts": compact_ts,
+            "doomed_pks": doomed,
+        }
+        self.pending[task_id] = payload
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(ts=compact_ts, type=EntryType.COORD, payload=payload),
+        )
+        return payload
+
+    # ------------------------------------------------------------ retention
+    def advance_horizon(
+        self, horizon_ts: int, collection: str | None = None
+    ) -> None:
+        """Broadcast a retention-horizon advance: query nodes release
+        retired segment versions and prune folded tombstones; the GC
+        reaper may reclaim objects retired before ``horizon_ts``.
+        ``collection=None`` advances every collection's horizon."""
+        payload = {"msg": "retention_advance", "horizon_ts": horizon_ts}
+        if collection is not None:
+            payload["collection"] = collection
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=payload),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Worker: stateless rewrite executors
+# ---------------------------------------------------------------------------
+
+
+class CompactionNode:
+    """Claims ``compaction_task``s via meta-store CAS and rewrites binlogs.
+
+    The rewrite is pure column algebra: one boolean keep-mask per source
+    (binary-search probe of the sorted doomed-pk set) and one gather per
+    column — no per-row Python loops, same conventions as ``kernels/ops``.
+    """
+
+    def __init__(
+        self,
+        node_id: str,
+        broker: LogBroker,
+        store: ObjectStore,
+        meta: MetaStore,
+        tso: TSO,
+    ):
+        self.node_id = node_id
+        self.broker = broker
+        self.store = store
+        self.meta = meta
+        self.tso = tso
+        self.sub = Subscription(broker, COORD_CHANNEL)
+        self.alive = True
+        self.compactions_completed = 0
+        self.rows_purged = 0
+
+    def step(self) -> bool:
+        if not self.alive:
+            return False
+        progress = False
+        for entry in self.sub.poll():
+            if entry.type is not EntryType.COORD:
+                continue
+            p = entry.payload
+            if p.get("msg") != "compaction_task":
+                continue
+            progress |= self._try_compact(p)
+        return progress
+
+    def _try_compact(self, task: dict) -> bool:
+        coll = task["collection"]
+        claim_key = f"compaction_claim/{coll}/{task['task_id']}"
+        # CAS claim: only one compaction node executes a given task.
+        if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
+            return False
+        try:
+            return self._rewrite(task)
+        except Exception:
+            # Release the claim so another node (or a retry) can take the
+            # task instead of wedging it behind a dead claim.
+            self.meta.delete(claim_key)
+            raise
+
+    def _rewrite(self, task: dict) -> bool:
+        coll = task["collection"]
+        sources = list(task["sources"])
+        doomed = np.asarray(task["doomed_pks"])  # sorted by the coordinator
+        metas = [read_binlog_meta(self.store, coll, sid) for sid in sources]
+        extra_fields = tuple(metas[0].get("extra_fields", ()))
+        cols: dict[str, list[np.ndarray]] = {
+            f: [] for f in ("pk", "vector", "ts", *extra_fields)
+        }
+        folded: list[np.ndarray] = []
+        rows_in = 0
+        for sid, m in zip(sources, metas):
+            if m["num_rows"] == 0:
+                continue
+            pks = read_binlog_column(self.store, coll, sid, "pk")
+            rows_in += len(pks)
+            keep = ~ops.isin_sorted(pks, doomed)
+            if not keep.all():
+                folded.append(pks[~keep])
+            if not keep.any():
+                continue
+            cols["pk"].append(pks[keep])
+            for field in ("vector", "ts", *extra_fields):
+                cols[field].append(
+                    read_binlog_column(self.store, coll, sid, field)[keep]
+                )
+
+        merged = {
+            f: (np.concatenate(chunks) if chunks else None)
+            for f, chunks in cols.items()
+        }
+        n_live = len(merged["pk"]) if merged["pk"] is not None else 0
+        checkpoint_pos = max(m["checkpoint_pos"] for m in metas)
+
+        # Repack the live rows into seal-size targets: compaction output is
+        # uniform again, which is exactly the shape the fused scan batches.
+        # Empty chunks (everything dead) produce no segment at all — the
+        # sources simply vanish from the live mapping.
+        targets = list(task["targets"])
+        seal_rows = task["seal_rows"]
+        out_segments = []
+        for i, target in enumerate(targets):
+            lo = i * seal_rows
+            hi = (i + 1) * seal_rows if i < len(targets) - 1 else n_live
+            if lo >= n_live or lo >= hi:
+                continue
+            seg = Segment(
+                target, coll, metas[0]["shard"], metas[0]["dim"],
+                extra_fields=extra_fields,
+            )
+            seg.append(
+                merged["pk"][lo:hi],
+                merged["vector"][lo:hi],
+                merged["ts"][lo:hi],
+                {f: merged[f][lo:hi] for f in extra_fields},
+            )
+            seg.checkpoint_pos = checkpoint_pos
+            seg.seal()
+            write_segment_binlog(self.store, seg)
+            out_segments.append({"segment_id": target, "num_rows": seg.num_rows})
+
+        folded_pks = (
+            np.sort(np.concatenate(folded)) if folded else np.empty(0, np.int64)
+        )
+        self.compactions_completed += 1
+        self.rows_purged += rows_in - n_live
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(
+                ts=self.tso.next(),
+                type=EntryType.COORD,
+                payload={
+                    "msg": "segment_compacted",
+                    "task_id": task["task_id"],
+                    "collection": coll,
+                    "segments": out_segments,
+                    "sources": sources,
+                    "shard": metas[0]["shard"],
+                    "num_rows": n_live,
+                    "rows_purged": rows_in - n_live,
+                    "compact_ts": task["compact_ts"],
+                    # only tombstones actually folded into THIS rewrite are
+                    # prunable — a doomed pk living in another segment must
+                    # keep its delta-delete entry
+                    "folded_pks": folded_pks,
+                    "built_by": self.node_id,
+                },
+            ),
+        )
+        return True
+
+
+# ---------------------------------------------------------------------------
+# GC reaper: object-store reclamation behind the retention horizon
+# ---------------------------------------------------------------------------
+
+
+class GCReaper:
+    """Deletes binlog/index objects of retired segments past the horizon.
+
+    Segments referenced by a time-travel checkpoint are never reclaimed —
+    checkpoints pin their binlogs so ``restore`` keeps working (§4.3).
+    """
+
+    def __init__(
+        self, broker: LogBroker, store: ObjectStore, meta: MetaStore, tso: TSO
+    ):
+        self.broker = broker
+        self.store = store
+        self.meta = meta
+        self.tso = tso
+        self.segments_reclaimed = 0
+        self.bytes_reclaimed = 0
+
+    def protected_segments(self, collection: str) -> set[int]:
+        import json
+
+        protected: set[int] = set()
+        for m in self.store.list(f"checkpoint/{collection}/"):
+            d = json.loads(self.store.get(m.key).decode())
+            protected.update(d.get("sealed_segment_ids", ()))
+        return protected
+
+    def reap(self, horizon_ts: int, collection: str | None = None) -> dict:
+        report = {"segments": [], "objects": 0, "bytes": 0, "protected": 0}
+        protected_of: dict[str, set[int]] = {}  # one checkpoint scan per coll
+        for key, val in self.meta.scan("retired_segment/").items():
+            _, coll, sid_s = key.rsplit("/", 2)
+            sid = int(sid_s)
+            if collection is not None and coll != collection:
+                continue
+            if val["retired_at_ts"] > horizon_ts:
+                continue
+            if coll not in protected_of:
+                protected_of[coll] = self.protected_segments(coll)
+            if sid in protected_of[coll]:
+                report["protected"] += 1
+                continue
+            for prefix in (f"binlog/{coll}/{sid}/", f"index/{coll}/{sid}/"):
+                for m in list(self.store.list(prefix)):
+                    if self.store.delete(m.key):
+                        report["objects"] += 1
+                        report["bytes"] += m.size
+            self.meta.delete(key)
+            self.meta.delete(f"segment/{coll}/{sid}")
+            self.broker.publish(
+                COORD_CHANNEL,
+                LogEntry(
+                    ts=self.tso.next(),
+                    type=EntryType.COORD,
+                    payload={
+                        "msg": "segment_gc",
+                        "collection": coll,
+                        "segment_id": sid,
+                    },
+                ),
+            )
+            report["segments"].append((coll, sid))
+        self.segments_reclaimed += len(report["segments"])
+        self.bytes_reclaimed += report["bytes"]
+        return report

@@ -24,7 +24,7 @@ from .log import (
     Subscription,
     dml_channel,
 )
-from .meta_store import MetaStore
+from .meta_store import MetaStore, SegmentMap
 from .timestamp import TSO, Clock
 
 DEFAULT_SEAL_ROWS = 8_192
@@ -112,6 +112,7 @@ class DataCoordinator:
         self._to_seal: set[tuple[str, int]] = set()  # (collection, segment_id)
         self._sealed_rows: dict[tuple[str, int], int] = {}
         self._sealed_upto_pos: dict[tuple[str, int], int] = {}  # per channel shard
+        self.segment_map = SegmentMap(meta)
 
     # ------------------------------------------------------------ allocation
     def allocate_pks(self, collection: str, n: int):
@@ -150,6 +151,36 @@ class DataCoordinator:
         self.meta.put(
             f"segment/{collection}/{segment_id}", {"rows": rows, "state": "sealed"}
         )
+        self.segment_map.apply(
+            collection, add=[segment_id], ts=self.tso.last_issued()
+        )
+
+    def allocate_segment_id(self) -> int:
+        """Reserve a fresh segment id (compaction rewrite targets)."""
+        sid = self._next_segment
+        self._next_segment += 1
+        return sid
+
+    def on_compacted(
+        self, collection: str, sources: list[int], targets: list[dict]
+    ) -> None:
+        """Swap segment identity after a compaction rewrite completed.
+
+        ``targets`` is the rewrite output: [{"segment_id", "num_rows"}, ...].
+        """
+        target_ids = [t["segment_id"] for t in targets]
+        for sid in sources:
+            self._sealed_rows.pop((collection, sid), None)
+            self.meta.put(
+                f"segment/{collection}/{sid}",
+                {"rows": 0, "state": "retired", "compacted_into": target_ids},
+            )
+        for t in targets:
+            self._sealed_rows[(collection, t["segment_id"])] = t["num_rows"]
+            self.meta.put(
+                f"segment/{collection}/{t['segment_id']}",
+                {"rows": t["num_rows"], "state": "sealed"},
+            )
 
     def flush(self, collection: str) -> list[int]:
         """Force-seal every growing segment of a collection."""
@@ -249,6 +280,27 @@ class IndexCoordinator:
                     {"kind": p["index_kind"], "key": p["index_key"]},
                 )
                 progress = True
+            elif p.get("msg") == "segment_compacted":
+                # The rewrite produced fresh segments: index them, and forget
+                # build state of the sources they replaced.
+                for sid in p.get("sources", ()):
+                    skey = (p["collection"], sid)
+                    self.pending_tasks.pop(skey, None)
+                    self.built.pop(skey, None)
+                for t in p["segments"]:
+                    if t["num_rows"]:
+                        self.rebuild_segment(p["collection"], t["segment_id"])
+                progress = True
+            elif p.get("msg") == "segment_gc":
+                key = (p["collection"], p["segment_id"])
+                self.pending_tasks.pop(key, None)
+                self.built.pop(key, None)
+                self.meta.delete(f"index/{p['collection']}/{p['segment_id']}")
+                for claim in self.meta.scan(
+                    f"index_claim/{p['collection']}/{p['segment_id']}/"
+                ):
+                    self.meta.delete(claim)
+                progress = True
         return progress
 
     def rebuild_segment(self, collection: str, segment_id: int) -> None:
@@ -301,6 +353,10 @@ class QueryCoordinator:
         self.assignment: dict[tuple[str, int], str] = {}
         self.replicas: int = 1
         self._known_indexes: dict[tuple[str, int], dict] = {}
+        # (collection, segment_id) -> visible_from_ts MVCC gate of compacted
+        # rewrites; must survive failover/rebalance reloads or a pinned
+        # query would see both the rewrite and its retired sources.
+        self._visible_from: dict[tuple[str, int], int] = {}
 
     # ------------------------------------------------------------ membership
     def register_node(self, node_id: str) -> int:
@@ -369,7 +425,87 @@ class QueryCoordinator:
                         }
                     )
                 progress = True
+            elif msg == "segment_compacted":
+                progress |= self._handle_compacted(p)
         return progress
+
+    def _handle_compacted(self, p: dict) -> bool:
+        """Hot-swap a compacted rewrite for its source segments.
+
+        The new segments are loaded (gated at ``compact_ts``) before the
+        sources are retired, so there is never a serving gap; the sources
+        keep answering queries pinned before the swap until the retention
+        horizon releases them.
+        """
+        coll = p["collection"]
+        sources = list(p["sources"])
+        live = set(self.live_nodes())
+        # Targets stay aligned with their shard's DML channel subscriber so
+        # future delta deletes keep reaching the node that serves the rows.
+        ch = dml_channel(coll, p["shard"])
+        target = next(
+            (n for n in sorted(live) if ch in self.nodes[n].channels), None
+        )
+        if target is None:
+            owners = [
+                self.assignment.get((coll, sid))
+                for sid in sources
+                if self.assignment.get((coll, sid)) in live
+            ]
+            target = (
+                max(set(owners), key=owners.count) if owners else self._least_loaded()
+            )
+        if target is None:
+            return False
+        for t in p["segments"]:
+            new_sid = t["segment_id"]
+            key = (coll, new_sid)
+            if key in self.assignment or t["num_rows"] == 0:
+                continue
+            self._visible_from[key] = p["compact_ts"]
+            self.assignment[key] = target
+            self.nodes[target].segments.add(key)
+            self.meta.put(
+                f"assignment/{coll}/{new_sid}",
+                {"node": target, "visible_from_ts": p["compact_ts"]},
+            )
+            self._publish(
+                {
+                    "msg": "load_segment",
+                    "node_id": target,
+                    "collection": coll,
+                    "segment_id": new_sid,
+                    "visible_from_ts": p["compact_ts"],
+                }
+            )
+        # Broadcast the folded tombstones: every node prunes its
+        # delta-delete map once the retention horizon passes the swap.
+        self._publish(
+            {
+                "msg": "tombstones_folded",
+                "collection": coll,
+                "folded_pks": p["folded_pks"],
+                "compact_ts": p["compact_ts"],
+            }
+        )
+        for sid in sources:
+            skey = (coll, sid)
+            owner = self.assignment.pop(skey, None)
+            self._known_indexes.pop(skey, None)
+            self._visible_from.pop(skey, None)
+            if owner in self.nodes:
+                self.nodes[owner].segments.discard(skey)
+                self._publish(
+                    {
+                        "msg": "retire_segment",
+                        "node_id": owner,
+                        "collection": coll,
+                        "segment_id": sid,
+                        "retired_at_ts": p["compact_ts"],
+                    }
+                )
+            self.meta.delete(f"assignment/{coll}/{sid}")
+        return True
 
     def _assign_segment(self, collection: str, segment_id: int) -> bool:
         key = (collection, segment_id)
@@ -380,13 +516,17 @@ class QueryCoordinator:
             return False
         self.assignment[key] = node
         self.nodes[node].segments.add(key)
-        self.meta.put(f"assignment/{collection}/{segment_id}", {"node": node})
+        self.meta.put(
+            f"assignment/{collection}/{segment_id}",
+            {"node": node, "visible_from_ts": self._visible_from.get(key, 0)},
+        )
         self._publish(
             {
                 "msg": "load_segment",
                 "node_id": node,
                 "collection": collection,
                 "segment_id": segment_id,
+                "visible_from_ts": self._visible_from.get(key, 0),
             }
         )
         idx = self._known_indexes.get(key)
@@ -479,9 +619,18 @@ class QueryCoordinator:
             self.nodes[hi].segments.discard(key)
             self.nodes[lo].segments.add(key)
             self.assignment[key] = lo
-            self.meta.put(f"assignment/{coll}/{sid}", {"node": lo})
+            self.meta.put(
+                f"assignment/{coll}/{sid}",
+                {"node": lo, "visible_from_ts": self._visible_from.get(key, 0)},
+            )
             self._publish(
-                {"msg": "load_segment", "node_id": lo, "collection": coll, "segment_id": sid}
+                {
+                    "msg": "load_segment",
+                    "node_id": lo,
+                    "collection": coll,
+                    "segment_id": sid,
+                    "visible_from_ts": self._visible_from.get(key, 0),
+                }
             )
             idx = self._known_indexes.get(key)
             if idx:

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .collection import CollectionInfo, FieldSchema, FieldType, Metric, Schema
+from .compaction import CompactionCoordinator, CompactionNode, GCReaper
 from .consistency import GuaranteeTs
 from .coordinator import (
     DataCoordinator,
@@ -52,8 +53,12 @@ class ManuConfig:
     num_data_nodes: int = 1
     num_index_nodes: int = 1
     num_query_nodes: int = 2
+    num_compaction_nodes: int = 1
     seal_rows: int = 8_192
     slice_rows: int = 2_048
+    compaction_delete_ratio: float = 0.2
+    compaction_small_fraction: float = 0.5
+    gc_retention_ms: float = 0.0  # 0 = horizon may advance to "now"
     tick_interval_ms: float = 50.0
     default_staleness_ms: float = INFINITE_STALENESS
     manual_clock: bool = True
@@ -106,6 +111,14 @@ class ManuCollection:
             self.system.wait_idle()
         else:
             self.system.run_until_idle()
+
+    def compact(self) -> dict:
+        """Run one compaction cycle (purge deletes, merge small segments)."""
+        return self.system.compact(self.name)
+
+    def gc(self, horizon_ts: int | None = None) -> dict:
+        """Advance the retention horizon and reclaim old binlog/index objects."""
+        return self.system.gc(self.name, horizon_ts)
 
     def search(
         self,
@@ -167,6 +180,17 @@ class ManuSystem:
             IndexNode(f"in-{i}", self.broker, self.store, self.meta, self.tso)
             for i in range(self.config.num_index_nodes)
         ]
+        self.compaction_coord = CompactionCoordinator(
+            self.broker, self.meta, self.tso, self.data_coord, self.store,
+            delete_ratio=self.config.compaction_delete_ratio,
+            small_fraction=self.config.compaction_small_fraction,
+            retention_ms=self.config.gc_retention_ms,
+        )
+        self.compaction_nodes = [
+            CompactionNode(f"cn-{i}", self.broker, self.store, self.meta, self.tso)
+            for i in range(self.config.num_compaction_nodes)
+        ]
+        self.gc_reaper = GCReaper(self.broker, self.store, self.meta, self.tso)
         self.query_nodes: dict[str, QueryNode] = {}
         for i in range(self.config.num_query_nodes):
             self._new_query_node()
@@ -290,6 +314,9 @@ class ManuSystem:
             progress |= self.index_coord.step()
             for ix in self.index_nodes:
                 progress |= ix.step()
+            progress |= self.compaction_coord.step()
+            for cn in self.compaction_nodes:
+                progress |= cn.step()
             progress |= self.query_coord.step()
             for qn in self.query_nodes.values():
                 progress |= qn.step()
@@ -311,9 +338,63 @@ class ManuSystem:
                     continue
                 for sub in qn.subscriptions.values():
                     lag += sub.lag()
-            if lag == 0 and not self.index_coord.pending_tasks:
+            if (
+                lag == 0
+                and self.compaction_coord.lag() == 0
+                and not self.index_coord.pending_tasks
+                and not self.compaction_coord.pending
+            ):
                 return
             time.sleep(0.005)
+
+    # --------------------------------------------------- compaction & GC
+    def compact(self, name: str) -> dict:
+        """One maintenance cycle: plan rewrites, execute, hot-swap.
+
+        Returns {"tasks", "epoch", "rows_purged"} for THIS cycle; a no-op
+        when the policy finds nothing to do.
+        """
+        # The coordinator must see all seals/deletes before planning.
+        if self.config.threaded:
+            self.wait_idle()
+        else:
+            self.run_until_idle()
+        purged_before = sum(cn.rows_purged for cn in self.compaction_nodes)
+        tasks = self.compaction_coord.plan(name)
+        if self.config.threaded:
+            self.wait_idle()
+        else:
+            self.run_until_idle()
+        return {
+            "tasks": len(tasks),
+            "epoch": self.compaction_coord.segment_map.epoch(name),
+            "rows_purged": sum(cn.rows_purged for cn in self.compaction_nodes)
+            - purged_before,
+        }
+
+    def gc(self, name: str | None = None, horizon_ts: int | None = None) -> dict:
+        """Advance the retention horizon and reclaim unreferenced objects
+        of collection ``name`` (None = every collection).
+
+        The horizon defaults to "now minus ``gc_retention_ms``"; segments
+        referenced by time-travel checkpoints survive regardless.
+        """
+        from .timestamp import pack
+
+        if horizon_ts is None:
+            if self.config.gc_retention_ms > 0:
+                horizon_ts = pack(
+                    max(0, int(self.clock.now_ms() - self.config.gc_retention_ms)), 0
+                )
+            else:
+                horizon_ts = self.tso.next()
+        self.compaction_coord.advance_horizon(horizon_ts, collection=name)
+        if not self.config.threaded:
+            self.run_until_idle()
+        report = self.gc_reaper.reap(horizon_ts, collection=name)
+        if not self.config.threaded:
+            self.run_until_idle()
+        return report
 
     # -------------------------------------------------------------- search
     def search(
@@ -425,4 +506,9 @@ class ManuSystem:
                 for n, q in self.query_nodes.items()
             },
             "index_builds": sum(ix.builds_completed for ix in self.index_nodes),
+            "compactions": sum(
+                cn.compactions_completed for cn in self.compaction_nodes
+            ),
+            "rows_purged": sum(cn.rows_purged for cn in self.compaction_nodes),
+            "gc_bytes_reclaimed": self.gc_reaper.bytes_reclaimed,
         }

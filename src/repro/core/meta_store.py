@@ -190,6 +190,9 @@ class MetaStore:
                 target=lambda: [self._notify(k, None) for k in doomed], daemon=True
             ).start()
 
+    def segment_map(self) -> "SegmentMap":
+        return SegmentMap(self)
+
     def expire_now(self) -> list[str]:
         """Force lease expiry sweep (deterministic variant for tests)."""
         with self._lock:
@@ -206,3 +209,71 @@ class MetaStore:
         for k in doomed:
             self._notify(k, None)
         return doomed
+
+
+# ---------------------------------------------------------------------------
+# Versioned segment mapping
+# ---------------------------------------------------------------------------
+
+SEGMENT_MAP_HISTORY = 16
+
+
+class SegmentMap:
+    """Versioned segment-mapping epochs, stored under ``segment_map/<coll>``.
+
+    The value is the authoritative answer to "which sealed segments make up
+    this collection right now":
+
+        {"epoch": E, "live": [segment ids], "updated_ts": HLC,
+         "history": [{"epoch", "ts", "added", "removed"}, ...]}
+
+    Every seal and every compaction swap bumps the epoch through a CAS, so
+    concurrent coordinators serialize on the revision and an epoch number
+    uniquely identifies one mapping.  Query nodes are *driven* by coord-
+    channel messages (load/retire), but recovery and audit read this map:
+    a query pinned at ``ts`` corresponds to the newest epoch with
+    ``updated_ts <= ts``.
+    """
+
+    def __init__(self, meta: MetaStore):
+        self.meta = meta
+
+    def key(self, collection: str) -> str:
+        return f"segment_map/{collection}"
+
+    def get(self, collection: str) -> dict:
+        return self.meta.get(self.key(collection)) or {
+            "epoch": 0,
+            "live": [],
+            "updated_ts": 0,
+            "history": [],
+        }
+
+    def epoch(self, collection: str) -> int:
+        return int(self.get(collection)["epoch"])
+
+    def live(self, collection: str) -> list[int]:
+        return list(self.get(collection)["live"])
+
+    def apply(self, collection: str, add=(), remove=(), ts: int = 0) -> dict:
+        """CAS-bump the epoch, adding/removing segment ids atomically."""
+        key = self.key(collection)
+        while True:
+            rev = self.meta.get_rev(key)
+            cur = self.get(collection)
+            live = (set(cur["live"]) - set(remove)) | set(add)
+            entry = {
+                "epoch": cur["epoch"] + 1,
+                "ts": ts,
+                "added": sorted(add),
+                "removed": sorted(remove),
+            }
+            new = {
+                "epoch": cur["epoch"] + 1,
+                "live": sorted(live),
+                "updated_ts": ts,
+                "history": (cur.get("history") or [])[-(SEGMENT_MAP_HISTORY - 1):]
+                + [entry],
+            }
+            if self.meta.cas(key, rev, new):
+                return new

@@ -42,7 +42,13 @@ class ObjectStore:
     def exists(self, key: str) -> bool:
         raise NotImplementedError
 
-    def delete(self, key: str) -> None:
+    def delete(self, key: str) -> bool:
+        """Remove ``key``; True iff an object was actually deleted.
+
+        Implementations keep reclamation counters (``delete_count``,
+        ``bytes_deleted``) covering only *real* removals, so GC benches and
+        tests can assert reclaimed bytes.
+        """
         raise NotImplementedError
 
     def list(self, prefix: str = "") -> Iterator[ObjectMeta]:
@@ -66,8 +72,10 @@ class MemoryObjectStore(ObjectStore):
         self._lock = threading.RLock()
         self.put_count = 0
         self.get_count = 0
+        self.delete_count = 0
         self.bytes_written = 0
         self.bytes_read = 0
+        self.bytes_deleted = 0
 
     def put(self, key: str, data: bytes) -> ObjectMeta:
         if not isinstance(data, (bytes, bytearray)):
@@ -91,9 +99,14 @@ class MemoryObjectStore(ObjectStore):
         with self._lock:
             return key in self._objects
 
-    def delete(self, key: str) -> None:
+    def delete(self, key: str) -> bool:
         with self._lock:
-            self._objects.pop(key, None)
+            data = self._objects.pop(key, None)
+            if data is None:
+                return False
+            self.delete_count += 1
+            self.bytes_deleted += len(data)
+            return True
 
     def list(self, prefix: str = "") -> Iterator[ObjectMeta]:
         with self._lock:
@@ -109,6 +122,8 @@ class FileObjectStore(ObjectStore):
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
         self._lock = threading.RLock()
+        self.delete_count = 0
+        self.bytes_deleted = 0
 
     def _path(self, key: str) -> str:
         if ".." in key.split("/"):
@@ -135,11 +150,17 @@ class FileObjectStore(ObjectStore):
     def exists(self, key: str) -> bool:
         return os.path.isfile(self._path(key))
 
-    def delete(self, key: str) -> None:
-        try:
-            os.remove(self._path(key))
-        except FileNotFoundError:
-            pass
+    def delete(self, key: str) -> bool:
+        path = self._path(key)
+        with self._lock:
+            try:
+                size = os.path.getsize(path)
+                os.remove(path)
+            except FileNotFoundError:
+                return False
+            self.delete_count += 1
+            self.bytes_deleted += size
+            return True
 
     def list(self, prefix: str = "") -> Iterator[ObjectMeta]:
         out = []

@@ -41,6 +41,18 @@ class SealedHandle:
     segment: Segment
     index: VectorIndex | None = None
     index_kind: str | None = None
+    # Segment-map epoch gating (compaction hot-swap): a handle serves the
+    # MVCC window [visible_from_ts, retired_at_ts).  Freshly sealed segments
+    # cover everything; a compacted replacement starts at its compact_ts and
+    # the sources it replaces end there, so a query pinned before the swap
+    # keeps reading the old version until the retention horizon releases it.
+    visible_from_ts: int = 0
+    retired_at_ts: int | None = None
+
+    def covers_ts(self, ts: int) -> bool:
+        if ts < self.visible_from_ts:
+            return False
+        return self.retired_at_ts is None or ts < self.retired_at_ts
 
 
 @dataclass
@@ -109,6 +121,10 @@ class QueryNode:
         self.growing: dict[tuple[str, int], GrowingState] = {}
         # Delta deletes for rows living in sealed segments: coll -> pk -> ts
         self.delta_deletes: dict[str, dict[object, int]] = {}
+        # Tombstones folded into compacted segments, pending removal from
+        # ``delta_deletes`` once the retention horizon passes (the old
+        # segment versions still need them until then).
+        self._pending_prunes: list[dict] = []
         self.alive = True
         self.search_count = 0
         self.inject_delay_s = 0.0  # straggler fault injection (tests/benches)
@@ -154,10 +170,26 @@ class QueryNode:
             if p.get("node_id") != self.node_id:
                 self.drop_growing(p["collection"], p["segment_id"])
             return True
+        if msg == "tombstones_folded":
+            # Broadcast: a compaction folded these tombstones into a rewritten
+            # segment.  Every node remembers them for pruning at the horizon.
+            self._pending_prunes.append(
+                {
+                    "collection": p["collection"],
+                    "folded_pks": np.asarray(p["folded_pks"]),
+                    "compact_ts": p["compact_ts"],
+                }
+            )
+            return True
+        if msg == "retention_advance":
+            return self.apply_retention(p["horizon_ts"], p.get("collection"))
         if p.get("node_id") != self.node_id:
             return False
         if msg == "load_segment":
-            self.load_sealed(p["collection"], p["segment_id"])
+            self.load_sealed(
+                p["collection"], p["segment_id"],
+                visible_from_ts=p.get("visible_from_ts", 0),
+            )
             if self.tso is not None:
                 self.broker.publish(
                     "coord",
@@ -180,6 +212,11 @@ class QueryNode:
             return True
         if msg == "release_segment":
             self.release_segment(p["collection"], p["segment_id"])
+            return True
+        if msg == "retire_segment":
+            self.retire_segment(
+                p["collection"], p["segment_id"], p["retired_at_ts"]
+            )
             return True
         if msg == "subscribe_channel":
             self.subscribe(p["channel"], p.get("from_position", 0))
@@ -237,12 +274,14 @@ class QueryNode:
         return progress
 
     # ---------------------------------------------------------- assignments
-    def load_sealed(self, collection: str, segment_id: int) -> None:
+    def load_sealed(
+        self, collection: str, segment_id: int, visible_from_ts: int = 0
+    ) -> None:
         key = (collection, segment_id)
         if key in self.sealed:
             return
         seg = load_segment(self.store, collection, segment_id)
-        self.sealed[key] = SealedHandle(seg)
+        self.sealed[key] = SealedHandle(seg, visible_from_ts=visible_from_ts)
         # Hand-off: drop our growing copy of the same segment.
         self.growing.pop(key, None)
 
@@ -259,6 +298,52 @@ class QueryNode:
         self.sealed.pop((collection, segment_id), None)
         self.growing.pop((collection, segment_id), None)
 
+    def retire_segment(
+        self, collection: str, segment_id: int, retired_at_ts: int
+    ) -> None:
+        """MVCC retirement: the segment was replaced by a compacted rewrite.
+
+        The handle keeps serving queries pinned before ``retired_at_ts``
+        until ``apply_retention`` drops it at the retention horizon.
+        """
+        handle = self.sealed.get((collection, segment_id))
+        if handle is not None and handle.retired_at_ts is None:
+            handle.retired_at_ts = retired_at_ts
+        self.growing.pop((collection, segment_id), None)
+
+    def apply_retention(
+        self, horizon_ts: int, collection: str | None = None
+    ) -> bool:
+        """Drop retired segment versions and fold-pruned tombstones whose
+        compaction timestamp fell behind the retention horizon
+        (``collection=None`` applies to every collection)."""
+        changed = False
+        for key, handle in list(self.sealed.items()):
+            if collection is not None and key[0] != collection:
+                continue
+            if handle.retired_at_ts is not None and handle.retired_at_ts <= horizon_ts:
+                del self.sealed[key]
+                changed = True
+        still_pending: list[dict] = []
+        for prune in self._pending_prunes:
+            if (collection is not None and prune["collection"] != collection) or (
+                prune["compact_ts"] > horizon_ts
+            ):
+                still_pending.append(prune)
+                continue
+            from .compaction import prune_folded
+
+            pruned = prune_folded(
+                self.delta_deletes.get(prune["collection"]) or {},
+                prune["folded_pks"],
+                prune["compact_ts"],
+            )
+            if pruned is not None:
+                self.delta_deletes[prune["collection"]] = pruned
+                changed = True
+        self._pending_prunes = still_pending
+        return changed
+
     def drop_growing(self, collection: str, segment_id: int) -> None:
         """Hand-off after another node loaded the sealed copy."""
         self.growing.pop((collection, segment_id), None)
@@ -272,21 +357,41 @@ class QueryNode:
         return rows
 
     # --------------------------------------------------------------- search
-    def _delta_delete_mask(self, collection: str, seg: Segment, ts: int) -> np.ndarray | None:
+    def _request_doomed_pks(self, collection: str, ts: int) -> np.ndarray | None:
+        """Materialize the delta-delete pk set ONCE per search request.
+
+        Returns the sorted array of pks deleted as of ``ts`` (or None).
+        Every segment then probes it with a vectorized binary search
+        (``ops.isin_sorted``) instead of rebuilding the array and re-sorting
+        it inside ``np.isin`` once per segment per query.
+        """
         dd = self.delta_deletes.get(collection)
         if not dd:
             return None
-        pks = seg.pks()
-        doomed_pks = np.array([pk for pk, dts in dd.items() if dts <= ts])
-        if len(doomed_pks) == 0:
+        pks = np.asarray(list(dd.keys()))
+        dts = np.asarray(list(dd.values()), np.int64)
+        doomed = pks[dts <= ts]
+        if doomed.size == 0:
             return None
-        return ~np.isin(pks, doomed_pks)
+        doomed.sort()
+        return doomed
 
-    def _visible(self, collection: str, seg: Segment, ts: int) -> np.ndarray:
+    _DOOMED_UNSET = object()  # sentinel: standalone call, derive the set here
+
+    def _visible(
+        self,
+        collection: str,
+        seg: Segment,
+        ts: int,
+        doomed=_DOOMED_UNSET,
+    ) -> np.ndarray:
+        from ..kernels import ops
+
+        if doomed is QueryNode._DOOMED_UNSET:
+            doomed = self._request_doomed_pks(collection, ts)
         mask = seg.visible_mask(ts)
-        dd = self._delta_delete_mask(collection, seg, ts)
-        if dd is not None:
-            mask = mask & dd
+        if doomed is not None:
+            mask &= ~ops.isin_sorted(seg.pks(), doomed)
         return mask
 
     def plan_search(
@@ -298,15 +403,18 @@ class QueryNode:
         """Gather every candidate (segment, visibility, filter) unit for a
         request pinned at ``ts`` and group it by execution class."""
         plan = SearchPlan()
+        doomed = self._request_doomed_pks(collection, ts)
 
         # ---- sealed segments: indexed or brute ----
         for (coll, sid), handle in self.sealed.items():
             if coll != collection:
                 continue
+            if not handle.covers_ts(ts):
+                continue  # wrong segment-map epoch for this MVCC timestamp
             seg = handle.segment
             if seg.num_rows == 0:
                 continue
-            mask = self._visible(collection, seg, ts)
+            mask = self._visible(collection, seg, ts, doomed)
             if filter_masks and sid in filter_masks:
                 mask = mask & filter_masks[sid]
             if not mask.any():
@@ -327,7 +435,7 @@ class QueryNode:
             seg = gs.segment
             if seg.num_rows == 0:
                 continue
-            mask = self._visible(collection, seg, ts)
+            mask = self._visible(collection, seg, ts, doomed)
             if filter_masks and sid in filter_masks:
                 mask = mask & filter_masks[sid]
             pks = seg.pks()

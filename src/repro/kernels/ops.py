@@ -30,6 +30,7 @@ __all__ = [
     "topk_scan",
     "topk_scan_segmented",
     "merge_topk",
+    "isin_sorted",
     "pq_adc_topk",
     "sq_encode",
     "sq_decode",
@@ -452,6 +453,23 @@ def _merge_gather(s, p, live, order, nq, m, k, fill):
         )
         out_p = np.concatenate([out_p, np.full((nq, k - m), -1, np.int64)], axis=1)
     return out_s, out_p
+
+
+def isin_sorted(values, sorted_haystack) -> np.ndarray:
+    """Vectorized membership of ``values`` in a SORTED 1-D haystack.
+
+    The searchsorted probe replaces ``np.isin``'s internal sort of the
+    haystack on every call — the hot shape is one doomed-pk set shared by
+    many per-segment pk columns (delta-delete visibility masks, compaction
+    rewrites), so the sort is paid once by the caller and each probe is a
+    single binary-search pass.
+    """
+    v = np.asarray(values)
+    hay = np.asarray(sorted_haystack)
+    if hay.size == 0 or v.size == 0:
+        return np.zeros(v.shape, bool)
+    idx = np.searchsorted(hay, v)
+    return hay[np.minimum(idx, hay.size - 1)] == v
 
 
 def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,336 @@
+"""Compaction & GC subsystem: delete-ratio purge, small-segment merging,
+MVCC-safe hot-swap, tombstone pruning, checkpoint-aware object-store GC."""
+
+import numpy as np
+import pytest
+
+from repro.core import ManuConfig, ManuSystem
+from repro.kernels import ops
+
+
+@pytest.fixture
+def system():
+    return ManuSystem(
+        ManuConfig(num_query_nodes=2, seal_rows=200, slice_rows=64, num_shards=2)
+    )
+
+
+def ingest(coll, rng, n, dim, batch=200):
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    for lo in range(0, n, batch):
+        coll.insert({"vector": vecs[lo : lo + batch]})
+    return vecs
+
+
+def live_pks(res):
+    return {int(pk) for pk in res.pks.ravel().tolist() if pk >= 0}
+
+
+def test_end_to_end_compaction_demo(system, rng):
+    """The acceptance scenario: delete >=30%, compact, prune, GC, re-delete."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 800, 8)
+    coll.flush()
+    sources = system.data_coord.sealed_segments("c")
+    assert len(sources) >= 4
+
+    victims = rng.choice(800, 320, replace=False)  # 40% tombstones
+    coll.delete(victims)
+    q = rng.standard_normal((3, 8)).astype(np.float32)
+    after_delete = coll.search(q, limit=10, staleness_ms=0.0)
+    assert not set(victims.tolist()) & live_pks(after_delete)
+    assert all(
+        len(qn.delta_deletes.get("c", {})) > 0 for qn in system.query_nodes.values()
+    )
+
+    epoch_before = system.meta.segment_map().epoch("c")
+    report = coll.compact()
+    assert report["tasks"] >= 1
+    assert report["rows_purged"] == 320
+    assert system.meta.segment_map().epoch("c") > epoch_before
+    # segment identity swapped: no source survives in the live mapping
+    live_map = set(system.meta.segment_map().live("c"))
+    assert not live_map & set(sources)
+    assert set(system.data_coord.sealed_segments("c")) == live_map
+
+    # results unchanged through the swap
+    post = coll.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(
+        np.sort(post.pks, 1), np.sort(after_delete.pks, 1)
+    )
+
+    # a post-compaction delete leaves only its own tombstones after GC
+    late_victims = [pk for pk in range(800) if pk not in set(victims.tolist())][:5]
+    coll.delete(np.asarray(late_victims))
+
+    deleted_before_gc = system.store.bytes_deleted
+    gc_report = coll.gc()
+    assert gc_report["bytes"] > 0
+    assert system.store.bytes_deleted - deleted_before_gc == gc_report["bytes"]
+    assert system.store.delete_count >= len(sources)
+    for sid in sources:  # old binlogs actually reclaimed
+        assert not system.store.exists(f"binlog/c/{sid}/meta")
+    for qn in system.query_nodes.values():
+        dd = qn.delta_deletes.get("c", {})
+        assert set(dd) <= set(late_victims)  # only post-compaction tombstones
+
+    final = coll.search(q, limit=10, staleness_ms=0.0)
+    assert not set(late_victims) & live_pks(final)
+    assert not set(victims.tolist()) & live_pks(final)
+
+
+def test_pinned_query_bit_identical_through_swap(system, rng):
+    """MVCC: a query pinned before the compaction sees bit-for-bit the same
+    results after the hot-swap (the retired versions keep serving it)."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 600, 8)
+    coll.flush()
+    coll.delete(rng.choice(600, 240, replace=False))
+    q = rng.standard_normal((4, 8)).astype(np.float32)
+    pinned = coll.search(q, limit=8, staleness_ms=0.0)
+
+    report = coll.compact()
+    assert report["tasks"] >= 1
+    replay = coll.search(q, limit=8, time_travel_ts=pinned.query_ts)
+    np.testing.assert_array_equal(pinned.pks, replay.pks)
+    np.testing.assert_array_equal(pinned.scores, replay.scores)
+
+
+def test_search_during_compaction_no_dups_no_misses(system, rng):
+    """Strong searches issued between every scheduling round of an in-flight
+    compaction return the exact same pk set, with no duplicates."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 600, 8)
+    coll.flush()
+    coll.delete(rng.choice(600, 200, replace=False))
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    baseline = coll.search(q, limit=10, staleness_ms=0.0)
+
+    tasks = system.compaction_coord.plan("c")
+    assert tasks
+    for _ in range(200):
+        res = coll.search(q, limit=10, staleness_ms=0.0)
+        np.testing.assert_array_equal(
+            np.sort(res.pks, 1), np.sort(baseline.pks, 1)
+        )
+        for r in range(len(q)):
+            live = res.pks[r][res.pks[r] >= 0]
+            assert len(set(live.tolist())) == len(live)
+        if not system.compaction_coord.pending:
+            break
+        system.pump()
+    assert not system.compaction_coord.pending
+
+
+def test_small_segment_merge_up_to_seal_size(system, rng):
+    """Sub-seal_size segments merge into one, preserving rows and results."""
+    coll = system.create_collection("c", dim=8)
+    for _ in range(3):
+        ingest(coll, rng, 60, 8)
+        coll.flush()
+    before = system.data_coord.sealed_segments("c")
+    assert len(before) >= 4  # fragmented: 2 shards x 3 flushes
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    pre = coll.search(q, limit=10, staleness_ms=0.0)
+
+    report = coll.compact()
+    assert report["tasks"] >= 1
+    after = system.data_coord.sealed_segments("c")
+    assert len(after) < len(before)
+    assert sum(system.data_coord._sealed_rows.values()) == 180
+    post = coll.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(np.sort(pre.pks, 1), np.sort(post.pks, 1))
+
+
+def test_time_travel_checkpoint_survives_gc(system, rng):
+    """GC never reclaims binlogs referenced by a checkpoint; restore works."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 600, 8)
+    coll.flush()
+    system.checkpoint_collection("c")
+    mark = system.tso.last_issued()
+    protected = system.data_coord.sealed_segments("c")
+
+    coll.delete(rng.choice(600, 240, replace=False))
+    coll.compact()
+    gc_report = coll.gc()
+    assert gc_report["protected"] == len(protected)
+    assert gc_report["objects"] == 0
+    for sid in protected:
+        assert system.store.exists(f"binlog/c/{sid}/meta")
+
+    restored = system.restore_collection("c", mark)
+    assert restored.num_rows() == 600
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    _s, p = restored.search(q, 3)
+    assert (p >= 0).all()
+
+
+def test_index_rebuilt_on_compacted_segment(system, rng):
+    """The index coordinator re-triggers builds for rewrites; query nodes
+    load them and search stays exact."""
+    coll = system.create_collection("c", dim=8)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 4, "nprobe": 4})
+    vecs = ingest(coll, rng, 600, 8)
+    coll.flush()
+    coll.delete(np.arange(240))
+    report = coll.compact()
+    assert report["tasks"] >= 1
+    new_live = system.meta.segment_map().live("c")
+    for sid in new_live:
+        assert system.meta.get(f"index/c/{sid}") is not None
+    held = {
+        sid: handle
+        for qn in system.query_nodes.values()
+        for (c, sid), handle in qn.sealed.items()
+        if c == "c" and handle.retired_at_ts is None
+    }
+    assert set(held) == set(new_live)
+    assert all(h.index is not None for h in held.values())
+
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    res = coll.search(q, limit=5, staleness_ms=0.0)
+    keep = vecs[240:]
+    d = (
+        np.sum(q**2, 1, keepdims=True)
+        - 2 * q @ keep.T
+        + np.sum(keep**2, 1)
+    )
+    gt = np.argsort(d, axis=1)[:, :5] + 240
+    hits = sum(
+        len(set(res.pks[r].tolist()) & set(gt[r].tolist())) for r in range(2)
+    )
+    assert hits / 10 == 1.0  # nprobe == nlist: exhaustive => exact
+
+
+def test_concurrent_compaction_nodes_cas_claim(rng):
+    """Two compaction nodes never execute the same task twice."""
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=2, num_compaction_nodes=2, seal_rows=200,
+                   slice_rows=64)
+    )
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 800, 8)
+    coll.flush()
+    coll.delete(rng.choice(800, 320, replace=False))
+    report = coll.compact()
+    done = sum(cn.compactions_completed for cn in system.compaction_nodes)
+    assert done == report["tasks"] == system.compaction_coord.compactions_completed
+
+
+def test_isin_sorted_matches_np_isin(rng):
+    """The per-request delta-mask probe is equivalent to np.isin."""
+    for n_hay, n_val in ((0, 10), (7, 0), (1, 5), (100, 1000), (1000, 100)):
+        hay = np.unique(rng.integers(0, 5000, n_hay))
+        vals = rng.integers(0, 5000, n_val)
+        np.testing.assert_array_equal(
+            ops.isin_sorted(vals, hay), np.isin(vals, hay)
+        )
+
+
+def test_object_store_delete_accounting(tmp_path):
+    from repro.core.object_store import FileObjectStore, MemoryObjectStore
+
+    for store in (MemoryObjectStore(), FileObjectStore(str(tmp_path))):
+        store.put("a", b"x" * 100)
+        store.put("b", b"y" * 50)
+        assert store.delete("a") is True
+        assert store.delete("a") is False  # only real removals count
+        assert store.delete("missing") is False
+        assert store.delete_count == 1
+        assert store.bytes_deleted == 100
+
+
+def test_all_rows_dead_leaves_no_phantom_segment(system, rng):
+    """A rewrite whose rows are all tombstoned emits no target at all."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 400, 8)
+    coll.flush()
+    coll.delete(np.arange(400))
+    report = coll.compact()
+    assert report["tasks"] >= 1 and report["rows_purged"] == 400
+    assert system.meta.segment_map().live("c") == []
+    assert system.data_coord.sealed_segments("c") == []
+    # coordinator's own tombstone view is pruned with the fold
+    assert not system.compaction_coord.tombstones.get("c")
+    # per-cycle accounting: a second cycle purges nothing new
+    assert coll.compact()["rows_purged"] == 0
+    coll.gc()
+    assert not list(system.store.list("binlog/c/"))
+
+
+def test_gc_is_scoped_per_collection(system, rng):
+    """gc('a') must not release collection b's retired versions."""
+    a = system.create_collection("a", dim=8)
+    b = system.create_collection("b", dim=8)
+    for coll in (a, b):
+        ingest(coll, rng, 400, 8)
+        coll.flush()
+        coll.delete(rng.choice(400, 160, replace=False))
+        coll.compact()
+
+    def retired(name):
+        return [
+            key
+            for qn in system.query_nodes.values()
+            for key, h in qn.sealed.items()
+            if key[0] == name and h.retired_at_ts is not None
+        ]
+
+    assert retired("a") and retired("b")
+    report = a.gc()
+    assert all(c == "a" for c, _sid in report["segments"])
+    assert not retired("a") and retired("b")
+    assert list(system.store.list("binlog/b/"))  # b untouched until its gc
+    b.gc()
+    assert not retired("b")
+
+
+def test_failover_preserves_mvcc_gate_of_rewrites(system, rng):
+    """A compacted segment reloaded through failover keeps its
+    visible_from_ts gate (a reload must not reset the MVCC window)."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 400, 8)
+    coll.flush()
+    coll.delete(rng.choice(400, 160, replace=False))
+    coll.compact()
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    baseline = coll.search(q, limit=8, staleness_ms=0.0)
+
+    live = system.meta.segment_map().live("c")
+    victim = system.query_coord.assignment[("c", live[0])]
+    system.kill_query_node(victim)
+    system.recover_failures()
+
+    gates = {
+        sid: h.visible_from_ts
+        for qn in system.query_nodes.values()
+        if qn.alive
+        for (c, sid), h in qn.sealed.items()
+        if c == "c" and sid in live
+    }
+    assert set(gates) == set(live)
+    assert all(ts > 0 for ts in gates.values())
+    after = coll.search(q, limit=8, staleness_ms=0.0)
+    np.testing.assert_array_equal(
+        np.sort(baseline.pks, 1), np.sort(after.pks, 1)
+    )
+
+
+def test_retired_handle_serves_until_horizon_then_drops(system, rng):
+    """Retired segment versions are released only by the retention horizon."""
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 400, 8)
+    coll.flush()
+    coll.delete(rng.choice(400, 160, replace=False))
+    coll.compact()
+    retired = [
+        (key, h)
+        for qn in system.query_nodes.values()
+        for key, h in qn.sealed.items()
+        if h.retired_at_ts is not None
+    ]
+    assert retired  # old versions still held for pinned readers
+    coll.gc()
+    for qn in system.query_nodes.values():
+        assert all(h.retired_at_ts is None for h in qn.sealed.values())
