@@ -98,6 +98,132 @@ def delta_mask_rows(rng) -> list[tuple[str, float, str]]:
     ]
 
 
+def _make_ivf_flat(x, nlist, nprobe, rng):
+    """CSR-partition ``x`` with sampled centroids (one assignment pass —
+    the scan benchmarks measure search, not k-means)."""
+    from repro.core.collection import Metric
+    from repro.index.ivf import IVFFlatIndex
+
+    cents = x[rng.choice(len(x), nlist, replace=False)]
+    assign, _ = ops.kmeans_assign(x, cents)
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=nlist)
+    idx = IVFFlatIndex(metric=Metric.L2, nlist=nlist, nprobe=nprobe)
+    idx.centroids = cents
+    idx.list_offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    idx.row_ids = order.astype(np.int64)
+    idx.storage = x[order]
+    idx.num_rows = len(x)
+    return idx, counts, order
+
+
+def ivf_rows(rng) -> list[tuple[str, float, str]]:
+    """Batched CSR probe-gather-scan engine vs the scalar per-list
+    reference loop (the seed IVF search): single sealed index for
+    FLAT/SQ/PQ, plus the segment-parallel configuration where
+    ``search_batched`` replaces one ``index.search`` per co-located
+    segment.  Timings cover the scan+merge phase (probe is shared and
+    <1% of either path)."""
+    from repro.core.collection import Metric
+    from repro.index.ivf import IVFPQIndex, IVFSQIndex
+    from repro.index.pq import pq_encode
+    from .common import queries_from, sift_like
+
+    if SMOKE:
+        n, dim, nlist, nprobe, nq, k = 20_000, 64, 64, 8, 16, 10
+        n_seg, m = 4, 8
+    else:
+        n, dim, nlist, nprobe, nq, k = 200_000, 128, 256, 16, 64, 10
+        n_seg, m = 8, 8
+    x = sift_like(n, dim, n_clusters=nlist)
+    q = queries_from(x, nq)
+    rows: list[tuple[str, float, str]] = []
+    shape = f"nq={nq},nlist={nlist},nprobe={nprobe},{n}x{dim},k={k}"
+
+    def pair(tag, idx):
+        t_ref = timeit_us(lambda: idx._search_reference(q, k), iters=1, best_of=3)
+        t_new = timeit_us(lambda: idx.search(q, k), iters=1, best_of=3)
+        speedup = t_ref / max(t_new, 1e-9)
+        rows.append((f"kern-ivf-{tag}-reference", t_ref, shape))
+        rows.append(
+            (f"kern-ivf-{tag}-batched", t_new, f"{shape};speedup={speedup:.1f}x")
+        )
+
+    flat, counts, order = _make_ivf_flat(x, nlist, nprobe, rng)
+    xp = x[order]
+    pair("flat", flat)
+
+    sq = IVFSQIndex(metric=Metric.L2, nlist=nlist, nprobe=nprobe)
+    sq.centroids, sq.list_offsets, sq.row_ids = (
+        flat.centroids, flat.list_offsets, flat.row_ids,
+    )
+    sq.num_rows = n
+    sq.vmin, sq.vmax = xp.min(0), xp.max(0)
+    sq.codes = ops.sq_encode(xp, sq.vmin, sq.vmax)
+    pair("sq", sq)
+
+    ksub = 64 if SMOKE else 256
+    pq = IVFPQIndex(metric=Metric.L2, nlist=nlist, nprobe=nprobe, m=m, ksub=ksub)
+    pq.centroids, pq.list_offsets, pq.row_ids = (
+        flat.centroids, flat.list_offsets, flat.row_ids,
+    )
+    pq.num_rows = n
+    pq.codebooks = (rng.standard_normal((m, ksub, dim // m)) * 0.5).astype(np.float32)
+    pq.codes = pq_encode(xp - flat.centroids[np.repeat(np.arange(nlist), counts)],
+                         pq.codebooks)
+    pq._perm_assign = np.repeat(np.arange(nlist), counts).astype(np.int32)
+    pair("pq", pq)
+
+    # Segment-parallel: the same rows served as co-located sealed segments.
+    # Seed = one scalar index.search per segment + node merge; batched =
+    # ONE search_batched candidate-pool dispatch + one merge.
+    rows_seg = n // n_seg
+    segs = [
+        _make_ivf_flat(x[s * rows_seg : (s + 1) * rows_seg], nlist, nprobe, rng)[0]
+        for s in range(n_seg)
+    ]
+
+    def seed_node_scan():
+        pool_s, pool_i = [], []
+        for u, idx in enumerate(segs):
+            s, i = idx._search_reference(q, k)
+            pool_i.append(np.where(i >= 0, i + u * rows_seg, -1))
+            pool_s.append(s)
+        return ops.merge_topk(
+            np.concatenate(pool_s, 1), np.concatenate(pool_i, 1), k, "l2"
+        )
+
+    def batched_node_scan():
+        from repro.index.ivf import IVFFlatIndex
+
+        s, i, splits = IVFFlatIndex.search_batched(segs, q, k)
+        i = np.concatenate(
+            [
+                np.where(
+                    i[:, splits[u] : splits[u + 1]] >= 0,
+                    i[:, splits[u] : splits[u + 1]] + u * rows_seg,
+                    -1,
+                )
+                for u in range(n_seg)
+            ],
+            axis=1,
+        )
+        return ops.merge_topk(s, i, k, "l2")
+
+    t_ref = timeit_us(seed_node_scan, iters=1, best_of=3)
+    t_new = timeit_us(batched_node_scan, iters=1, best_of=3)
+    mshape = f"nq={nq},segs={n_seg}x{rows_seg},nlist={nlist},nprobe={nprobe},k={k}"
+    rows.append(("kern-ivf-multiseg-reference", t_ref, mshape))
+    rows.append(
+        (
+            "kern-ivf-multiseg-batched",
+            t_new,
+            f"{mshape};speedup={t_ref / max(t_new, 1e-9):.1f}x",
+        )
+    )
+    return rows
+
+
 def main() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     rows = []
@@ -130,6 +256,7 @@ def main() -> list[tuple[str, float, str]]:
     rows += merge_rows(rng)
     rows += fused_scan_rows(rng)
     rows += delta_mask_rows(rng)
+    rows += ivf_rows(rng)
     return rows
 
 

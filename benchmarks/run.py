@@ -1,7 +1,12 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV and writes the same rows to a ``BENCH_results.json`` trajectory file
+# (per-row name/value/units) so CI and future PRs have a perf baseline to
+# diff against.
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -32,10 +37,31 @@ MODULES = [
 ]
 
 
+def write_results(all_rows: "list[tuple[str, float, str]]", path: str) -> None:
+    """Persist the benchmark trajectory: one entry per emitted row."""
+    payload = {
+        "schema": "repro-bench/v1",
+        "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+        "rows": [
+            {"name": name, "value": round(us, 3), "units": "us_per_call",
+             "derived": derived}
+            for name, us, derived in all_rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
 def main() -> None:
     only = set(sys.argv[1:])
+    unknown = only - {tag for tag, _ in MODULES}
+    if unknown:  # a typo'd tag must not pass as an empty (green) run
+        print(f"# unknown benchmark tags: {sorted(unknown)}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: list[tuple[str, float, str]] = []
     for tag, mod in MODULES:
         if only and tag not in only:
             continue
@@ -43,11 +69,15 @@ def main() -> None:
         try:
             rows = mod.main()
             emit(rows)
+            all_rows += rows
             print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1
             print(f"# {tag} FAILED", file=sys.stderr)
             traceback.print_exc()
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_results.json")
+    write_results(all_rows, out)
+    print(f"# wrote {out} ({len(all_rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -465,11 +465,24 @@ class QueryNode:
         metric_str = "l2" if metric is Metric.L2 else "ip"
         pool_s: list[np.ndarray] = []
         pool_p: list[np.ndarray] = []
-        # Index-backed units dispatch per index (each owns its structure).
+        # Index-backed units group by spec: all co-located segments sharing
+        # an index configuration execute as ONE batched candidate-pool
+        # dispatch (IVF runs its vectorized probe-gather-scan across the
+        # group; other kinds fall back to per-index search inside).
+        index_groups: dict = {}
         for unit in plan.indexed + plan.growing_slice:
-            s, i = unit.index.search(queries, k, valid=unit.mask)
-            pool_s.append(s)
-            pool_p.append(_map_pks(i, unit.pks))
+            index_groups.setdefault(unit.index.batch_spec(), []).append(unit)
+        for units in index_groups.values():
+            s, i, splits = type(units[0].index).search_batched(
+                [u.index for u in units],
+                queries,
+                k,
+                valids=[u.mask for u in units],
+            )
+            for j, unit in enumerate(units):
+                blk = slice(splits[j], splits[j + 1])
+                pool_s.append(s[:, blk])
+                pool_p.append(_map_pks(i[:, blk], unit.pks))
         # Brute classes run as one fused scan per class: a single shared
         # distance contraction, per-segment top-k extracted from it.
         for units in (plan.brute_sealed, plan.brute_tail):

@@ -50,6 +50,53 @@ class VectorIndex:
     ) -> tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
 
+    # -- batched candidate-pool surface -------------------------------------
+    def batch_spec(self) -> tuple:
+        """Hashable spec key: units whose indexes share a spec may execute
+        as one ``search_batched`` dispatch."""
+        return (
+            type(self),
+            self.metric,
+            tuple(sorted((k, repr(v)) for k, v in self.params.items())),
+        )
+
+    @classmethod
+    def search_batched(
+        cls,
+        indexes: "list[VectorIndex]",
+        queries: np.ndarray,
+        k: int,
+        valids: "list[np.ndarray | None] | None" = None,
+    ) -> tuple[np.ndarray, np.ndarray, "list[int]"]:
+        """Candidate-pool search over co-located indexes of one spec.
+
+        Returns ``(scores [nq, M], local_idx [nq, M], splits)`` where
+        ``splits`` (length ``len(indexes)+1``) bounds each index's column
+        block; block ``u`` holds top candidates from ``indexes[u]`` with
+        row indices local to it (-1 = empty slot).  Blocks are candidate
+        POOLS — they may be wider than ``k`` and are not globally reduced;
+        the caller maps local indices to pks per block and merges once
+        (``ops.merge_topk``).  The base implementation dispatches per
+        index; batched engines (IVF) override it to share orchestration
+        across the whole group.
+        """
+        if valids is None:
+            valids = [None] * len(indexes)
+        ss, ii, splits = [], [], [0]
+        for idx, v in zip(indexes, valids):
+            s, i = idx.search(queries, k, valid=v)
+            ss.append(s)
+            ii.append(i)
+            splits.append(splits[-1] + s.shape[1])
+        nq = len(queries)
+        if not ss:
+            return (
+                np.zeros((nq, 0), np.float32),
+                np.full((nq, 0), -1, np.int64),
+                splits,
+            )
+        return np.concatenate(ss, axis=1), np.concatenate(ii, axis=1), splits
+
     # -- (de)serialization to the object store ------------------------------
     def _state(self) -> dict[str, np.ndarray]:
         raise NotImplementedError

@@ -13,6 +13,7 @@ knobs the BOHB auto-tuner (autotune.py) explores.
 from __future__ import annotations
 
 import heapq
+import threading
 
 import numpy as np
 
@@ -42,6 +43,7 @@ class HNSWIndex(VectorIndex):
         self.levels: np.ndarray | None = None  # [n] max level per node
         self.graph: list[np.ndarray] = []  # per level: [n, M_l] neighbors (-1 pad)
         self.entry_point: int = -1
+        self._tls = threading.local()  # per-thread visited scratch
 
     # ------------------------------------------------------------ distances
     def _dist(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
@@ -52,9 +54,28 @@ class HNSWIndex(VectorIndex):
         return -(x @ q)  # negated similarity => smaller is better everywhere
 
     # --------------------------------------------------------------- search
+    def _visited_scratch(self) -> tuple[np.ndarray, int]:
+        """Epoch-stamped visited array: `stamp[i] == epoch` means visited.
+
+        Bumping the per-thread epoch resets the whole array in O(1), so a
+        beam search costs O(nodes actually visited) instead of an O(n)
+        allocation per call (build runs ~levels calls per inserted row).
+        Thread-local keeps concurrent searches (hedged requests)
+        independent.
+        """
+        tls = self._tls
+        stamp = getattr(tls, "stamp", None)
+        n = len(self.vectors)
+        if stamp is None or len(stamp) < n:
+            tls.stamp = np.zeros(n, np.int64)
+            tls.epoch = 0
+        tls.epoch += 1
+        return tls.stamp, tls.epoch
+
     def _search_layer(self, q: np.ndarray, entry: int, ef: int, level: int) -> list[tuple[float, int]]:
         """Best-first beam search on one layer; returns [(dist, id)] sorted."""
-        visited = {entry}
+        stamp, epoch = self._visited_scratch()
+        stamp[entry] = epoch
         d0 = float(self._dist(q, np.array([entry]))[0])
         candidates = [(d0, entry)]  # min-heap
         results = [(-d0, entry)]  # max-heap of negatives
@@ -65,10 +86,10 @@ class HNSWIndex(VectorIndex):
                 break
             neigh = graph[c]
             neigh = neigh[neigh >= 0]
-            fresh = np.array([n for n in neigh if n not in visited], dtype=np.int64)
+            fresh = neigh[stamp[neigh] != epoch]  # vectorized visited mask
             if len(fresh) == 0:
                 continue
-            visited.update(fresh.tolist())
+            stamp[fresh] = epoch
             dists = self._dist(q, fresh)
             for dn, n in zip(dists.tolist(), fresh.tolist()):
                 if len(results) < ef or dn < -results[0][0]:

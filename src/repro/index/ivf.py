@@ -5,11 +5,31 @@ Vectors are grouped into ``nlist`` k-means clusters; a query scans only the
 so each probed list is one dense kernel scan — the TPU adaptation of the
 cache-friendly layout Milvus uses on CPU.
 
+Search is a fully vectorized batched pipeline (no per-query or per-list
+Python loops):
+
+1. **probe** — ``topk_scan`` over the centroids, as before;
+2. **invert + gather-scan** — ``ops.ivf_probe_schedule`` inverts the probe
+   matrix into a deduplicated (list -> query-group) schedule bucketed by
+   padded size, and ``ops.ivf_gather_topk`` runs one fused scan per bucket
+   (FLAT/SQ: batched shared contraction; PQ: a single batched residual-LUT
+   ADC over all (query, list) pairs) and pools per-probe-slot top-k;
+3. **reduce** — one ``ops.merge_topk`` call replaces the per-query
+   ``np.argsort`` merges, and local offsets map to row ids with one
+   vectorized take.
+
+``search_batched`` extends the same pipeline across co-located segments
+sharing an index spec: one dispatch returns every unit's candidate pool so
+the query node merges exactly once.  Set ``REPRO_IVF_REFERENCE=1`` to run
+the scalar per-list reference path instead (the equivalence oracle).
+
 IVF-PQ encodes residuals (x - centroid) which materially improves recall at
 the same code budget.
 """
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -20,17 +40,9 @@ from .kmeans import kmeans
 from .pq import adc_tables, pq_encode, train_pq_codebooks
 
 
-def _merge_topk(
-    metric: Metric, scores: list[np.ndarray], ids: list[np.ndarray], k: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Merge per-list candidate pools into final top-k (host-side reduce)."""
-    s = np.concatenate(scores, axis=1)
-    i = np.concatenate(ids, axis=1)
-    if metric is Metric.L2:
-        order = np.argsort(s, axis=1, kind="stable")[:, :k]
-    else:
-        order = np.argsort(-s, axis=1, kind="stable")[:, :k]
-    return np.take_along_axis(s, order, 1), np.take_along_axis(i, order, 1)
+def use_reference() -> bool:
+    """True when the scalar per-list oracle path is forced via env."""
+    return os.environ.get("REPRO_IVF_REFERENCE") == "1"
 
 
 class IVFBase(VectorIndex):
@@ -55,7 +67,7 @@ class IVFBase(VectorIndex):
         return x[order]
 
     def _probe_lists(self, q: np.ndarray, nprobe: int) -> np.ndarray:
-        """[nq, nprobe] most promising list ids per query."""
+        """[nq, nprobe] most promising list ids per query (-1 = padded)."""
         nprobe = min(nprobe, self.nlist)
         # For IP, the best lists are by centroid similarity; for L2 by distance.
         vals, idx = ops.topk_scan(
@@ -63,17 +75,101 @@ class IVFBase(VectorIndex):
         )
         return idx
 
+    def _effective_nprobe(self) -> int:
+        return int(self.params.get("nprobe", self.nprobe))
+
+    # ------------------------------------------------- batched scan pipeline
+    def _bucket_scorer(self, q: np.ndarray, valid_perm, sched):
+        """Return ``(score_fn, q_offset)``: ``score_fn(bucket) -> [B, G, W]``
+        min-semantics scores with dead slots at +inf, and an optional
+        per-query additive constant ``q_offset [nq]`` the scan defers (it
+        cannot change any per-query ranking, so it is added back to the
+        pooled candidates in one cheap pass instead of per scanned cell)."""
+        raise NotImplementedError
+
+    def _row_bias(self, b: ops.IVFBucket, valid_perm, base=None):
+        """Per-row additive bias [B, W] for a bucket's scan: ``base`` values
+        (row norms etc., or zero) with +inf folded in for padding and
+        masked-invisible rows — masking costs one [B, W] pass instead of a
+        [B, G, W] one.  Returns None when there is nothing to add."""
+        dead = None if b.full else ~b.wmask
+        if valid_perm is not None:
+            bad = ~valid_perm[b.rows]
+            dead = bad if dead is None else (dead | bad)
+        if base is None:
+            if dead is None:
+                return None
+            bias = np.zeros(b.rows.shape, np.float32)
+        else:
+            bias = base[b.rows]  # fancy gather: already a fresh f32 array
+        if dead is not None:
+            np.copyto(bias, np.float32(np.inf), where=dead)
+        return bias
+
+    def _pool_candidates(
+        self, q: np.ndarray, k: int, valid_perm: np.ndarray | None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Probe + bucketed gather-scan; returns the candidate pool
+        ``(scores [nq, nprobe*k], ids [nq, nprobe*k])`` in the metric's
+        natural scale with original row ids (-1 = empty slot)."""
+        probes = self._probe_lists(q, self._effective_nprobe())
+        sched = ops.ivf_probe_schedule(probes, self.list_offsets)
+        score_fn, q_offset = self._bucket_scorer(q, valid_perm, sched)
+        pool_s, pool_rows = ops.ivf_gather_topk(sched, k, score_fn)
+        if q_offset is not None:
+            pool_s = pool_s + q_offset[:, None]  # fills stay +inf
+        # local CSR offsets -> original row ids: one vectorized take
+        ids = np.where(
+            pool_rows >= 0,
+            self.row_ids[np.clip(pool_rows, 0, len(self.row_ids) - 1)],
+            -1,
+        )
+        if self.metric is not Metric.L2:  # back to descending similarity
+            pool_s = np.where(ids >= 0, -pool_s, np.float32(-np.inf))
+        return pool_s, ids
+
+    def search(self, queries, k, valid=None):
+        if use_reference():
+            return self._search_reference(queries, k, valid)
+        q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
+        valid_perm = None if valid is None else np.asarray(valid)[self.row_ids]
+        pool_s, ids = self._pool_candidates(q, k, valid_perm)
+        return ops.merge_topk(pool_s, ids, k, metric=scan_metric(self.metric))
+
+    @classmethod
+    def search_batched(cls, indexes, queries, k, valids=None):
+        """All co-located IVF units of one spec in one dispatch: shared
+        query prep, per-unit probe + bucketed gather-scan, raw candidate
+        pools returned unreduced (the caller merges once)."""
+        if use_reference() or not indexes:
+            return super().search_batched(indexes, queries, k, valids)
+        if valids is None:
+            valids = [None] * len(indexes)
+        q = normalize_if_cosine(
+            indexes[0].metric, np.asarray(queries, np.float32)
+        )
+        ss, ii, splits = [], [], [0]
+        for idx, v in zip(indexes, valids):  # per-segment, not per-list
+            vp = None if v is None else np.asarray(v)[idx.row_ids]
+            s, i = idx._pool_candidates(q, k, vp)
+            ss.append(s)
+            ii.append(i)
+            splits.append(splits[-1] + s.shape[1])
+        return np.concatenate(ss, axis=1), np.concatenate(ii, axis=1), splits
+
+    # ------------------------------------------------- scalar reference path
     # Subclasses implement one-list scan over the permuted storage.
     def _scan_range(
         self, q: np.ndarray, lo: int, hi: int, k: int, valid_perm: np.ndarray | None
     ) -> tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
 
-    def search(self, queries, k, valid=None):
+    def _search_reference(self, queries, k, valid=None):
+        """The pre-vectorization per-list loop, kept as the equivalence
+        oracle for the batched pipeline (``REPRO_IVF_REFERENCE=1``)."""
         q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
         nq = len(q)
-        nprobe = int(self.params.get("nprobe", self.nprobe))
-        probes = self._probe_lists(q, nprobe)  # [nq, nprobe]
+        probes = self._probe_lists(q, self._effective_nprobe())  # [nq, nprobe]
         valid_perm = None
         if valid is not None:
             valid_perm = np.asarray(valid)[self.row_ids]
@@ -102,9 +198,11 @@ class IVFBase(VectorIndex):
                 per_q_ids[r].append(gi[r_local : r_local + 1])
         for r in range(nq):
             if per_q_scores[r]:
-                s, i = _merge_topk(self.metric, per_q_scores[r], per_q_ids[r], k)
-                out_s[r, : s.shape[1]] = s[0]
-                out_i[r, : i.shape[1]] = i[0]
+                s = np.concatenate(per_q_scores[r], axis=1)
+                i = np.concatenate(per_q_ids[r], axis=1)
+                ms, mi = ops.merge_topk(s, i, k, metric=scan_metric(self.metric))
+                out_s[r] = ms[0]
+                out_i[r] = mi[0]
         return out_s, out_i
 
     def _base_state(self) -> dict[str, np.ndarray]:
@@ -127,11 +225,35 @@ class IVFFlatIndex(IVFBase):
     def __init__(self, metric: Metric = Metric.L2, nlist: int = 64, nprobe: int = 8, **params):
         super().__init__(metric, nlist=nlist, nprobe=nprobe, **params)
         self.storage: np.ndarray | None = None  # permuted vectors
+        self._row_norms: np.ndarray | None = None  # lazy, not serialized
 
     def build(self, vectors: np.ndarray) -> None:
         x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
         self.storage = self._partition(x)
+        self._row_norms = None
         self.num_rows = len(x)
+
+    def _bucket_scorer(self, q, valid_perm, sched):
+        # L2 distance = qn - 2 q.x + rn: the -2 folds into the query operand,
+        # rn (cached per row) joins the masking bias, and qn defers to the
+        # pooled candidates — the scan is one gemm + one [B, W]-bias add.
+        l2 = self.metric is Metric.L2
+        if l2 and self._row_norms is None:
+            self._row_norms = np.einsum("ij,ij->i", self.storage, self.storage)
+        qs = -2.0 * q if l2 else -q
+        base = self._row_norms if l2 else None
+        storage = self.storage
+
+        def score(b: ops.IVFBucket) -> np.ndarray:
+            tile = storage[b.rows]  # [B, W, d]
+            s = np.matmul(qs[b.q_idx], tile.transpose(0, 2, 1))  # [B, G, W]
+            bias = self._row_bias(b, valid_perm, base)
+            if bias is not None:
+                s += bias[:, None, :]
+            return s
+
+        q_offset = np.einsum("ij,ij->i", q, q) if l2 else None
+        return score, q_offset
 
     def _scan_range(self, q, lo, hi, k, valid_perm):
         v = None if valid_perm is None else valid_perm[lo:hi]
@@ -145,6 +267,7 @@ class IVFFlatIndex(IVFBase):
     def _load_state(self, state):
         self._load_base_state(state)
         self.storage = state["storage"]
+        self._row_norms = None
         self.num_rows = len(self.storage)
 
 
@@ -156,13 +279,53 @@ class IVFSQIndex(IVFBase):
         self.codes: np.ndarray | None = None
         self.vmin: np.ndarray | None = None
         self.vmax: np.ndarray | None = None
+        self._row_norms: np.ndarray | None = None  # decoded-row norms, lazy
 
     def build(self, vectors: np.ndarray) -> None:
         x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
         xp = self._partition(x)
         self.vmin, self.vmax = xp.min(axis=0), xp.max(axis=0)
         self.codes = ops.sq_encode(xp, self.vmin, self.vmax)
+        self._row_norms = None
         self.num_rows = len(x)
+
+    def _decode_params(self):
+        vmin = np.asarray(self.vmin, np.float32)
+        return vmin, ops.sq_scale(vmin, self.vmax)
+
+    def _decoded_norms(self) -> np.ndarray:
+        """||decode(code)||^2 per row, computed once (chunked decode)."""
+        if self._row_norms is None:
+            vmin, scale = self._decode_params()
+            out = np.empty(len(self.codes), np.float32)
+            for lo in range(0, len(self.codes), 65536):
+                y = self.codes[lo : lo + 65536].astype(np.float32) * scale + vmin
+                out[lo : lo + 65536] = np.einsum("ij,ij->i", y, y)
+            self._row_norms = out
+        return self._row_norms
+
+    def _bucket_scorer(self, q, valid_perm, sched):
+        # Fused dequantization: with y = code*scale + vmin, the distance
+        # q.y contraction runs directly on the CASTED codes by folding the
+        # scale into the query operand and q.vmin into the deferred
+        # per-query constant; decoded-row norms are a cached [n] bias.
+        vmin, scale = self._decode_params()
+        l2 = self.metric is Metric.L2
+        qs = (-2.0 * q if l2 else -q) * scale
+        base = self._decoded_norms() if l2 else None
+        codes = self.codes
+
+        def score(b: ops.IVFBucket) -> np.ndarray:
+            tile = codes[b.rows].astype(np.float32)  # [B, W, d]
+            s = np.matmul(qs[b.q_idx], tile.transpose(0, 2, 1))
+            bias = self._row_bias(b, valid_perm, base)
+            if bias is not None:
+                s += bias[:, None, :]
+            return s
+
+        qv = q @ vmin
+        q_offset = np.einsum("ij,ij->i", q, q) - 2.0 * qv if l2 else -qv
+        return score, q_offset
 
     def _scan_range(self, q, lo, hi, k, valid_perm):
         v = None if valid_perm is None else valid_perm[lo:hi]
@@ -182,6 +345,7 @@ class IVFSQIndex(IVFBase):
     def _load_state(self, state):
         self._load_base_state(state)
         self.codes, self.vmin, self.vmax = state["codes"], state["vmin"], state["vmax"]
+        self._row_norms = None
         self.num_rows = len(self.codes)
 
 
@@ -202,6 +366,9 @@ class IVFPQIndex(IVFBase):
         self.codebooks: np.ndarray | None = None
         self.codes: np.ndarray | None = None
         self._perm_assign: np.ndarray | None = None  # list id per permuted row
+        self._scan_bias: np.ndarray | None = None  # per-row scan bias, lazy
+        self._cb_flat: np.ndarray | None = None  # [m*ksub, dsub] flat codebook
+        self._codes_off: np.ndarray | None = None  # codes + j*ksub offsets
 
     def build(self, vectors: np.ndarray) -> None:
         x = normalize_if_cosine(self.metric, np.asarray(vectors, np.float32))
@@ -213,15 +380,93 @@ class IVFPQIndex(IVFBase):
         self.codebooks = train_pq_codebooks(residual, self.m, self.ksub)
         self.codes = pq_encode(residual, self.codebooks)
         self._perm_assign = assign.astype(np.int32)
+        self._scan_bias = self._cb_flat = self._codes_off = None
         self.num_rows = len(x)
 
-    def search(self, queries, k, valid=None):
-        # Residual ADC: LUTs must be recomputed per (query, probed list) on
-        # q - centroid. We scan per list with shifted queries.
+    def _decode_setup(self) -> None:
+        """Flat-LUT decode state: the codebook as one [m*ksub, dsub] table
+        and the stored codes pre-offset by j*ksub, so tile decode is a
+        SINGLE np.take whose every looked-up element is a contiguous dsub
+        block — streaming copies instead of per-float LUT probes."""
+        m, ksub, _dsub = self.codebooks.shape
+        self._cb_flat = np.ascontiguousarray(
+            self.codebooks.reshape(m * ksub, -1), np.float32
+        )
+        # int32 suffices: offsets are bounded by m*ksub (and keep the
+        # cached array at 4x the codes instead of 8x)
+        self._codes_off = self.codes.astype(np.int32) + (
+            np.arange(m, dtype=np.int32) * ksub
+        )
+
+    def _decode_rows(self, rows) -> np.ndarray:
+        """Residual reconstructions for a row-index tile [...,] -> [..., d]."""
+        if self._codes_off is None:
+            self._decode_setup()
+        dsub = self._cb_flat.shape[1]
+        rec = np.take(self._cb_flat, self._codes_off[rows], axis=0)
+        return rec.reshape(np.shape(rows) + (self.codes.shape[1] * dsub,))
+
+    def _ensure_scan_bias(self) -> np.ndarray:
+        """Per-row scan bias, computed once per loaded index (chunked).
+
+        Residual ADC against list ``l`` scores, for row reconstruction
+        r = decode(code): L2 -> ||(q-c_l) - r||^2 = ||q - (c_l+r)||^2 =
+        qn - 2 q.(c_l+r) + ||c_l+r||^2;  IP (negated) -> -(q-c_l).r =
+        -q.r + c_l.r.  Both decompose into a gemm against the
+        reconstruction tile plus a bias that depends only on the ROW
+        (||c_l + r||^2, resp. c_l.r) — precomputed here — plus (L2) a
+        per-pair -2 q.c_l constant and the deferred qn.
+        """
+        if self._scan_bias is None:
+            cents = self.centroids[self._perm_assign]  # [n, d]
+            out = np.empty(len(self.codes), np.float32)
+            l2 = self.metric is Metric.L2
+            for lo in range(0, len(self.codes), 65536):
+                hi = min(lo + 65536, len(self.codes))
+                rec = self._decode_rows(np.arange(lo, hi))
+                c = cents[lo : lo + 65536]
+                if l2:
+                    y = c + rec
+                    out[lo : lo + 65536] = np.einsum("ij,ij->i", y, y)
+                else:
+                    out[lo : lo + 65536] = np.einsum("ij,ij->i", c, rec)
+            self._scan_bias = out
+        return self._scan_bias
+
+    def _bucket_scorer(self, q, valid_perm, sched):
+        # Batched residual ADC via the reconstruction identity (see
+        # _ensure_scan_bias): every (query, probed list) pair's LUT work
+        # collapses into one gemm per bucket over decoded code tiles, a
+        # precomputed per-row bias, and a vectorized per-pair constant.
+        l2 = self.metric is Metric.L2
+        base = self._ensure_scan_bias()
+        qs = -2.0 * q if l2 else -q
+        pair_const = None
+        if l2:
+            pc = self.centroids[sched.pair_list]
+            pair_const = -2.0 * np.einsum(
+                "ij,ij->i", q[sched.pair_q], pc
+            ).astype(np.float32)
+
+        def score(b: ops.IVFBucket) -> np.ndarray:
+            rec = self._decode_rows(b.rows)  # [B, W, d]
+            s = np.matmul(qs[b.q_idx], rec.transpose(0, 2, 1))
+            if pair_const is not None:
+                s += pair_const[b.pair_idx][:, :, None]
+            bias = self._row_bias(b, valid_perm, base)
+            if bias is not None:
+                s += bias[:, None, :]
+            return s
+
+        q_offset = np.einsum("ij,ij->i", q, q) if l2 else None
+        return score, q_offset
+
+    def _search_reference(self, queries, k, valid=None):
+        # Residual ADC oracle: LUTs recomputed per (query, probed list) on
+        # q - centroid, scanning per list with shifted queries.
         q = normalize_if_cosine(self.metric, np.asarray(queries, np.float32))
         nq = len(q)
-        nprobe = int(self.params.get("nprobe", self.nprobe))
-        probes = self._probe_lists(q, nprobe)
+        probes = self._probe_lists(q, self._effective_nprobe())
         valid_perm = None if valid is None else np.asarray(valid)[self.row_ids]
         pools_s: list[list[np.ndarray]] = [[] for _ in range(nq)]
         pools_i: list[list[np.ndarray]] = [[] for _ in range(nq)]
@@ -247,9 +492,11 @@ class IVFPQIndex(IVFBase):
         out_i = np.full((nq, k), -1, np.int64)
         for r in range(nq):
             if pools_s[r]:
-                s, i = _merge_topk(self.metric, pools_s[r], pools_i[r], k)
-                out_s[r, : s.shape[1]] = s[0]
-                out_i[r, : i.shape[1]] = i[0]
+                s = np.concatenate(pools_s[r], axis=1)
+                i = np.concatenate(pools_i[r], axis=1)
+                ms, mi = ops.merge_topk(s, i, k, metric=scan_metric(self.metric))
+                out_s[r] = ms[0]
+                out_i[r] = mi[0]
         return out_s, out_i
 
     def _state(self):
@@ -265,5 +512,6 @@ class IVFPQIndex(IVFBase):
         self.codebooks = state["codebooks"]
         self.codes = state["codes"]
         self._perm_assign = state["perm_assign"]
+        self._scan_bias = self._cb_flat = self._codes_off = None
         self.m, self.ksub = self.codebooks.shape[0], self.codebooks.shape[1]
         self.num_rows = len(self.codes)

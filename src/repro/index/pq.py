@@ -50,22 +50,21 @@ def pq_decode(codes: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
 
 
 def adc_tables(queries: np.ndarray, codebooks: np.ndarray, metric: Metric) -> np.ndarray:
-    """Per-query ADC lookup tables [nq, m, ksub]."""
+    """Per-query ADC lookup tables [nq, m, ksub].
+
+    One batched contraction over all subspaces at once — the batched IVF-PQ
+    pipeline feeds every (query, probed-list) residual pair through a single
+    call, so the per-subspace gemm loop would dominate at nq*nprobe rows.
+    """
     m, ksub, dsub = codebooks.shape
-    nq = len(queries)
-    luts = np.empty((nq, m, ksub), np.float32)
-    for j in range(m):
-        qs = queries[:, j * dsub : (j + 1) * dsub]  # [nq, dsub]
-        cb = codebooks[j]  # [ksub, dsub]
-        if metric is Metric.L2:
-            luts[:, j, :] = (
-                np.sum(qs * qs, axis=1, keepdims=True)
-                - 2.0 * qs @ cb.T
-                + np.sum(cb * cb, axis=1)[None, :]
-            )
-        else:  # IP / cosine: ADC accumulates NEGATED similarity (min-scan)
-            luts[:, j, :] = -(qs @ cb.T)
-    return luts
+    q = np.ascontiguousarray(np.asarray(queries, np.float32)).reshape(-1, m, dsub)
+    dots = np.einsum("nmd,mkd->nmk", q, codebooks, optimize=True)
+    if metric is Metric.L2:
+        q2 = np.einsum("nmd,nmd->nm", q, q)
+        c2 = np.einsum("mkd,mkd->mk", codebooks, codebooks)
+        return (q2[:, :, None] - 2.0 * dots + c2[None, :, :]).astype(np.float32)
+    # IP / cosine: ADC accumulates NEGATED similarity (min-scan)
+    return (-dots).astype(np.float32)
 
 
 class PQIndex(VectorIndex):

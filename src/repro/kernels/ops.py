@@ -13,6 +13,7 @@ kernels require (pad rows, mask padding as invalid, strip outputs).
 from __future__ import annotations
 
 import os
+from dataclasses import dataclass
 from functools import lru_cache
 
 import jax
@@ -32,11 +33,16 @@ __all__ = [
     "merge_topk",
     "isin_sorted",
     "pq_adc_topk",
+    "sq_scale",
     "sq_encode",
     "sq_decode",
     "sq_topk_scan",
     "kmeans_assign",
     "use_pallas",
+    "ivf_probe_schedule",
+    "ivf_gather_topk",
+    "IVFBucket",
+    "IVFSchedule",
 ]
 
 
@@ -508,6 +514,14 @@ def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray
     return vals, idx
 
 
+def sq_scale(vmin, vmax) -> np.ndarray:
+    """The SQ codec's per-dimension quantization step (single source of
+    truth for encode/decode and any fused-dequant scan)."""
+    vmin = np.asarray(vmin, np.float32)
+    vmax = np.asarray(vmax, np.float32)
+    return np.maximum(vmax - vmin, 1e-12) / 255.0
+
+
 def sq_encode(x, vmin, vmax) -> np.ndarray:
     if use_pallas():
         x = jnp.asarray(x, jnp.float32)
@@ -518,8 +532,7 @@ def sq_encode(x, vmin, vmax) -> np.ndarray:
         return np.asarray(out[:n], np.uint8)
     xn = np.asarray(x, np.float32)
     vmin = np.asarray(vmin, np.float32)
-    vmax = np.asarray(vmax, np.float32)
-    scale = np.maximum(vmax - vmin, 1e-12) / 255.0
+    scale = sq_scale(vmin, vmax)
     q = np.round((xn - vmin[None, :]) / scale[None, :])
     return np.clip(q, 0, 255).astype(np.uint8)
 
@@ -533,8 +546,7 @@ def sq_decode(codes, vmin, vmax) -> np.ndarray:
         out = sq_decode_pallas(cp, jnp.asarray(vmin), jnp.asarray(vmax), tn=tn, interpret=_interpret())
         return np.asarray(out[:n])
     vmin = np.asarray(vmin, np.float32)
-    vmax = np.asarray(vmax, np.float32)
-    scale = np.maximum(vmax - vmin, 1e-12) / 255.0
+    scale = sq_scale(vmin, vmax)
     return np.asarray(codes, np.float32) * scale[None, :] + vmin[None, :]
 
 
@@ -571,6 +583,184 @@ def sq_topk_scan(
         vals = np.concatenate([vals, np.full((nq, k - k_eff), fill, np.float32)], axis=1)
         idx = np.concatenate([idx, np.full((nq, k - k_eff), -1, np.int64)], axis=1)
     return vals, idx
+
+
+# ---------------------------------------------------------------------------
+# Batched IVF execution: probe inversion + size-bucketed gather-scan.
+#
+# ``ivf_probe_schedule`` inverts a ``probes [nq, nprobe]`` matrix into a
+# deduplicated (list -> query-group) schedule over the index's CSR layout:
+# each probed list is scanned ONCE against the padded group of queries that
+# probe it.  Scheduled lists are bucketed by quantized (list length, group
+# size) levels so the number of distinct padded shapes stays bounded (the
+# JIT recompilation budget on TPU; on host it bounds the number of batched
+# dispatches), while the actual padded extents are the in-bucket maxima so
+# no flops are wasted on the quantization ceiling.  ``ivf_gather_topk`` then
+# runs one fused scan per bucket through a caller-supplied scorer and
+# scatters per-(query, probe-slot) top-k candidates into a dense pool that
+# feeds straight into ``merge_topk``.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class IVFBucket:
+    """One fused-scan work item: B probed lists padded to a common
+    (group G, width W) tile.  ``rows`` are absolute row indices into the
+    permuted CSR storage (padding clipped to each list's first row, masked
+    dead by ``wmask``); ``q_idx``/``slot_idx`` address the candidate pool,
+    ``pair_idx`` addresses the schedule's flat pair arrays (per-pair state
+    such as PQ residual LUTs)."""
+
+    lists: np.ndarray  # [B] list ids
+    lo: np.ndarray  # [B] CSR start offset per list
+    lengths: np.ndarray  # [B] rows per list
+    rows: np.ndarray  # [B, W] absolute (clipped) storage rows
+    wmask: np.ndarray  # [B, W] True = real row
+    q_idx: np.ndarray  # [B, G] query index per group slot
+    slot_idx: np.ndarray  # [B, G] probe slot per group slot
+    pair_idx: np.ndarray  # [B, G] index into schedule pair arrays
+    gmask: np.ndarray  # [B, G] True = real (query, list) pair
+    full: bool  # True when every [B, W] slot is a real row (no padding)
+
+
+@dataclass
+class IVFSchedule:
+    """Inverted probe schedule: flat (query, list) pairs sorted by list id
+    plus the bucketed scan work items derived from them."""
+
+    buckets: "list[IVFBucket]"
+    pair_q: np.ndarray  # [P] query index per kept pair (list-sorted order)
+    pair_list: np.ndarray  # [P] list id per kept pair (sorted)
+    nq: int
+    nprobe: int
+
+
+def _pow2_ceil(x: np.ndarray) -> np.ndarray:
+    """Elementwise smallest power of two >= x (x >= 1)."""
+    e = np.ceil(np.log2(np.maximum(np.asarray(x, np.int64), 1))).astype(np.int64)
+    return np.left_shift(np.int64(1), e)
+
+
+def _bucket_quantum(x: np.ndarray) -> np.ndarray:
+    """Quantize up to {1, 2, 3, 4, 6, 8, 12, 16, ...}: powers of two plus
+    their midpoints.  Finer than pow2-only buckets (padding waste <= 1.33x
+    instead of 2x on the scan's hot axes) while the level count stays
+    logarithmic, keeping the distinct padded shapes bounded."""
+    p2 = _pow2_ceil(x)
+    mid = (p2 >> 1) + (p2 >> 2)  # 0.75 * p2
+    return np.where(np.asarray(x) <= mid, np.maximum(mid, 1), p2)
+
+
+_SMALL_TILE_W = 128  # lists at or below this width share one tile class
+_COARSE_W = 512  # below this width, padding is cheaper than dispatches
+
+
+def _pow4_ceil(x: np.ndarray) -> np.ndarray:
+    """Smallest power of FOUR >= x: the coarse group-size ladder."""
+    e = np.ceil(np.log2(np.maximum(np.asarray(x, np.int64), 1))).astype(np.int64)
+    return np.left_shift(np.int64(1), (e + 1) >> 1 << 1)
+
+
+def ivf_probe_schedule(
+    probes, list_offsets, max_tile_rows: int = 1 << 17
+) -> IVFSchedule:
+    """Invert ``probes [nq, nprobe]`` into a bucketed gather-scan schedule.
+
+    Padded probe slots (id -1, emitted by ``topk_scan`` when fewer than
+    ``nprobe`` lists exist) and empty lists are dropped up front — the
+    corresponding pool slots simply stay at their fill value.  All steps
+    are vectorized; the only Python iteration is over the bounded set of
+    (length-bucket, group-bucket) keys and their ``max_tile_rows`` chunks.
+    """
+    probes = np.asarray(probes)
+    offsets = np.asarray(list_offsets, np.int64)
+    nq, nprobe = probes.shape
+    lengths_all = np.diff(offsets)
+    nlist = len(lengths_all)
+
+    pair_list = probes.reshape(-1).astype(np.int64)
+    pair_q = np.repeat(np.arange(nq, dtype=np.int64), nprobe)
+    pair_slot = np.tile(np.arange(nprobe, dtype=np.int64), nq)
+    ok = (pair_list >= 0) & (pair_list < nlist)
+    if nlist:
+        ok &= lengths_all[np.clip(pair_list, 0, nlist - 1)] > 0
+    pair_list, pair_q, pair_slot = pair_list[ok], pair_q[ok], pair_slot[ok]
+
+    order = np.argsort(pair_list, kind="stable")
+    pl, pq, ps = pair_list[order], pair_q[order], pair_slot[order]
+    sched = IVFSchedule([], pq, pl, nq, nprobe)
+    if pl.size == 0:
+        return sched
+
+    ulists, starts, counts = np.unique(pl, return_index=True, return_counts=True)
+    ulen = lengths_all[ulists]
+    # Adaptive bucket granularity: for big tiles padding waste is the cost
+    # (fine levels); for small ones the per-bucket dispatch is (coarse
+    # levels + a shared width floor), keeping cells AND bucket count low.
+    wq = np.maximum(_bucket_quantum(ulen), _SMALL_TILE_W)
+    gq = np.where(
+        wq <= _COARSE_W, _pow4_ceil(counts), _bucket_quantum(counts)
+    )
+    bkey = wq << np.int64(32) | gq
+    for key in np.unique(bkey):  # bounded: one per (W, G) power-of-2 pair
+        mem = np.nonzero(bkey == key)[0]
+        w = int(ulen[mem].max())
+        g = int(counts[mem].max())
+        chunk = max(1, max_tile_rows // max(w, 1))
+        for c0 in range(0, len(mem), chunk):
+            mm = mem[c0 : c0 + chunk]
+            lo = offsets[ulists[mm]]
+            ln = ulen[mm]
+            wmask = np.arange(w)[None, :] < ln[:, None]
+            rows = np.where(wmask, lo[:, None] + np.arange(w)[None, :], lo[:, None])
+            gpos = starts[mm][:, None] + np.arange(g)[None, :]
+            gmask = np.arange(g)[None, :] < counts[mm][:, None]
+            gpos = np.minimum(gpos, pl.size - 1)
+            sched.buckets.append(
+                IVFBucket(
+                    lists=ulists[mm],
+                    lo=lo,
+                    lengths=ln,
+                    rows=rows,
+                    wmask=wmask,
+                    q_idx=pq[gpos],
+                    slot_idx=ps[gpos],
+                    pair_idx=gpos,
+                    gmask=gmask,
+                    full=bool(ln.min() == w),
+                )
+            )
+    return sched
+
+
+def ivf_gather_topk(
+    schedule: IVFSchedule, k: int, score_bucket
+) -> tuple[np.ndarray, np.ndarray]:
+    """Run a probe schedule's fused scans and pool per-pair top-k.
+
+    ``score_bucket(bucket) -> scores [B, G, W]`` must return min-semantics
+    scores (L2 distance, or negated similarity for IP) with dead slots
+    (padding, invisible rows) at +inf.  Returns
+    ``(pool_scores [nq, nprobe*k], pool_rows [nq, nprobe*k])`` where block
+    ``[:, j*k:(j+1)*k]`` holds probe slot j's candidates: min-semantics
+    scores (+inf fill) and absolute rows into the permuted CSR storage
+    (-1 fill) — ready for a ``merge_topk`` reduce after the caller maps
+    rows to ids and flips sign for descending metrics.
+    """
+    nq, nprobe = schedule.nq, schedule.nprobe
+    pool_s = np.full((nq, nprobe, k), np.inf, np.float32)
+    pool_r = np.full((nq, nprobe, k), -1, np.int64)
+    for b in schedule.buckets:
+        scores = score_bucket(b)  # [B, G, W]
+        k_eff = min(k, scores.shape[2])
+        vals, idx = _np_topk_min(scores, k_eff)
+        idx += b.lo[:, None, None]  # local offsets -> absolute rows
+        np.copyto(idx, -1, where=vals >= np.float32(1e38))  # dead slots
+        sel = b.gmask
+        qi, si = b.q_idx[sel], b.slot_idx[sel]
+        pool_s[qi, si, :k_eff] = vals[sel]
+        pool_r[qi, si, :k_eff] = idx[sel]
+    return pool_s.reshape(nq, nprobe * k), pool_r.reshape(nq, nprobe * k)
 
 
 def kmeans_assign(x, centroids) -> tuple[np.ndarray, np.ndarray]:
