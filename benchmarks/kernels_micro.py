@@ -98,6 +98,77 @@ def delta_mask_rows(rng) -> list[tuple[str, float, str]]:
     ]
 
 
+def hybrid_fuse_rows(rng) -> list[tuple[str, float, str]]:
+    """ops.hybrid_fuse (weighted + RRF) vs a per-row dict-accumulate loop:
+    the proxy-side fusion stage of multi-vector hybrid requests."""
+    nq, k, n_fields = (16, 10, 2) if SMOKE else (64, 50, 3)
+    pool = k
+    scores = [
+        np.sort(np.abs(rng.standard_normal((nq, pool))).astype(np.float32), axis=1)
+        for _ in range(n_fields)
+    ]
+    pks = [
+        rng.integers(0, pool * 2, (nq, pool)).astype(np.int64)
+        for _ in range(n_fields)
+    ]
+    weights = [1.0] * n_fields
+
+    def python_fuse():
+        out = []
+        for r in range(nq):
+            acc: dict[int, float] = {}
+            for f in range(n_fields):
+                for rank in range(pool):
+                    pk = int(pks[f][r, rank])
+                    if pk < 0:
+                        continue
+                    sim = 1.0 / (1.0 + max(float(scores[f][r, rank]), 0.0))
+                    acc[pk] = acc.get(pk, 0.0) + weights[f] * sim
+            out.append(sorted(acc.items(), key=lambda kv: -kv[1])[:k])
+        return out
+
+    t_py = timeit_us(python_fuse, best_of=5)
+    t_w = timeit_us(
+        lambda: ops.hybrid_fuse(scores, pks, k, "l2", weights, kind="weighted"),
+        best_of=5,
+    )
+    t_rrf = timeit_us(
+        lambda: ops.hybrid_fuse(scores, pks, k, "l2", weights, kind="rrf"),
+        best_of=5,
+    )
+    shape = f"nq={nq},fields={n_fields},k={k}"
+    return [
+        ("kern-hybrid-fuse-python-loop", t_py, shape),
+        ("kern-hybrid-fuse-weighted", t_w,
+         f"{shape};speedup={t_py / max(t_w, 1e-9):.1f}x"),
+        ("kern-hybrid-fuse-rrf", t_rrf, shape),
+    ]
+
+
+def filtered_range_rows(rng) -> list[tuple[str, float, str]]:
+    """The filtered + range read path: fused brute scan under a selective
+    attribute mask, and the post-scan radius cut on merged results."""
+    nq, n_seg, rows, dim, k = (8, 4, 256, 32, 10) if SMOKE else (64, 16, 1_024, 128, 50)
+    q = rng.standard_normal((nq, dim)).astype(np.float32)
+    bases = [rng.standard_normal((rows, dim)).astype(np.float32) for _ in range(n_seg)]
+    # 10% selectivity: the attribute filter's typical hot case
+    valids = [rng.random(rows) < 0.1 for _ in range(n_seg)]
+    t_filtered = timeit_us(
+        lambda: ops.topk_scan_segmented(q, bases, k, metric="l2", valids=valids),
+        best_of=5,
+    )
+    s, p = ops.topk_scan_segmented(q, bases, k, metric="l2")
+    radius = float(np.median(s))
+    t_cut = timeit_us(
+        lambda: ops.range_cut(s, p, "l2", radius, radius * 0.2), best_of=5
+    )
+    shape = f"nq={nq},segs={n_seg}x{rows}x{dim},k={k}"
+    return [
+        ("kern-scan-filtered-10pct", t_filtered, f"{shape};sel=0.1"),
+        ("kern-range-cut", t_cut, f"nq={nq},m={s.shape[1]}"),
+    ]
+
+
 def _make_ivf_flat(x, nlist, nprobe, rng):
     """CSR-partition ``x`` with sampled centroids (one assignment pass —
     the scan benchmarks measure search, not k-means)."""
@@ -256,6 +327,8 @@ def main() -> list[tuple[str, float, str]]:
     rows += merge_rows(rng)
     rows += fused_scan_rows(rng)
     rows += delta_mask_rows(rng)
+    rows += hybrid_fuse_rows(rng)
+    rows += filtered_range_rows(rng)
     rows += ivf_rows(rng)
     return rows
 

@@ -1,10 +1,14 @@
-"""Quickstart: the PyManu-style API end to end.
+"""Quickstart: the declarative request API end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Creates a collection, streams inserts through the log backbone, builds an
-IVF index on sealed segments, searches under three consistency levels,
-deletes, filters by attribute, and time-travels to before the delete.
+Creates a multi-vector collection (a text embedding + an image embedding +
+a price attribute), streams inserts through the log backbone, builds one
+IVF index per vector field, then exercises the typed ``SearchRequest``
+surface: consistency levels, hybrid (multi-vector) search under weighted
+and RRF fusion, filtered range search, output-field hydration, and time
+travel — plus the legacy kwarg facade, which runs through the exact same
+pipeline.
 """
 
 import sys
@@ -14,7 +18,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import FieldSchema, FieldType, ManuConfig, ManuSystem, Metric
+from repro.core import (
+    AnnsQuery,
+    ConsistencyLevel,
+    FieldSchema,
+    FieldType,
+    ManuConfig,
+    ManuSystem,
+    Metric,
+    Ranker,
+    SearchRequest,
+)
 
 
 def main() -> None:
@@ -22,38 +36,70 @@ def main() -> None:
                                  seal_rows=1_000, slice_rows=512))
     coll = manu.create_collection(
         "products", dim=64, metric=Metric.L2,
-        extra_fields=[FieldSchema("price", FieldType.FLOAT)],
+        extra_fields=[
+            FieldSchema("img_vec", FieldType.VECTOR, dim=32),
+            FieldSchema("price", FieldType.FLOAT),
+        ],
     )
+    # One index spec per vector field (paper §3.5: per-field build tasks).
     coll.create_index("vector", kind="ivf_flat", params={"nlist": 16, "nprobe": 8})
+    coll.create_index("img_vec", kind="ivf_flat", params={"nlist": 8, "nprobe": 8})
 
     rng = np.random.default_rng(0)
-    vectors = rng.standard_normal((5_000, 64)).astype(np.float32)
+    text_vecs = rng.standard_normal((5_000, 64)).astype(np.float32)
+    img_vecs = rng.standard_normal((5_000, 32)).astype(np.float32)
     prices = rng.uniform(1, 500, 5_000)
     for lo in range(0, 5_000, 1_000):
-        coll.insert({"vector": vectors[lo : lo + 1_000],
-                     "price": prices[lo : lo + 1_000]})
+        coll.insert({"vector": text_vecs[lo:lo + 1_000],
+                     "img_vec": img_vecs[lo:lo + 1_000],
+                     "price": prices[lo:lo + 1_000]})
     print(f"ingested 5000 rows; sealed segments: "
           f"{manu.data_coord.sealed_segments('products')}")
 
-    query = rng.standard_normal((1, 64)).astype(np.float32)
+    tq = rng.standard_normal((1, 64)).astype(np.float32)
+    iq = rng.standard_normal((1, 32)).astype(np.float32)
 
-    strong = coll.search(query, limit=5, staleness_ms=0.0)
-    bounded = coll.search(query, limit=5, staleness_ms=100.0)
-    eventual = coll.search(query, limit=5)  # default: eventual
+    # ---- consistency: named levels or an explicit staleness bound -------
+    strong = coll.search(SearchRequest.single(tq, k=5,
+                                              consistency=ConsistencyLevel.STRONG))
+    bounded = coll.search(SearchRequest.single(tq, k=5, staleness_ms=100.0))
+    eventual = coll.search(SearchRequest.single(tq, k=5))
     print("strong   :", strong.pks[0])
     print("bounded  :", bounded.pks[0])
     print("eventual :", eventual.pks[0])
 
-    cheap = coll.query(query, limit=5, expr="price < 50", staleness_ms=0.0)
-    print("price<50 :", cheap.pks[0], "prices:", np.round(prices[cheap.pks[0][cheap.pks[0] >= 0]], 1))
+    # ---- hybrid multi-vector search ------------------------------------
+    weighted = coll.search(SearchRequest(
+        anns=[AnnsQuery("vector", tq, weight=0.7),
+              AnnsQuery("img_vec", iq, weight=0.3)],
+        k=5, staleness_ms=0.0, output_fields=("price",),
+    ))
+    rrf = coll.hybrid_search(
+        [AnnsQuery("vector", tq), AnnsQuery("img_vec", iq)],
+        limit=5, ranker=Ranker.rrf(), staleness_ms=0.0,
+    )
+    print("hybrid weighted :", weighted.pks[0],
+          "prices:", np.round(weighted.fields["price"][0], 1))
+    print("hybrid rrf      :", rrf.pks[0])
 
+    # ---- filtered range search -----------------------------------------
+    radius = float(np.sort(strong.scores[0])[-1]) * 1.2
+    cheap_near = coll.search(SearchRequest.single(
+        tq, k=10, staleness_ms=0.0, filter="price < 50", radius=radius,
+        output_fields=("price",),
+    ))
+    live = cheap_near.pks[0][cheap_near.pks[0] >= 0]
+    print(f"price<50 within radius {radius:.1f}:", live,
+          "prices:", np.round(cheap_near.fields["price"][0][:len(live)], 1))
+
+    # ---- deletes, MVCC, time travel ------------------------------------
     victims = strong.pks[0][:2]
     coll.delete(victims)
-    after = coll.search(query, limit=5, staleness_ms=0.0)
+    after = coll.search(tq, limit=5, staleness_ms=0.0)  # legacy facade
     print(f"deleted {victims}; new top-5: {after.pks[0]}")
 
     manu.checkpoint_collection("products")
-    rollback = coll.search(query, limit=5, time_travel_ts=strong.query_ts)
+    rollback = coll.search(tq, limit=5, time_travel_ts=strong.query_ts)
     print("time-travel top-5 (deleted rows resurrected):", rollback.pks[0])
     assert set(victims.tolist()) <= set(rollback.pks[0].tolist())
 

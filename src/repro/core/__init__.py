@@ -5,6 +5,7 @@ from .collection import FieldSchema, FieldType, Metric, Schema
 from .compaction import CompactionCoordinator, CompactionNode, GCReaper
 from .consistency import ConsistencyLevel, GuaranteeTs
 from .manu import ManuCollection, ManuConfig, ManuSystem
+from .request import AnnsQuery, Ranker, SearchRequest
 from .timestamp import TSO, Clock, ManualClock
 
 __all__ = [
@@ -17,6 +18,9 @@ __all__ = [
     "GCReaper",
     "ConsistencyLevel",
     "GuaranteeTs",
+    "AnnsQuery",
+    "Ranker",
+    "SearchRequest",
     "ManuCollection",
     "ManuConfig",
     "ManuSystem",

@@ -7,9 +7,9 @@ pk/vector/ts.
 
 Object layout in the store:
 
-    binlog/<collection>/<segment_id>/meta         (segment header)
-    binlog/<collection>/<segment_id>/col/<field>  (one object per column)
-    index/<collection>/<segment_id>/<index_kind>  (built index files)
+    binlog/<collection>/<segment_id>/meta                 (segment header)
+    binlog/<collection>/<segment_id>/col/<field>          (one object per column)
+    index/<collection>/<segment_id>/<field>/<index_kind>  (built index files)
 """
 
 from __future__ import annotations
@@ -31,8 +31,8 @@ def _meta_key(collection: str, segment_id: int) -> str:
     return f"binlog/{collection}/{segment_id}/meta"
 
 
-def index_key(collection: str, segment_id: int, kind: str) -> str:
-    return f"index/{collection}/{segment_id}/{kind}"
+def index_key(collection: str, segment_id: int, field: str, kind: str) -> str:
+    return f"index/{collection}/{segment_id}/{field}/{kind}"
 
 
 def _dump_array(arr: np.ndarray) -> bytes:

@@ -224,25 +224,62 @@ class DataCoordinator:
 
 
 class IndexCoordinator:
+    """Per-vector-field index specs: ``index_spec/{collection}/{field}``
+    in the meta store, one build task per (segment, field)."""
+
     def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO):
         self.broker = broker
         self.meta = meta
         self.tso = tso
         self.sub = Subscription(broker, COORD_CHANNEL)
-        self.pending_tasks: dict[tuple[str, int], dict] = {}
-        self.built: dict[tuple[str, int], dict] = {}
+        # (collection, segment_id, field) -> task / index_built payload
+        self.pending_tasks: dict[tuple[str, int, str], dict] = {}
+        self.built: dict[tuple[str, int, str], dict] = {}
 
     def set_index_spec(
-        self, collection: str, kind: str, params: dict[str, Any] | None = None,
+        self,
+        collection: str,
+        field: str,
+        kind: str,
+        params: dict[str, Any] | None = None,
         metric: Metric = Metric.L2,
+        column: str | None = None,
     ) -> None:
+        """Declare the index of one vector field.  ``column`` is the
+        segment column backing the field (the first vector field is stored
+        as the primary "vector" column); defaults to the field name."""
         self.meta.put(
-            f"index_spec/{collection}",
-            {"kind": kind, "params": params or {}, "metric": metric.value},
+            f"index_spec/{collection}/{field}",
+            {
+                "field": field,
+                "column": column or field,
+                "kind": kind,
+                "params": params or {},
+                "metric": metric.value,
+            },
         )
 
-    def index_spec(self, collection: str) -> dict | None:
-        return self.meta.get(f"index_spec/{collection}")
+    def index_spec(self, collection: str, field: str = "vector") -> dict | None:
+        return self.meta.get(f"index_spec/{collection}/{field}")
+
+    def index_specs(self, collection: str) -> dict[str, dict]:
+        """All field specs of a collection: field name -> spec."""
+        return {
+            key.rsplit("/", 1)[1]: spec
+            for key, spec in self.meta.scan(f"index_spec/{collection}/").items()
+        }
+
+    def _task_of(self, collection: str, segment_id: int, spec: dict) -> dict:
+        return {
+            "msg": "index_build_task",
+            "collection": collection,
+            "segment_id": segment_id,
+            "field": spec["field"],
+            "column": spec.get("column", spec["field"]),
+            "index_kind": spec["kind"],
+            "params": spec["params"],
+            "metric": spec["metric"],
+        }
 
     def step(self) -> bool:
         progress = False
@@ -251,32 +288,24 @@ class IndexCoordinator:
                 continue
             p = entry.payload
             if p.get("msg") == "segment_sealed":
-                spec = self.index_spec(p["collection"])
-                if spec is None:
-                    continue
-                key = (p["collection"], p["segment_id"])
-                if key in self.pending_tasks or key in self.built:
-                    continue
-                task = {
-                    "msg": "index_build_task",
-                    "collection": p["collection"],
-                    "segment_id": p["segment_id"],
-                    "index_kind": spec["kind"],
-                    "params": spec["params"],
-                    "metric": spec["metric"],
-                }
-                self.pending_tasks[key] = task
-                self.broker.publish(
-                    COORD_CHANNEL,
-                    LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
-                )
-                progress = True
+                for field, spec in self.index_specs(p["collection"]).items():
+                    key = (p["collection"], p["segment_id"], field)
+                    if key in self.pending_tasks or key in self.built:
+                        continue
+                    task = self._task_of(p["collection"], p["segment_id"], spec)
+                    self.pending_tasks[key] = task
+                    self.broker.publish(
+                        COORD_CHANNEL,
+                        LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
+                    )
+                    progress = True
             elif p.get("msg") == "index_built":
-                key = (p["collection"], p["segment_id"])
+                field = p.get("field", "vector")
+                key = (p["collection"], p["segment_id"], field)
                 self.pending_tasks.pop(key, None)
                 self.built[key] = p
                 self.meta.put(
-                    f"index/{p['collection']}/{p['segment_id']}",
+                    f"index/{p['collection']}/{p['segment_id']}/{field}",
                     {"kind": p["index_kind"], "key": p["index_key"]},
                 )
                 progress = True
@@ -284,45 +313,51 @@ class IndexCoordinator:
                 # The rewrite produced fresh segments: index them, and forget
                 # build state of the sources they replaced.
                 for sid in p.get("sources", ()):
-                    skey = (p["collection"], sid)
-                    self.pending_tasks.pop(skey, None)
-                    self.built.pop(skey, None)
+                    for key in [
+                        k for k in self.pending_tasks
+                        if k[:2] == (p["collection"], sid)
+                    ]:
+                        self.pending_tasks.pop(key, None)
+                    for key in [
+                        k for k in self.built if k[:2] == (p["collection"], sid)
+                    ]:
+                        self.built.pop(key, None)
                 for t in p["segments"]:
                     if t["num_rows"]:
                         self.rebuild_segment(p["collection"], t["segment_id"])
                 progress = True
             elif p.get("msg") == "segment_gc":
-                key = (p["collection"], p["segment_id"])
-                self.pending_tasks.pop(key, None)
-                self.built.pop(key, None)
-                self.meta.delete(f"index/{p['collection']}/{p['segment_id']}")
-                for claim in self.meta.scan(
-                    f"index_claim/{p['collection']}/{p['segment_id']}/"
-                ):
+                coll, sid = p["collection"], p["segment_id"]
+                for key in [k for k in self.pending_tasks if k[:2] == (coll, sid)]:
+                    self.pending_tasks.pop(key, None)
+                for key in [k for k in self.built if k[:2] == (coll, sid)]:
+                    self.built.pop(key, None)
+                for ikey in self.meta.scan(f"index/{coll}/{sid}/"):
+                    self.meta.delete(ikey)
+                for claim in self.meta.scan(f"index_claim/{coll}/{sid}/"):
                     self.meta.delete(claim)
                 progress = True
         return progress
 
-    def rebuild_segment(self, collection: str, segment_id: int) -> None:
-        """Re-issue a build (after compaction or heavy deletes)."""
-        spec = self.index_spec(collection)
-        if spec is None:
-            return
-        self.built.pop((collection, segment_id), None)
-        self.meta.delete(f"index_claim/{collection}/{segment_id}/{spec['kind']}")
-        task = {
-            "msg": "index_build_task",
-            "collection": collection,
-            "segment_id": segment_id,
-            "index_kind": spec["kind"],
-            "params": spec["params"],
-            "metric": spec["metric"],
-        }
-        self.pending_tasks[(collection, segment_id)] = task
-        self.broker.publish(
-            COORD_CHANNEL,
-            LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
-        )
+    def rebuild_segment(
+        self, collection: str, segment_id: int, fields: "list[str] | None" = None
+    ) -> None:
+        """Re-issue builds (after compaction, heavy deletes, or a new
+        field spec); ``fields=None`` rebuilds every spec'd field."""
+        specs = self.index_specs(collection)
+        for field, spec in specs.items():
+            if fields is not None and field not in fields:
+                continue
+            self.built.pop((collection, segment_id, field), None)
+            self.meta.delete(
+                f"index_claim/{collection}/{segment_id}/{field}/{spec['kind']}"
+            )
+            task = self._task_of(collection, segment_id, spec)
+            self.pending_tasks[(collection, segment_id, field)] = task
+            self.broker.publish(
+                COORD_CHANNEL,
+                LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -352,7 +387,8 @@ class QueryCoordinator:
         # are modelled by assign_replicas)
         self.assignment: dict[tuple[str, int], str] = {}
         self.replicas: int = 1
-        self._known_indexes: dict[tuple[str, int], dict] = {}
+        # (collection, segment_id) -> {field: index_built payload}
+        self._known_indexes: dict[tuple[str, int], dict[str, dict]] = {}
         # (collection, segment_id) -> visible_from_ts MVCC gate of compacted
         # rewrites; must survive failover/rebalance reloads or a pinned
         # query would see both the rewrite and its retired sources.
@@ -411,19 +447,10 @@ class QueryCoordinator:
                 progress |= self._assign_segment(p["collection"], p["segment_id"])
             elif msg == "index_built":
                 key = (p["collection"], p["segment_id"])
-                self._known_indexes[key] = p
+                self._known_indexes.setdefault(key, {})[p.get("field", "vector")] = p
                 node = self.assignment.get(key)
                 if node:
-                    self._publish(
-                        {
-                            "msg": "load_index",
-                            "node_id": node,
-                            "collection": p["collection"],
-                            "segment_id": p["segment_id"],
-                            "index_kind": p["index_kind"],
-                            "index_key": p["index_key"],
-                        }
-                    )
+                    self._publish(self._load_index_payload(node, p))
                 progress = True
             elif msg == "segment_compacted":
                 progress |= self._handle_compacted(p)
@@ -529,19 +556,21 @@ class QueryCoordinator:
                 "visible_from_ts": self._visible_from.get(key, 0),
             }
         )
-        idx = self._known_indexes.get(key)
-        if idx:
-            self._publish(
-                {
-                    "msg": "load_index",
-                    "node_id": node,
-                    "collection": collection,
-                    "segment_id": segment_id,
-                    "index_kind": idx["index_kind"],
-                    "index_key": idx["index_key"],
-                }
-            )
+        for idx in self._known_indexes.get(key, {}).values():
+            self._publish(self._load_index_payload(node, idx))
         return True
+
+    def _load_index_payload(self, node: str, built: dict) -> dict:
+        return {
+            "msg": "load_index",
+            "node_id": node,
+            "collection": built["collection"],
+            "segment_id": built["segment_id"],
+            "field": built.get("field", "vector"),
+            "column": built.get("column", built.get("field", "vector")),
+            "index_kind": built["index_kind"],
+            "index_key": built["index_key"],
+        }
 
     # ------------------------------------------------------ channel coverage
     def assign_channels(self, collection: str, num_shards: int) -> None:
@@ -632,18 +661,8 @@ class QueryCoordinator:
                     "visible_from_ts": self._visible_from.get(key, 0),
                 }
             )
-            idx = self._known_indexes.get(key)
-            if idx:
-                self._publish(
-                    {
-                        "msg": "load_index",
-                        "node_id": lo,
-                        "collection": coll,
-                        "segment_id": sid,
-                        "index_kind": idx["index_kind"],
-                        "index_key": idx["index_key"],
-                    }
-                )
+            for idx in self._known_indexes.get(key, {}).values():
+                self._publish(self._load_index_payload(lo, idx))
             self._publish(
                 {"msg": "release_segment", "node_id": hi, "collection": coll, "segment_id": sid}
             )

@@ -55,20 +55,25 @@ class IndexNode:
         coll = task["collection"]
         sid = task["segment_id"]
         kind = task["index_kind"]
-        claim_key = f"index_claim/{coll}/{sid}/{kind}"
+        # Per-field builds: the task names the schema field and the binlog
+        # column backing it (the first vector field is stored as "vector").
+        field = task.get("field", "vector")
+        column = task.get("column", field)
+        claim_key = f"index_claim/{coll}/{sid}/{field}/{kind}"
         # CAS claim: only one index node builds a given task.
         if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
             return False
 
-        vectors = read_binlog_column(self.store, coll, sid, "vector")
+        vectors = read_binlog_column(self.store, coll, sid, column)
         spec = IndexSpec(
             kind=kind,
             metric=Metric(task.get("metric", "l2")),
             params=task.get("params") or {},
+            field=field,
         )
         index = create_index(spec)
         index.build(vectors)
-        key = index_key(coll, sid, kind)
+        key = index_key(coll, sid, field, kind)
         self.store.put(key, index.save())
         self.builds_completed += 1
 
@@ -81,6 +86,8 @@ class IndexNode:
                     "msg": "index_built",
                     "collection": coll,
                     "segment_id": sid,
+                    "field": field,
+                    "column": column,
                     "index_kind": kind,
                     "index_key": key,
                     "built_by": self.node_id,

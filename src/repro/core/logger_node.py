@@ -58,21 +58,31 @@ class Logger:
 
         lsn = self.tso.next()
         shards = np.array([shard_of_pk(pk, info.num_shards) for pk in pks.tolist()])
-        vec_field = info.schema.vector_fields()[0].name
+        # The first vector field is the segment's primary "vector" column;
+        # additional vector fields ride the extras columns under their own
+        # names (same path as attributes), so multi-vector rows stay columnar
+        # end to end (WAL -> growing segment -> binlog).
+        vec_fields = info.schema.vector_fields()
+        vec_field = vec_fields[0].name
         extra_names = [
             f.name for f in info.schema.attribute_fields() if f.name in rows
         ]
+        extra_vec_names = [f.name for f in vec_fields[1:] if f.name in rows]
         for shard in np.unique(shards):
             sel = shards == shard
             count = int(sel.sum())
             segment_id = self.data_coord.assign_segment(info.name, int(shard), count)
+            extras = {f: np.asarray(rows[f])[sel] for f in extra_names}
+            extras.update(
+                {f: np.asarray(rows[f], np.float32)[sel] for f in extra_vec_names}
+            )
             payload = {
                 "collection": info.name,
                 "shard": int(shard),
                 "segment_id": segment_id,
                 "pk": pks[sel],
                 "vector": np.asarray(rows[vec_field], np.float32)[sel],
-                "extras": {f: np.asarray(rows[f])[sel] for f in extra_names},
+                "extras": extras,
             }
             self.broker.publish(
                 dml_channel(info.name, int(shard)),

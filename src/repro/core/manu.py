@@ -7,6 +7,16 @@
     coll.create_index("vector", kind="ivf_flat", params={"nlist": 64})
     res = coll.search(queries, limit=10, staleness_ms=100.0)
 
+The declarative surface (``core/request.py``) drives the same pipeline:
+
+    res = coll.search(SearchRequest(
+        anns=[AnnsQuery("vector", q1, weight=0.7),
+              AnnsQuery("img_vec", q2, weight=0.3)],
+        k=10, consistency=ConsistencyLevel.BOUNDED,
+        filter="price < 50", radius=120.0, output_fields=("price",),
+        ranker=Ranker.rrf(),
+    ))
+
 Two driving modes:
 
 * **cooperative** (default) — deterministic: every API call pumps the
@@ -27,7 +37,7 @@ import numpy as np
 
 from .collection import CollectionInfo, FieldSchema, FieldType, Metric, Schema
 from .compaction import CompactionCoordinator, CompactionNode, GCReaper
-from .consistency import GuaranteeTs
+from .consistency import ConsistencyLevel, GuaranteeTs
 from .coordinator import (
     DataCoordinator,
     IndexCoordinator,
@@ -42,6 +52,7 @@ from .meta_store import MetaStore
 from .object_store import MemoryObjectStore, ObjectStore
 from .proxy import BatchingProxy, Proxy, SearchResult
 from .query_node import QueryNode
+from .request import AnnsQuery, Ranker, SearchRequest, vector_column_of
 from .time_travel import RestoredCollection, TimeTravel
 from .timestamp import INFINITE_STALENESS, TSO, Clock, ManualClock
 
@@ -93,14 +104,21 @@ class ManuCollection:
         return lsn
 
     def create_index(self, field: str, kind: str, params: dict | None = None) -> None:
-        if field != "vector" and self.info.schema.field(field).dtype is not FieldType.VECTOR:
-            raise ValueError("create_index currently targets the vector field")
+        fs = self.info.schema.field(field)  # KeyError for unknown fields
+        if fs.dtype is not FieldType.VECTOR:
+            raise ValueError(
+                f"create_index targets vector fields; '{field}' is {fs.dtype.value}"
+            )
         self.system.index_coord.set_index_spec(
-            self.name, kind, params, metric=self.info.metric
+            self.name, field, kind, params, metric=self.info.metric,
+            column=vector_column_of(self.info.schema, field),
         )
+        # Handle-local mirror for introspection; the meta store
+        # (index_coord.index_specs) stays the authoritative copy.
+        self.info.index_specs[field] = {"kind": kind, "params": params or {}}
         # Batch indexing (paper §3.5): issue builds for already-sealed segments.
         for sid in self.system.data_coord.sealed_segments(self.name):
-            self.system.index_coord.rebuild_segment(self.name, sid)
+            self.system.index_coord.rebuild_segment(self.name, sid, fields=[field])
         if not self.system.config.threaded:
             self.system.run_until_idle()
 
@@ -122,35 +140,110 @@ class ManuCollection:
 
     def search(
         self,
-        queries: np.ndarray,
+        queries=None,
         limit: int = 10,
         staleness_ms: float | None = None,
         read_your_writes: bool = False,
         filter_expr: str | None = None,
         time_travel_ts: int | None = None,
         hedge_timeout_s: float | None = None,
+        consistency: ConsistencyLevel | None = None,
+        radius: float | None = None,
+        range_filter: float | None = None,
+        output_fields=(),
+        request: SearchRequest | None = None,
     ) -> SearchResult:
+        """Search the collection.
+
+        Accepts either a declarative :class:`SearchRequest` (as ``queries``
+        or the ``request`` kwarg) or the legacy kwarg surface, which is a
+        thin facade: the kwargs are packed into a single-field
+        ``SearchRequest`` and executed by the exact same pipeline.
+        """
+        if isinstance(queries, SearchRequest):
+            request = queries
+        if request is not None:
+            # A declarative request carries every option itself; reject
+            # stray legacy kwargs instead of silently dropping them.
+            stray = {
+                "limit": limit != 10,
+                "staleness_ms": staleness_ms is not None,
+                "read_your_writes": read_your_writes,
+                "filter_expr": filter_expr is not None,
+                "time_travel_ts": time_travel_ts is not None,
+                "consistency": consistency is not None,
+                "radius": radius is not None,
+                "range_filter": range_filter is not None,
+                "output_fields": bool(tuple(output_fields)),
+            }
+            bad = [name for name, is_set in stray.items() if is_set]
+            if bad:
+                raise ValueError(
+                    f"pass {bad} inside the SearchRequest, not as kwargs"
+                )
+        session_override = None
+        if request is None:
+            wants_session = (
+                read_your_writes or consistency is ConsistencyLevel.SESSION
+            )
+            request = SearchRequest.single(
+                queries,
+                field=self.info.schema.vector_fields()[0].name,
+                k=limit,
+                consistency=consistency,
+                staleness_ms=staleness_ms,
+                session_ts=self.last_write_ts if wants_session else 0,
+                filter=filter_expr,
+                radius=radius,
+                range_filter=range_filter,
+                output_fields=tuple(output_fields),
+                time_travel_ts=time_travel_ts,
+            )
+        elif (
+            request.consistency is ConsistencyLevel.SESSION
+            and request.session_ts == 0
+        ):
+            # SESSION with no explicit watermark reads this handle's last
+            # write; passed as an override so the caller's request object is
+            # never mutated (it may be reused across later writes).
+            session_override = self.last_write_ts
         return self.system.search(
-            self,
-            np.asarray(queries, np.float32),
-            limit,
-            staleness_ms=staleness_ms,
-            session_ts=self.last_write_ts if read_your_writes else 0,
-            filter_expr=filter_expr,
-            time_travel_ts=time_travel_ts,
-            hedge_timeout_s=hedge_timeout_s,
+            self, request,
+            hedge_timeout_s=hedge_timeout_s, session_ts=session_override,
         )
+
+    def hybrid_search(
+        self,
+        anns: "list[AnnsQuery]",
+        limit: int = 10,
+        ranker: Ranker | None = None,
+        **kw,
+    ) -> SearchResult:
+        """Multi-vector search: one AnnsQuery per vector field, fused by
+        ``ranker`` (weighted-sum by default)."""
+        request = SearchRequest(
+            anns=anns, k=limit, ranker=ranker or Ranker.weighted(), **kw
+        )
+        return self.search(request)
 
     def query(self, queries: np.ndarray, limit: int, expr: str, **kw) -> SearchResult:
         """PyManu ``query``: vector search with boolean filter expression."""
         return self.search(queries, limit, filter_expr=expr, **kw)
 
     def num_entities(self) -> int:
-        return sum(
-            qn.memory_rows()
-            for qn in self.system.query_nodes.values()
-            if qn.alive
-        )
+        """Rows of THIS collection across the cluster, counting each
+        segment once even when replicated on several nodes (and preferring
+        the sealed copy over a node's lingering growing twin)."""
+        sealed_rows: dict[int, int] = {}
+        growing_rows: dict[int, int] = {}
+        for qn in self.system.query_nodes.values():
+            if not qn.alive:
+                continue
+            for (_c, sid, is_sealed), n in qn.segment_rows(self.name).items():
+                (sealed_rows if is_sealed else growing_rows)[sid] = n
+        total = sum(sealed_rows.values())
+        total += sum(n for sid, n in growing_rows.items() if sid not in sealed_rows)
+        return total
 
 
 class ManuSystem:
@@ -400,24 +493,48 @@ class ManuSystem:
     def search(
         self,
         coll: ManuCollection,
-        queries: np.ndarray,
-        k: int,
+        queries,
+        k: int | None = None,
         staleness_ms: float | None = None,
-        session_ts: int = 0,
+        session_ts: int | None = None,
         filter_expr: str | None = None,
         time_travel_ts: int | None = None,
         hedge_timeout_s: float | None = None,
     ) -> SearchResult:
-        tau = self.config.default_staleness_ms if staleness_ms is None else staleness_ms
-        query_ts = time_travel_ts if time_travel_ts is not None else self.tso.next()
-        guarantee = GuaranteeTs(query_ts=query_ts, staleness_ms=tau, session_ts=session_ts)
-        if time_travel_ts is not None:
+        """Resolve a :class:`SearchRequest`'s consistency requirement into
+        a pinned :class:`GuaranteeTs` and hand it to the proxy.  The legacy
+        positional form is packed into a request first.  ``session_ts``
+        overrides the request's watermark without mutating the request
+        (SESSION reads resolved by the collection handle)."""
+        if isinstance(queries, SearchRequest):
+            request = queries
+        else:
+            request = SearchRequest.single(
+                queries,
+                field=coll.info.schema.vector_fields()[0].name,
+                k=k if k is not None else 10,
+                staleness_ms=staleness_ms,
+                session_ts=session_ts or 0,
+                filter=filter_expr,
+                time_travel_ts=time_travel_ts,
+            )
+        effective_session = (
+            request.session_ts if session_ts is None else session_ts
+        )
+        tau = request.resolve_staleness_ms(self.config.default_staleness_ms)
+        if request.time_travel_ts is not None:
             # Historical reads never wait: the data is by definition old.
+            query_ts = request.time_travel_ts
             guarantee = GuaranteeTs(query_ts=query_ts, staleness_ms=INFINITE_STALENESS)
+        else:
+            query_ts = self.tso.next()
+            guarantee = GuaranteeTs(
+                query_ts=query_ts, staleness_ms=tau, session_ts=effective_session
+            )
         wait_fn = self._threaded_wait if self.config.threaded else self._cooperative_wait
         return self.proxy.search(
-            coll.info, queries, k, guarantee,
-            wait_fn=wait_fn, hedge_timeout_s=hedge_timeout_s, filter_expr=filter_expr,
+            coll.info, request, guarantee=guarantee,
+            wait_fn=wait_fn, hedge_timeout_s=hedge_timeout_s,
         )
 
     def _cooperative_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:

@@ -22,22 +22,30 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..kernels import ops
-from .collection import CollectionInfo, Metric
+from .collection import CollectionInfo, FieldType, Metric
 from .consistency import GuaranteeTs
 from .coordinator import QueryCoordinator
 from .log import shard_of_pk
 from .logger_node import Logger
 from .meta_store import MetaStore
 from .query_node import QueryNode
+from .request import (
+    NodeSearchRequest,
+    SearchRequest,
+    vector_column_of,
+)
 from .timestamp import TSO, INFINITE_STALENESS
 
 
 @dataclass
 class SearchResult:
-    scores: np.ndarray  # [nq, k]
+    scores: np.ndarray  # [nq, k]; raw metric scores, or fused sims (hybrid)
     pks: np.ndarray  # [nq, k], -1 = empty slot
     query_ts: int
     waited_ms: float = 0.0
+    # Output-field hydration: field name -> [nq, k] (or [nq, k, dim] for
+    # vector fields) aligned with ``pks``; empty slots carry NaN/0 fills.
+    fields: dict[str, np.ndarray] | None = None
 
 
 class Proxy:
@@ -101,74 +109,221 @@ class Proxy:
     def search(
         self,
         info: CollectionInfo,
-        queries: np.ndarray,
-        k: int,
-        guarantee: GuaranteeTs,
+        queries,
+        k: int | None = None,
+        guarantee: GuaranteeTs | None = None,
         wait_fn=None,
         hedge_timeout_s: float | None = None,
         filter_expr=None,
     ) -> SearchResult:
-        """Two-phase reduce over the query nodes holding the collection.
+        """Execute one declarative :class:`SearchRequest` (or the legacy
+        positional ``(queries, k)`` form, which is packed into a
+        single-field request) with a two-phase reduce over the query nodes
+        holding the collection.
 
-        ``wait_fn(node, guarantee) -> None`` implements the consistency wait
-        (cooperative runtimes pump the system; threaded runtimes block).
+        Per sub-request: node-wise top-k partials -> global ``merge_topk``
+        reduce with pk-dedup (a segment may surface from two nodes during
+        redistribution) — vectorized in the merge_topk kernel.  Hybrid
+        requests then fuse the per-field global lists with the request's
+        ranker; ``output_fields`` hydrate from node-held segment columns.
+
+        ``wait_fn(node, guarantee) -> None`` implements the consistency
+        wait (cooperative runtimes pump the system; threaded runtimes
+        block).
         """
+        if isinstance(queries, SearchRequest):
+            request = queries
+        else:
+            request = SearchRequest.single(
+                np.asarray(queries, np.float32),
+                field=info.schema.vector_fields()[0].name,
+                k=k if k is not None else 10,
+                filter=filter_expr,
+            )
+        # Never mutate the caller's request object — it may be reused.
+        active_filter = request.filter if request.filter is not None else filter_expr
         self._verify(info.name)
+        request.validate(info.schema)
+        self._check_range_bounds(info.metric, request)
+        if guarantee is None:
+            # Standalone proxy use: honor the request's own consistency
+            # fields (the system facade resolves these with its configured
+            # default staleness and wait machinery instead).
+            if request.time_travel_ts is not None:
+                guarantee = GuaranteeTs(
+                    query_ts=request.time_travel_ts,
+                    staleness_ms=INFINITE_STALENESS,
+                )
+            else:
+                guarantee = GuaranteeTs(
+                    query_ts=self.tso.next(),
+                    staleness_ms=request.resolve_staleness_ms(INFINITE_STALENESS),
+                    session_ts=request.session_ts,
+                )
         metric = info.metric
+        n_fields = len(request.anns)
         nodes = self.query_coord.nodes_for_collection(info.name)
         target_nodes = [
             self.query_nodes[n] for n in nodes if self.query_nodes[n].alive
         ]
         t0 = time.perf_counter()
-        partials: list[tuple[np.ndarray, np.ndarray]] = []
-        pending = list(target_nodes)
-        for node in pending:
+
+        def dispatch(node: QueryNode):
+            node_req = NodeSearchRequest.from_request(
+                info.schema, info.name, request, metric, guarantee,
+                filter_masks=self._filters(node, info, active_filter),
+            )
+            return node.search_request(node_req)
+
+        # partials[f] collects every node's candidate list for sub-request f
+        partials: list[list[tuple[np.ndarray, np.ndarray]]] = [
+            [] for _ in range(n_fields)
+        ]
+        for node in list(target_nodes):
             if wait_fn is not None:
                 wait_fn(node, guarantee)
             try:
                 if hedge_timeout_s is not None:
-                    res = _run_with_timeout(
-                        lambda: node.search(info.name, queries, k, metric, guarantee,
-                                            filter_masks=self._filters(node, info, filter_expr)),
-                        hedge_timeout_s,
-                    )
+                    res = _run_with_timeout(lambda: dispatch(node), hedge_timeout_s)
                     if res is None:  # straggler: hedge to any other live node
                         others = [n for n in target_nodes if n is not node and n.alive]
-                        if others:
-                            res = others[0].search(
-                                info.name, queries, k, metric, guarantee,
-                                filter_masks=self._filters(others[0], info, filter_expr),
-                            )
-                        else:
-                            res = node.search(info.name, queries, k, metric, guarantee,
-                                              filter_masks=self._filters(node, info, filter_expr))
+                        res = dispatch(others[0]) if others else dispatch(node)
                 else:
-                    res = node.search(info.name, queries, k, metric, guarantee,
-                                      filter_masks=self._filters(node, info, filter_expr))
+                    res = dispatch(node)
             except RuntimeError:
                 continue  # dead node; coordinator failover will cover its data
-            partials.append(res)
+            for f in range(n_fields):
+                partials[f].append(res[f])
         waited_ms = (time.perf_counter() - t0) * 1e3
 
-        nq = len(queries)
-        if not partials:
-            fill = np.inf if metric is Metric.L2 else -np.inf
-            return SearchResult(
-                np.full((nq, k), fill, np.float32),
-                np.full((nq, k), -1, np.int64),
-                guarantee.query_ts,
-                waited_ms,
+        nq = request.nq
+        kk = request.k
+        metric_str = "l2" if metric is Metric.L2 else "ip"
+        fill = np.inf if metric is Metric.L2 else -np.inf
+        merged: list[tuple[np.ndarray, np.ndarray]] = []
+        for f in range(n_fields):
+            if not partials[f]:
+                merged.append(
+                    (
+                        np.full((nq, kk), fill, np.float32),
+                        np.full((nq, kk), -1, np.int64),
+                    )
+                )
+                continue
+            out_f = ops.merge_topk(
+                np.concatenate([p[0] for p in partials[f]], axis=1),
+                np.concatenate([p[1] for p in partials[f]], axis=1),
+                kk,
+                metric=metric_str,
             )
-        # Global reduce: segmented k-way merge of the node-wise partials
-        # with pk-dedup (a segment may surface from two nodes during
-        # redistribution) — vectorized in the merge_topk kernel.
-        out_s, out_p = ops.merge_topk(
-            np.concatenate([p[0] for p in partials], axis=1),
-            np.concatenate([p[1] for p in partials], axis=1),
-            k,
-            metric="l2" if metric is Metric.L2 else "ip",
-        )
-        return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms)
+            # Range search: one post-scan radius cut on the GLOBAL per-field
+            # list, so results are placement-independent ("the in-range
+            # subset of the global top-k"); per-field params override the
+            # request-level bounds.
+            radius = request.anns[f].radius(request.radius)
+            range_filter = request.anns[f].range_filter(request.range_filter)
+            if radius is not None or range_filter is not None:
+                out_f = ops.range_cut(
+                    out_f[0], out_f[1], metric_str, radius, range_filter
+                )
+            merged.append(out_f)
+        if request.is_hybrid:
+            # Hybrid fusion over the per-field GLOBAL lists (RRF ranks are
+            # only meaningful after the global reduce, hence proxy-side).
+            out_s, out_p = ops.hybrid_fuse(
+                [m[0] for m in merged],
+                [m[1] for m in merged],
+                kk,
+                metrics=[metric.value] * n_fields,
+                weights=[a.weight for a in request.anns],
+                kind=request.ranker.kind,
+                rrf_k=request.ranker.rrf_k,
+            )
+        else:
+            out_s, out_p = merged[0]
+        fields = None
+        if request.output_fields:
+            fields = self._hydrate(
+                target_nodes, info, out_p, request.output_fields, guarantee.query_ts
+            )
+        return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms, fields)
+
+    @staticmethod
+    def _check_range_bounds(metric: Metric, request: SearchRequest) -> None:
+        """Reject always-empty range windows early (the bounds follow the
+        Milvus convention: L2 keeps ``range_filter <= d < radius``,
+        IP/cosine keeps ``radius < s <= range_filter``)."""
+        for a in request.anns:
+            radius = a.radius(request.radius)
+            range_filter = a.range_filter(request.range_filter)
+            if radius is None or range_filter is None:
+                continue
+            if metric is Metric.L2 and range_filter >= radius:
+                raise ValueError(
+                    f"L2 range window is empty: requires range_filter < radius, "
+                    f"got range_filter={range_filter} >= radius={radius}"
+                )
+            if metric is not Metric.L2 and radius >= range_filter:
+                raise ValueError(
+                    f"{metric.value} range window is empty: requires "
+                    f"radius < range_filter, got radius={radius} >= "
+                    f"range_filter={range_filter}"
+                )
+
+    # ----------------------------------------------------------- hydration
+    def _hydrate(
+        self,
+        target_nodes: "list[QueryNode]",
+        info: CollectionInfo,
+        pks: np.ndarray,
+        output_fields: "tuple[str, ...]",
+        ts: int,
+    ) -> dict[str, np.ndarray]:
+        """Gather ``output_fields`` columns for the result pks from the
+        nodes' segment copies (binlog columns / growing rows)."""
+        col_of = {
+            f: ("pk" if f == "pk" else vector_column_of(info.schema, f)
+                if info.schema.field(f).dtype is FieldType.VECTOR else f)
+            for f in output_fields
+        }
+        columns = sorted(set(col_of.values()))
+        found: dict[str, list[tuple[np.ndarray, np.ndarray]]] = {
+            c: [] for c in columns
+        }
+        for node in target_nodes:
+            if not node.alive:
+                continue
+            try:
+                got = node.fetch_fields(info.name, pks, columns, ts)
+            except RuntimeError:
+                continue
+            for c, (fpks, vals) in got.items():
+                if len(fpks):
+                    found[c].append((fpks, vals))
+        out: dict[str, np.ndarray] = {}
+        flat = np.where(pks >= 0, pks, 0)
+        live = pks >= 0
+        for f in output_fields:
+            c = col_of[f]
+            if found[c]:
+                fp = np.concatenate([x[0] for x in found[c]])
+                fv = np.concatenate([x[1] for x in found[c]])
+                order = np.argsort(fp, kind="stable")
+                fp, fv = fp[order], fv[order]
+                idx = np.minimum(np.searchsorted(fp, flat), len(fp) - 1)
+                hit = live & (fp[idx] == flat)
+                vals = fv[idx]
+            else:
+                hit = np.zeros_like(live)
+                if f != "pk" and info.schema.field(f).dtype is FieldType.VECTOR:
+                    # keep the documented [nq, k, dim] shape even when no
+                    # candidate hydrated (empty result / range cut all)
+                    dim = info.schema.field(f).dim
+                    vals = np.zeros(pks.shape + (dim,), np.float32)
+                else:
+                    vals = np.zeros(pks.shape, np.float32)
+            out[f] = _mask_fill(vals, hit)
+        return out
 
     def _filters(self, node: QueryNode, info: CollectionInfo, filter_expr):
         """Resolve an attribute filter to per-segment row masks on a node."""
@@ -194,6 +349,21 @@ class Proxy:
             cols["pk"] = seg.pks()
             masks[sid] = expr.evaluate(cols, seg.num_rows)
         return masks
+
+
+def _mask_fill(vals: np.ndarray, hit: np.ndarray) -> np.ndarray:
+    """Fill non-hydrated slots with a dtype-appropriate empty value
+    (NaN for floats, 0/False for ints and bools, "" for strings)."""
+    vals = np.asarray(vals)
+    if hit.all():
+        return vals
+    if vals.ndim > hit.ndim:  # vector columns: [nq, k, dim]
+        hit = hit[..., None]
+    if np.issubdtype(vals.dtype, np.floating):
+        return np.where(hit, vals, np.nan)
+    if vals.dtype.kind in ("U", "S", "O"):
+        return np.where(hit, vals, np.asarray("", vals.dtype))
+    return np.where(hit, vals, np.zeros((), vals.dtype))
 
 
 def _run_with_timeout(fn, timeout_s: float):

@@ -22,7 +22,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..index.base import IndexSpec, VectorIndex
+from ..index.base import IndexSpec, VectorIndex, normalize_if_cosine
 from ..index.flat import FlatIndex
 from ..index.ivf import IVFFlatIndex
 from ..index.registry import create_index
@@ -31,15 +31,25 @@ from .collection import Metric
 from .consistency import GuaranteeTs
 from .log import EntryType, LogBroker, LogEntry, Subscription
 from .object_store import ObjectStore
+from .request import PRIMARY_VECTOR_COLUMN, AnnsQuery, NodeSearchRequest
 from .segment import Segment
 
 TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
 
 
+def _seg_column(seg: Segment, column: str) -> np.ndarray | None:
+    """A segment's stored column for one vector field (None if absent)."""
+    if column == PRIMARY_VECTOR_COLUMN:
+        return seg.vectors()
+    if column in seg.extra_fields:
+        return seg.extra(column)
+    return None
+
+
 @dataclass
 class SealedHandle:
     segment: Segment
-    index: VectorIndex | None = None
+    index: VectorIndex | None = None  # index on the primary vector column
     index_kind: str | None = None
     # Segment-map epoch gating (compaction hot-swap): a handle serves the
     # MVCC window [visible_from_ts, retired_at_ts).  Freshly sealed segments
@@ -48,11 +58,27 @@ class SealedHandle:
     # keeps reading the old version until the retention horizon releases it.
     visible_from_ts: int = 0
     retired_at_ts: int | None = None
+    # Indexes on additional vector columns (multi-vector schemas), keyed by
+    # segment column name.
+    extra_indexes: dict[str, VectorIndex] = field(default_factory=dict)
+    extra_index_kinds: dict[str, str] = field(default_factory=dict)
 
     def covers_ts(self, ts: int) -> bool:
         if ts < self.visible_from_ts:
             return False
         return self.retired_at_ts is None or ts < self.retired_at_ts
+
+    def index_for(self, column: str) -> VectorIndex | None:
+        if column == PRIMARY_VECTOR_COLUMN:
+            return self.index
+        return self.extra_indexes.get(column)
+
+    def set_index(self, column: str, index: VectorIndex, kind: str) -> None:
+        if column == PRIMARY_VECTOR_COLUMN:
+            self.index, self.index_kind = index, kind
+        else:
+            self.extra_indexes[column] = index
+            self.extra_index_kinds[column] = kind
 
 
 @dataclass
@@ -207,7 +233,8 @@ class QueryNode:
             return True
         if msg == "load_index":
             self.load_index(
-                p["collection"], p["segment_id"], p["index_kind"], p["index_key"]
+                p["collection"], p["segment_id"], p["index_kind"], p["index_key"],
+                column=p.get("column", PRIMARY_VECTOR_COLUMN),
             )
             return True
         if msg == "release_segment":
@@ -260,7 +287,12 @@ class QueryNode:
         return False
 
     def _build_slice_indexes(self) -> bool:
-        """Temporary IVF-FLAT per full slice of growing segments (paper §3.6)."""
+        """Temporary IVF-FLAT per full slice of growing segments (paper §3.6).
+
+        Built L2 (the WAL carries no collection metric); the planner only
+        uses a temp index whose metric matches the request and leaves
+        mismatched slices to the brute tail, so IP/cosine growing reads
+        stay exact."""
         progress = False
         for gs in self.growing.values():
             for s in gs.segment.full_slices():
@@ -285,14 +317,20 @@ class QueryNode:
         # Hand-off: drop our growing copy of the same segment.
         self.growing.pop(key, None)
 
-    def load_index(self, collection: str, segment_id: int, kind: str, index_key: str) -> None:
+    def load_index(
+        self,
+        collection: str,
+        segment_id: int,
+        kind: str,
+        index_key: str,
+        column: str = PRIMARY_VECTOR_COLUMN,
+    ) -> None:
         handle = self.sealed.get((collection, segment_id))
         if handle is None:
             self.load_sealed(collection, segment_id)
             handle = self.sealed[(collection, segment_id)]
         index = VectorIndex.load(self.store.get(index_key))
-        handle.index = index
-        handle.index_kind = kind
+        handle.set_index(column, index, kind)
 
     def release_segment(self, collection: str, segment_id: int) -> None:
         self.sealed.pop((collection, segment_id), None)
@@ -351,10 +389,30 @@ class QueryNode:
     def held_segments(self, collection: str) -> list[int]:
         return sorted(sid for (c, sid) in self.sealed if c == collection)
 
-    def memory_rows(self) -> int:
-        rows = sum(h.segment.num_rows for h in self.sealed.values())
-        rows += sum(g.segment.num_rows for g in self.growing.values())
+    def memory_rows(self, collection: str | None = None) -> int:
+        rows = sum(
+            h.segment.num_rows
+            for (c, _sid), h in self.sealed.items()
+            if collection is None or c == collection
+        )
+        rows += sum(
+            g.segment.num_rows
+            for (c, _sid), g in self.growing.items()
+            if collection is None or c == collection
+        )
         return rows
+
+    def segment_rows(self, collection: str) -> "dict[tuple[str, int, bool], int]":
+        """(collection, segment_id, is_sealed) -> live row count; used by
+        the per-collection entity count (replicated segments dedup upstream)."""
+        out: dict[tuple[str, int, bool], int] = {}
+        for (c, sid), h in self.sealed.items():
+            if c == collection and h.retired_at_ts is None:
+                out[(c, sid, True)] = h.segment.num_rows
+        for (c, sid), g in self.growing.items():
+            if c == collection:
+                out[(c, sid, False)] = g.segment.num_rows
+        return out
 
     # --------------------------------------------------------------- search
     def _request_doomed_pks(self, collection: str, ts: int) -> np.ndarray | None:
@@ -399,11 +457,31 @@ class QueryNode:
         collection: str,
         ts: int,
         filter_masks: "dict[int, np.ndarray] | None" = None,
+        column: str = PRIMARY_VECTOR_COLUMN,
+        metric: Metric | None = None,
+        doomed=_DOOMED_UNSET,
     ) -> SearchPlan:
         """Gather every candidate (segment, visibility, filter) unit for a
-        request pinned at ``ts`` and group it by execution class."""
+        request pinned at ``ts`` and group it by execution class.
+
+        ``column`` selects the vector column being searched (multi-vector
+        schemas); temporary slice indexes only exist for the primary
+        column, so other columns scan growing segments brute-force.  For
+        cosine requests pass ``metric`` so brute units take the segments'
+        cached row-normalized columns (indexes normalize at build).
+        ``doomed`` lets multi-field requests share one materialized
+        delta-delete set across sub-requests.
+        """
         plan = SearchPlan()
-        doomed = self._request_doomed_pks(collection, ts)
+        if doomed is QueryNode._DOOMED_UNSET:
+            doomed = self._request_doomed_pks(collection, ts)
+        unit_cols = metric is Metric.COSINE
+
+        def brute_column(seg: Segment) -> np.ndarray | None:
+            raw = _seg_column(seg, column)
+            if raw is None:
+                return None
+            return seg.unit_column(column) if unit_cols else raw
 
         # ---- sealed segments: indexed or brute ----
         for (coll, sid), handle in self.sealed.items():
@@ -419,13 +497,17 @@ class QueryNode:
                 mask = mask & filter_masks[sid]
             if not mask.any():
                 continue
-            if handle.index is not None:
+            index = handle.index_for(column)
+            if index is not None:
                 plan.indexed.append(
-                    ScanUnit(sid, seg.pks(), mask, index=handle.index)
+                    ScanUnit(sid, seg.pks(), mask, index=index)
                 )
             else:
+                vectors = brute_column(seg)
+                if vectors is None:
+                    continue  # segment predates the field; nothing to scan
                 plan.brute_sealed.append(
-                    ScanUnit(sid, seg.pks(), mask, vectors=seg.vectors())
+                    ScanUnit(sid, seg.pks(), mask, vectors=vectors)
                 )
 
         # ---- growing segments: temp slice indexes + brute tail ----
@@ -439,20 +521,29 @@ class QueryNode:
             if filter_masks and sid in filter_masks:
                 mask = mask & filter_masks[sid]
             pks = seg.pks()
+            vectors = brute_column(seg)
+            if vectors is None:
+                continue
             covered = np.zeros(seg.num_rows, dtype=bool)
-            for s_idx, temp in gs.slice_index_built.items():
-                lo, hi = seg.slice_bounds(s_idx)
-                covered[lo:hi] = True
-                if not mask[lo:hi].any():
-                    continue
-                plan.growing_slice.append(
-                    ScanUnit(sid, pks[lo:hi], mask[lo:hi], index=temp)
-                )
+            if column == PRIMARY_VECTOR_COLUMN:
+                for s_idx, temp in gs.slice_index_built.items():
+                    if metric is not None and temp.metric is not metric:
+                        # metric-mismatched temp index (built L2 off the
+                        # WAL): leave the slice in the brute tail so the
+                        # request's metric stays exact
+                        continue
+                    lo, hi = seg.slice_bounds(s_idx)
+                    covered[lo:hi] = True
+                    if not mask[lo:hi].any():
+                        continue
+                    plan.growing_slice.append(
+                        ScanUnit(sid, pks[lo:hi], mask[lo:hi], index=temp)
+                    )
             # tail = rows not covered by any temp index yet
             tail_mask = mask & ~covered
             if tail_mask.any():
                 plan.brute_tail.append(
-                    ScanUnit(sid, pks, tail_mask, vectors=seg.vectors())
+                    ScanUnit(sid, pks, tail_mask, vectors=vectors)
                 )
         return plan
 
@@ -485,11 +576,15 @@ class QueryNode:
                 pool_p.append(_map_pks(i[:, blk], unit.pks))
         # Brute classes run as one fused scan per class: a single shared
         # distance contraction, per-segment top-k extracted from it.
+        # Cosine scans normalize both sides: the planner handed us the
+        # segments' cached unit columns, only the queries normalize here
+        # (indexes normalize at build and take raw queries).
+        q_brute = normalize_if_cosine(metric, np.asarray(queries, np.float32))
         for units in (plan.brute_sealed, plan.brute_tail):
             if not units:
                 continue
             s, i = ops.topk_scan_segmented(
-                queries,
+                q_brute,
                 [u.vectors for u in units],
                 k,
                 metric=metric_str,
@@ -501,25 +596,17 @@ class QueryNode:
                 pool_p.append(_map_pks(i[:, blk], unit.pks))
         return pool_s, pool_p
 
-    def search(
-        self,
-        collection: str,
-        queries: np.ndarray,
-        k: int,
-        metric: Metric,
-        guarantee: GuaranteeTs,
-        filter_masks: "dict[int, np.ndarray] | None" = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Node-wise top-k.  Returns (scores [nq,k], pks [nq,k]; -1 = empty).
+    def search_request(
+        self, request: NodeSearchRequest
+    ) -> "list[tuple[np.ndarray, np.ndarray]]":
+        """Execute a node-level request: one planned pipeline per vector
+        column, returning the node-wise top-k candidate list PER sub-request
+        (fusion of hybrid sub-requests happens at the proxy, where global
+        per-field ranks exist; the radius cut is applied there too — cutting
+        node-local lists would make results depend on segment placement
+        whenever an inner ``range_filter`` bound is set).
 
-        ``filter_masks`` optionally maps segment_id -> row mask (attribute
-        filtering, resolved by the proxy per segment).
-
-        Execution is plan -> fused scans -> vectorized merge: the planner
-        groups candidate segments by execution class, brute classes run as
-        one batched scan each, and the node-wise reduce (pk-dedup,
-        keep-best-occurrence) is the ``merge_topk`` kernel rather than a
-        per-row Python loop.
+        Each returned pair is (scores [nq,k], pks [nq,k]; -1 = empty).
         """
         if not self.alive:
             raise RuntimeError(f"query node {self.node_id} is down")
@@ -530,19 +617,115 @@ class QueryNode:
         self.search_count += 1
         from ..kernels import ops
 
-        nq = len(queries)
-        plan = self.plan_search(collection, guarantee.query_ts, filter_masks)
-        pool_s, pool_p = self._execute_plan(plan, queries, k, metric)
-
-        if not pool_s:
-            fill = np.inf if metric is Metric.L2 else -np.inf
-            return (
-                np.full((nq, k), fill, np.float32),
-                np.full((nq, k), -1, np.int64),
+        metric = request.metric
+        metric_str = "l2" if metric is Metric.L2 else "ip"
+        ts = request.guarantee.query_ts
+        fill = np.inf if metric is Metric.L2 else -np.inf
+        # Materialize the delta-delete set ONCE for the whole request; every
+        # sub-request's plan probes the same sorted array.
+        doomed = self._request_doomed_pks(request.collection, ts)
+        results: list[tuple[np.ndarray, np.ndarray]] = []
+        for a in request.anns:
+            queries = a.queries
+            nq = len(queries)
+            plan = self.plan_search(
+                request.collection, ts, request.filter_masks,
+                column=a.field, metric=metric, doomed=doomed,
             )
-        return ops.merge_topk(
-            np.concatenate(pool_s, axis=1),
-            np.concatenate(pool_p, axis=1),
-            k,
-            metric="l2" if metric is Metric.L2 else "ip",
+            pool_s, pool_p = self._execute_plan(plan, queries, request.k, metric)
+            if not pool_s:
+                out = (
+                    np.full((nq, request.k), fill, np.float32),
+                    np.full((nq, request.k), -1, np.int64),
+                )
+            else:
+                out = ops.merge_topk(
+                    np.concatenate(pool_s, axis=1),
+                    np.concatenate(pool_p, axis=1),
+                    request.k,
+                    metric=metric_str,
+                )
+            results.append(out)
+        return results
+
+    def search(
+        self,
+        collection: str,
+        queries: np.ndarray,
+        k: int,
+        metric: Metric,
+        guarantee: GuaranteeTs,
+        filter_masks: "dict[int, np.ndarray] | None" = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Node-wise top-k over the primary vector column (the legacy
+        kwarg surface).  Returns (scores [nq,k], pks [nq,k]; -1 = empty).
+
+        This is a thin facade: the call is packed into a single-field
+        :class:`NodeSearchRequest` and executed by :meth:`search_request`,
+        so both surfaces share one planned pipeline.
+        """
+        request = NodeSearchRequest(
+            collection=collection,
+            k=k,
+            metric=metric,
+            guarantee=guarantee,
+            anns=[AnnsQuery(PRIMARY_VECTOR_COLUMN, queries)],
+            filter_masks=filter_masks,
         )
+        return self.search_request(request)[0]
+
+    # ----------------------------------------------------------- hydration
+    def fetch_fields(
+        self,
+        collection: str,
+        pks: np.ndarray,
+        columns: "list[str]",
+        ts: int,
+    ) -> "dict[str, tuple[np.ndarray, np.ndarray]]":
+        """Gather stored column values for result pks (output-field
+        hydration).  ``columns`` holds segment column names ("pk", the
+        primary "vector" column, or any extras column).  Returns
+        column -> (found_pks [n], values [n, ...]) over the rows visible
+        at ``ts`` on this node; the proxy assembles the [nq, k] view.
+        """
+        from ..kernels import ops
+
+        want = np.unique(np.asarray(pks))
+        want = want[want >= 0]
+        # Per column: list of (pks_hit, values) pairs.  Collected per
+        # column (not with one shared pk list) so a segment lacking a
+        # column simply contributes nothing for it and the pk/value
+        # alignment of the other columns stays intact.
+        out: dict[str, list] = {c: [] for c in columns}
+        if want.size:
+            doomed = self._request_doomed_pks(collection, ts)
+            sources: list[Segment] = [
+                h.segment
+                for (c, _sid), h in self.sealed.items()
+                if c == collection and h.covers_ts(ts)
+            ]
+            sources += [
+                g.segment for (c, _sid), g in self.growing.items() if c == collection
+            ]
+            for seg in sources:
+                if seg.num_rows == 0:
+                    continue
+                hit = self._visible(collection, seg, ts, doomed)
+                hit &= ops.isin_sorted(seg.pks(), want)
+                if not hit.any():
+                    continue
+                hit_pks = seg.pks()[hit]
+                for c in columns:
+                    col = seg.pks() if c == "pk" else _seg_column(seg, c)
+                    if col is None:
+                        continue  # segment predates the column
+                    out[c].append((hit_pks, np.asarray(col)[hit]))
+        return {
+            c: (
+                (np.concatenate([p for p, _v in out[c]]),
+                 np.concatenate([v for _p, v in out[c]]))
+                if out[c]
+                else (np.empty(0, np.int64), np.empty(0))
+            )
+            for c in columns
+        }

@@ -1,0 +1,209 @@
+"""Declarative search requests (paper §3.1 Table 2, §6.4).
+
+The read path is driven by one typed object instead of a kwarg chain:
+a :class:`SearchRequest` carries the top-k budget, the consistency
+requirement (a named level OR an explicit staleness / session
+timestamp), an attribute filter, an optional radius cut (range search),
+the output fields to hydrate, and one-or-more :class:`AnnsQuery`
+sub-requests — one per vector field.  Multi-vector (hybrid) requests
+fuse the per-field results with a :class:`Ranker` (weighted-sum over
+normalized similarities, or reciprocal-rank fusion).
+
+The proxy translates schema field names into segment *column* names
+(the first vector field is stored as the primary ``"vector"`` column,
+additional vector fields ride the extras columns under their own
+names) and ships a :class:`NodeSearchRequest` to every query node —
+the single object that replaces the old seven-positional-kwarg chain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import numpy as np
+
+from .collection import FieldType, Metric, Schema
+from .consistency import ConsistencyLevel, GuaranteeTs, staleness_ms_of
+
+#: Segment column name of the first (primary) vector field.
+PRIMARY_VECTOR_COLUMN = "vector"
+
+
+def vector_column_of(schema: Schema, field: str) -> str:
+    """Map a schema vector-field name to its segment column name."""
+    return PRIMARY_VECTOR_COLUMN if field == schema.vector_fields()[0].name else field
+
+
+@dataclass
+class AnnsQuery:
+    """One per-vector-field sub-request of a (possibly hybrid) search.
+
+    ``weight`` scales this field's contribution during fusion.  ``params``
+    may override request-level knobs per field (``radius`` /
+    ``range_filter``).
+    """
+
+    field: str
+    queries: np.ndarray  # [nq, dim] float32
+    weight: float = 1.0
+    params: dict = dc_field(default_factory=dict)
+
+    def __post_init__(self):
+        q = np.asarray(self.queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2:
+            raise ValueError(f"queries must be [nq, dim], got shape {q.shape}")
+        self.queries = q
+
+    def radius(self, default: float | None) -> float | None:
+        return self.params.get("radius", default)
+
+    def range_filter(self, default: float | None) -> float | None:
+        return self.params.get("range_filter", default)
+
+
+@dataclass(frozen=True)
+class Ranker:
+    """Hybrid fusion strategy for multi-vector requests.
+
+    * ``weighted`` — fused score is the weight-scaled sum of per-field
+      similarities normalized into (0, 1]: L2 ``1/(1+d)``, cosine
+      ``(1+s)/2``, IP ``1/(1+exp(-s))``.  Candidates absent from a
+      field's list contribute nothing for that field.
+    * ``rrf`` — reciprocal-rank fusion: ``sum_f w_f / (rrf_k + rank_f)``
+      with 1-based ranks within each field's result list.
+    """
+
+    kind: str = "weighted"  # "weighted" | "rrf"
+    rrf_k: float = 60.0
+
+    def __post_init__(self):
+        if self.kind not in ("weighted", "rrf"):
+            raise ValueError(f"unknown ranker kind '{self.kind}'")
+
+    @staticmethod
+    def weighted() -> "Ranker":
+        return Ranker("weighted")
+
+    @staticmethod
+    def rrf(k: float = 60.0) -> "Ranker":
+        return Ranker("rrf", rrf_k=k)
+
+
+@dataclass
+class SearchRequest:
+    """The full declarative read request (client -> proxy)."""
+
+    anns: list[AnnsQuery]
+    k: int = 10
+    consistency: ConsistencyLevel | None = None
+    staleness_ms: float | None = None  # explicit tau overrides ``consistency``
+    session_ts: int = 0  # read-your-writes watermark (session consistency)
+    filter: object | None = None  # str | FilterExpr over attribute fields
+    radius: float | None = None  # range search outer bound
+    range_filter: float | None = None  # range search inner bound
+    output_fields: tuple[str, ...] = ()
+    time_travel_ts: int | None = None
+    ranker: Ranker = dc_field(default_factory=Ranker)
+
+    def __post_init__(self):
+        if isinstance(self.anns, AnnsQuery):
+            self.anns = [self.anns]
+        self.anns = list(self.anns)
+        if not self.anns:
+            raise ValueError("SearchRequest needs at least one AnnsQuery")
+        self.output_fields = tuple(self.output_fields)
+        nqs = {len(a.queries) for a in self.anns}
+        if len(nqs) != 1:
+            raise ValueError(f"sub-requests disagree on query count: {sorted(nqs)}")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+
+    # ------------------------------------------------------------- helpers
+    @classmethod
+    def single(cls, queries: np.ndarray, field: str = "vector", **kw) -> "SearchRequest":
+        """The common one-vector-field case."""
+        return cls(anns=[AnnsQuery(field, queries)], **kw)
+
+    @property
+    def nq(self) -> int:
+        return len(self.anns[0].queries)
+
+    @property
+    def is_hybrid(self) -> bool:
+        return len(self.anns) > 1
+
+    def resolve_staleness_ms(self, default_ms: float) -> float:
+        """Explicit tau > named level > system default."""
+        if self.staleness_ms is not None:
+            return self.staleness_ms
+        if self.consistency is not None:
+            return staleness_ms_of(self.consistency)
+        return default_ms
+
+    def validate(self, schema: Schema) -> None:
+        """Early rejection against cached metadata (paper §3.2)."""
+        for a in self.anns:
+            fs = schema.field(a.field)  # KeyError for unknown fields
+            if fs.dtype is not FieldType.VECTOR:
+                raise ValueError(
+                    f"anns field '{a.field}' is {fs.dtype.value}, not a vector field"
+                )
+            if a.queries.shape[1] != fs.dim:
+                raise ValueError(
+                    f"anns field '{a.field}' expects dim {fs.dim}, "
+                    f"got {a.queries.shape[1]}"
+                )
+        seen = set()
+        for a in self.anns:
+            if a.field in seen:
+                raise ValueError(f"duplicate anns field '{a.field}'")
+            seen.add(a.field)
+        for f in self.output_fields:
+            if f != "pk":
+                schema.field(f)
+        # radius/range_filter ordering depends on the collection metric;
+        # the proxy rejects empty windows in ``_check_range_bounds``.
+
+
+@dataclass
+class NodeSearchRequest:
+    """What travels proxy -> query node: field names already resolved to
+    segment column names, consistency resolved to a pinned guarantee.
+
+    Deliberately WITHOUT the radius bounds: the range cut runs once at the
+    proxy on the globally merged per-field list (a node-local cut would
+    make results depend on segment placement under an inner bound)."""
+
+    collection: str
+    k: int
+    metric: Metric
+    guarantee: GuaranteeTs
+    anns: list[AnnsQuery]  # .field holds the segment COLUMN name here
+    filter_masks: dict[int, np.ndarray] | None = None
+
+    @classmethod
+    def from_request(
+        cls,
+        schema: Schema,
+        collection: str,
+        request: SearchRequest,
+        metric: Metric,
+        guarantee: GuaranteeTs,
+        filter_masks: dict[int, np.ndarray] | None = None,
+    ) -> "NodeSearchRequest":
+        anns = [
+            AnnsQuery(
+                vector_column_of(schema, a.field), a.queries, a.weight, dict(a.params)
+            )
+            for a in request.anns
+        ]
+        return cls(
+            collection=collection,
+            k=request.k,
+            metric=metric,
+            guarantee=guarantee,
+            anns=anns,
+            filter_masks=filter_masks,
+        )

@@ -74,6 +74,9 @@ class Segment:
 
         # Materialized (concatenated) columns; invalidated on append.
         self._mat: dict[str, np.ndarray] | None = None
+        # Row-normalized vector columns (cosine scans), cached per column
+        # name; invalidated on append alongside ``_mat``.
+        self._unit: dict[str, np.ndarray] = {}
 
         # Deletes: pk -> delete timestamp.  The bitmap over row indices is
         # derived lazily (and is what the scan kernels consume).
@@ -112,6 +115,7 @@ class Segment:
                 self._extras[name].append(np.asarray(src))
             self._num_rows += n
             self._mat = None
+            self._unit.clear()
 
     def delete(self, pks: np.ndarray, ts: int) -> int:
         """Mark primary keys deleted as of ``ts``.  Returns #marked."""
@@ -169,6 +173,19 @@ class Segment:
 
     def extra(self, name: str) -> np.ndarray:
         return self._materialize()[name]
+
+    def unit_column(self, name: str = "vector") -> np.ndarray:
+        """Row-normalized copy of a vector column, cached until the next
+        append — cosine brute scans reuse it instead of renormalizing the
+        whole column on every search."""
+        with self._lock:
+            cached = self._unit.get(name)
+            if cached is None:
+                col = self._materialize()[name]
+                norms = np.linalg.norm(col, axis=1, keepdims=True)
+                cached = col / np.maximum(norms, 1e-12)
+                self._unit[name] = cached
+            return cached
 
     def delete_bitmap(self) -> np.ndarray:
         """Boolean mask of rows currently deleted (any timestamp)."""

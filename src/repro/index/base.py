@@ -28,6 +28,9 @@ class IndexSpec:
     kind: str
     metric: Metric = Metric.L2
     params: dict[str, Any] | None = None
+    # Schema vector field the index serves (multi-vector collections build
+    # one index per spec'd field); purely descriptive for the factory.
+    field: str = "vector"
 
     def normalized_params(self) -> dict[str, Any]:
         return dict(self.params or {})

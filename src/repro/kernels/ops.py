@@ -32,6 +32,9 @@ __all__ = [
     "topk_scan_segmented",
     "merge_topk",
     "isin_sorted",
+    "normalized_similarity",
+    "hybrid_fuse",
+    "range_cut",
     "pq_adc_topk",
     "sq_scale",
     "sq_encode",
@@ -476,6 +479,143 @@ def isin_sorted(values, sorted_haystack) -> np.ndarray:
         return np.zeros(v.shape, bool)
     idx = np.searchsorted(hay, v)
     return hay[np.minimum(idx, hay.size - 1)] == v
+
+
+def normalized_similarity(scores, metric: str = "l2") -> np.ndarray:
+    """Map raw metric scores onto a shared (0, 1] similarity scale.
+
+    Hybrid fusion sums contributions across vector fields, so per-field
+    scores must be commensurable and higher-is-better: L2 distances map
+    through ``1/(1+d)`` (d clipped at 0 — the gemm expansion can go a few
+    ulp negative), cosine through ``(1+s)/2``, and unbounded IP through
+    the logistic ``1/(1+exp(-s))``.
+    """
+    s = np.asarray(scores, np.float32)
+    if metric == "l2":
+        return 1.0 / (1.0 + np.maximum(s, 0.0))
+    if metric == "cosine":
+        return (1.0 + s) / 2.0
+    return 1.0 / (1.0 + np.exp(-s))
+
+
+def hybrid_fuse(
+    scores_list,
+    pks_list,
+    k: int,
+    metrics,
+    weights=None,
+    kind: str = "weighted",
+    rrf_k: float = 60.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fuse per-field candidate lists into the hybrid top-k (one shot).
+
+    ``scores_list[f]`` / ``pks_list[f]`` is vector field ``f``'s global
+    result (best-first, [nq, m_f], pk < 0 = empty slot).  ``kind`` is
+    ``"weighted"`` (weight-scaled sum of :func:`normalized_similarity`)
+    or ``"rrf"`` (``w_f / (rrf_k + rank)``, 1-based ranks).  A pk absent
+    from a field's list contributes nothing for that field.
+
+    Returns (fused_scores [nq, k] descending, pks [nq, k]); slots beyond
+    the number of distinct candidates carry pk == -1 and -inf.  The whole
+    reduce is vectorized: per-field contributions are computed in one
+    pass, per-(row, pk) sums via one flat-key ``bincount``, and the final
+    ranking is one stable argsort — no per-row Python loops.
+    """
+    n_fields = len(scores_list)
+    if n_fields == 0:
+        raise ValueError("hybrid_fuse needs at least one field result")
+    if weights is None:
+        weights = [1.0] * n_fields
+    if isinstance(metrics, str):
+        metrics = [metrics] * n_fields
+    nq = np.asarray(scores_list[0]).shape[0]
+
+    contribs = []
+    for f in range(n_fields):
+        s = np.asarray(scores_list[f], np.float32)
+        p = np.asarray(pks_list[f])
+        live = (p >= 0) & np.isfinite(s)
+        if kind == "rrf":
+            ranks = np.arange(1, s.shape[1] + 1, dtype=np.float64)[None, :]
+            c = np.float64(weights[f]) / (np.float64(rrf_k) + ranks)
+            c = np.broadcast_to(c, s.shape).copy()
+        elif kind == "weighted":
+            c = np.float64(weights[f]) * normalized_similarity(s, metrics[f]).astype(
+                np.float64
+            )
+        else:
+            raise ValueError(f"unknown fusion kind '{kind}'")
+        c[~live] = 0.0
+        contribs.append(c)
+
+    P = np.concatenate([np.asarray(p) for p in pks_list], axis=1).astype(np.int64)
+    C = np.concatenate(contribs, axis=1)
+    m = P.shape[1]
+    if nq == 0 or m == 0:
+        return (
+            np.full((nq, k), -np.inf, np.float32),
+            np.full((nq, k), -1, np.int64),
+        )
+    live = P >= 0
+    # Per-(row, pk) sum: one flat-key bincount over all live slots.
+    stride = np.int64(max(int(P.max()) + 1, 1))
+    rows = np.repeat(np.arange(nq, dtype=np.int64)[:, None], m, axis=1)
+    key = rows * stride + np.where(live, P, 0)
+    flat_live = live.ravel()
+    fused = np.full(nq * m, -np.inf, np.float64)
+    if flat_live.any():
+        uniq, inv = np.unique(key.ravel()[flat_live], return_inverse=True)
+        sums = np.bincount(inv, weights=C.ravel()[flat_live], minlength=len(uniq))
+        # Scatter each candidate's sum onto its FIRST occurrence slot; the
+        # duplicates stay -inf and sort behind every live candidate.
+        pos = np.nonzero(flat_live)[0]
+        first = np.full(len(uniq), np.iinfo(np.int64).max, np.int64)
+        np.minimum.at(first, inv, pos)
+        fused[first] = sums
+    fused = fused.reshape(nq, m)
+    order = np.argsort(-fused, axis=1, kind="stable")[:, :k]
+    out_s = np.take_along_axis(fused, order, axis=1)
+    out_p = np.take_along_axis(P, order, axis=1)
+    dead = ~np.isfinite(out_s)
+    out_p[dead] = -1
+    pad = k - out_s.shape[1]
+    if pad > 0:
+        out_s = np.concatenate([out_s, np.full((nq, pad), -np.inf)], axis=1)
+        out_p = np.concatenate([out_p, np.full((nq, pad), -1, np.int64)], axis=1)
+    return out_s.astype(np.float32), out_p
+
+
+def range_cut(
+    scores,
+    pks,
+    metric: str = "l2",
+    radius=None,
+    range_filter=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Post-scan radius cut (range search).
+
+    Milvus-convention bounds: for L2 (ascending) keep
+    ``range_filter <= d < radius``; for IP/cosine (descending) keep
+    ``radius < s <= range_filter``.  Either bound may be None.  Cut slots
+    become (fill, -1); they are NOT compacted — downstream ``merge_topk``
+    drops them.
+    """
+    s = np.asarray(scores, np.float32)
+    p = np.asarray(pks)
+    keep = (p >= 0) & np.isfinite(s)
+    if metric == "l2":
+        fill = np.float32(np.inf)
+        if radius is not None:
+            keep &= s < radius
+        if range_filter is not None:
+            keep &= s >= range_filter
+    else:
+        fill = np.float32(-np.inf)
+        if radius is not None:
+            keep &= s > radius
+        if range_filter is not None:
+            keep &= s <= range_filter
+    return np.where(keep, s, fill), np.where(keep, p, -1)
 
 
 def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray]:

@@ -178,7 +178,7 @@ def test_index_rebuilt_on_compacted_segment(system, rng):
     assert report["tasks"] >= 1
     new_live = system.meta.segment_map().live("c")
     for sid in new_live:
-        assert system.meta.get(f"index/c/{sid}") is not None
+        assert system.meta.get(f"index/c/{sid}/vector") is not None
     held = {
         sid: handle
         for qn in system.query_nodes.values()

@@ -1,0 +1,598 @@
+"""The declarative request API: hybrid multi-vector search, range search,
+filter composition, output-field hydration, consistency levels, and the
+back-compat kwarg facade — all checked against independent numpy oracles.
+
+The oracle deliberately re-implements the documented semantics with
+per-row Python loops (no shared code with ``ops.hybrid_fuse`` /
+``ops.range_cut``):
+
+* per-field scores are brute force over ALL rows,
+* each field's candidate list is its global top-k,
+* weighted fusion sums ``w_f * sim`` over the lists a pk appears in
+  (L2 ``1/(1+d)``, cosine ``(1+s)/2``, IP ``1/(1+exp(-s))``),
+* RRF sums ``w_f / (rrf_k + rank)`` with 1-based ranks,
+* range search keeps the in-bounds subset of the global top-k
+  (L2: ``range_filter <= d < radius``; IP: ``radius < s <= range_filter``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnnsQuery,
+    ConsistencyLevel,
+    FieldSchema,
+    FieldType,
+    ManuConfig,
+    ManuSystem,
+    Metric,
+    Ranker,
+    SearchRequest,
+)
+
+DIM1, DIM2 = 12, 6
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+
+def field_scores(metric: Metric, q: np.ndarray, base: np.ndarray) -> np.ndarray:
+    """Brute-force scores with the engine's gemm expansion (L2) or inner
+    product (IP / cosine over unit vectors)."""
+    q = np.asarray(q, np.float32)
+    base = np.asarray(base, np.float32)
+    if metric is Metric.L2:
+        return (
+            np.sum(q * q, 1, keepdims=True)
+            - 2.0 * q @ base.T
+            + np.sum(base * base, 1)[None, :]
+        )
+    if metric is Metric.COSINE:
+        qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+        bn = base / np.maximum(np.linalg.norm(base, axis=1, keepdims=True), 1e-12)
+        return qn @ bn.T
+    return q @ base.T
+
+
+def field_topk(metric: Metric, scores: np.ndarray, k: int):
+    """Global per-field top-k candidate list (best-first pks + scores)."""
+    order = np.argsort(scores if metric is Metric.L2 else -scores, axis=1)[:, :k]
+    return order, np.take_along_axis(scores, order, axis=1)
+
+
+def sim_of(metric: Metric, s: float) -> float:
+    if metric is Metric.L2:
+        return 1.0 / (1.0 + max(float(s), 0.0))
+    if metric is Metric.COSINE:
+        return (1.0 + float(s)) / 2.0
+    return 1.0 / (1.0 + np.exp(-np.float32(s)))
+
+
+def oracle_hybrid(metric, queries_per_field, bases, weights, k, ranker):
+    """Per-row dict-accumulate fusion over per-field global top-k lists."""
+    nq = len(queries_per_field[0])
+    out = []
+    for r in range(nq):
+        acc: dict[int, float] = {}
+        for f, (q, base) in enumerate(zip(queries_per_field, bases)):
+            s = field_scores(metric, q[r : r + 1], base)
+            pks, vals = field_topk(metric, s, k)
+            for rank, (pk, v) in enumerate(zip(pks[0], vals[0])):
+                if ranker.kind == "rrf":
+                    c = weights[f] / (ranker.rrf_k + rank + 1.0)
+                else:
+                    c = weights[f] * float(
+                        np.float64(sim_of(metric, np.float32(v)))
+                    )
+                acc[int(pk)] = acc.get(int(pk), 0.0) + c
+        top = sorted(acc.items(), key=lambda kv: -kv[1])[:k]
+        out.append([pk for pk, _v in top])
+    return out
+
+
+def oracle_range(metric, q, base, k, radius=None, range_filter=None):
+    """In-bounds subset of the global top-k, order preserved."""
+    s = field_scores(metric, q, base)
+    pks, vals = field_topk(metric, s, k)
+    out = []
+    for r in range(len(q)):
+        keep = []
+        for pk, v in zip(pks[r], vals[r]):
+            if metric is Metric.L2:
+                if radius is not None and not (v < radius):
+                    continue
+                if range_filter is not None and not (v >= range_filter):
+                    continue
+            else:
+                if radius is not None and not (v > radius):
+                    continue
+                if range_filter is not None and not (v <= range_filter):
+                    continue
+            keep.append(int(pk))
+        out.append(keep)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+def make_system():
+    return ManuSystem(
+        ManuConfig(num_query_nodes=2, seal_rows=200, slice_rows=4096, num_shards=2)
+    )
+
+
+def make_collection(system, metric: Metric, rng, n=450, name="c"):
+    coll = system.create_collection(
+        name,
+        dim=DIM1,
+        metric=metric,
+        extra_fields=[
+            FieldSchema("img_vec", FieldType.VECTOR, dim=DIM2),
+            FieldSchema("price", FieldType.FLOAT),
+        ],
+    )
+    v1 = rng.standard_normal((n, DIM1)).astype(np.float32)
+    v2 = rng.standard_normal((n, DIM2)).astype(np.float32)
+    price = rng.uniform(0, 100, n)
+    coll.insert({"vector": v1, "img_vec": v2, "price": price})
+    coll.flush()
+    return coll, v1, v2, price
+
+
+METRICS = [Metric.L2, Metric.IP, Metric.COSINE]
+RANKERS = [Ranker.weighted(), Ranker.rrf(10.0)]
+
+
+# ---------------------------------------------------------------------------
+# hybrid search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", METRICS, ids=[m.value for m in METRICS])
+@pytest.mark.parametrize("ranker", RANKERS, ids=["weighted", "rrf"])
+def test_hybrid_matches_oracle(metric, ranker, rng):
+    system = make_system()
+    coll, v1, v2, _price = make_collection(system, metric, rng)
+    nq, k = 4, 8
+    q1 = rng.standard_normal((nq, DIM1)).astype(np.float32)
+    q2 = rng.standard_normal((nq, DIM2)).astype(np.float32)
+    weights = [0.7, 0.3] if ranker.kind == "weighted" else [1.0, 1.0]
+    res = coll.search(
+        SearchRequest(
+            anns=[
+                AnnsQuery("vector", q1, weight=weights[0]),
+                AnnsQuery("img_vec", q2, weight=weights[1]),
+            ],
+            k=k,
+            staleness_ms=0.0,
+            ranker=ranker,
+        )
+    )
+    want = oracle_hybrid(metric, [q1, q2], [v1, v2], weights, k, ranker)
+    for r in range(nq):
+        assert res.pks[r].tolist() == want[r], f"row {r} ({metric}, {ranker.kind})"
+    # fused scores are descending and finite on live slots
+    live = res.scores[res.pks >= 0]
+    assert np.isfinite(live).all()
+    assert (np.diff(res.scores, axis=1) <= 1e-12).all()
+
+
+def test_hybrid_weight_shifts_ranking(rng):
+    """Extreme weights must collapse the hybrid ranking onto one field."""
+    system = make_system()
+    coll, v1, v2, _ = make_collection(system, Metric.L2, rng)
+    q1 = rng.standard_normal((2, DIM1)).astype(np.float32)
+    q2 = rng.standard_normal((2, DIM2)).astype(np.float32)
+    k = 5
+
+    def run(w1, w2):
+        return coll.search(
+            SearchRequest(
+                anns=[AnnsQuery("vector", q1, weight=w1),
+                      AnnsQuery("img_vec", q2, weight=w2)],
+                k=k, staleness_ms=0.0,
+            )
+        ).pks
+
+    only_1 = run(1.0, 0.0)
+    only_2 = run(0.0, 1.0)
+    base_1 = coll.search(q1, limit=k, staleness_ms=0.0).pks
+    s2 = field_scores(Metric.L2, q2, v2)
+    gt2, _ = field_topk(Metric.L2, s2, k)
+    np.testing.assert_array_equal(only_1, base_1)
+    np.testing.assert_array_equal(only_2, gt2)
+
+
+def test_hybrid_with_indexes_exhaustive_stays_exact(rng):
+    """nprobe == nlist IVF on both fields is exhaustive -> same pks as the
+    brute-force oracle."""
+    system = make_system()
+    coll, v1, v2, _ = make_collection(system, Metric.L2, rng)
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 4, "nprobe": 4})
+    coll.create_index("img_vec", kind="ivf_flat", params={"nlist": 4, "nprobe": 4})
+    assert system.stats()["index_builds"] >= 2
+    nq, k = 3, 6
+    q1 = rng.standard_normal((nq, DIM1)).astype(np.float32)
+    q2 = rng.standard_normal((nq, DIM2)).astype(np.float32)
+    res = coll.search(
+        SearchRequest(
+            anns=[AnnsQuery("vector", q1, weight=0.5),
+                  AnnsQuery("img_vec", q2, weight=0.5)],
+            k=k, staleness_ms=0.0,
+        )
+    )
+    want = oracle_hybrid(Metric.L2, [q1, q2], [v1, v2], [0.5, 0.5], k,
+                         Ranker.weighted())
+    for r in range(nq):
+        assert res.pks[r].tolist() == want[r]
+
+
+# ---------------------------------------------------------------------------
+# range search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", [Metric.L2, Metric.IP],
+                         ids=["l2", "ip"])
+def test_range_search_matches_oracle(metric, rng):
+    system = make_system()
+    coll, v1, _v2, _ = make_collection(system, metric, rng)
+    nq, k = 3, 12
+    q = rng.standard_normal((nq, DIM1)).astype(np.float32)
+    s = field_scores(metric, q, v1)
+    srt = np.sort(s, axis=1)
+    if metric is Metric.L2:
+        radius = float(srt[0, 6]) + 1e-5  # ~6 rows inside for row 0
+        range_filter = float(srt[0, 1])  # excludes the single nearest row
+    else:
+        radius = float(srt[0, -7]) - 1e-5
+        range_filter = float(srt[0, -2])
+    res = coll.search(
+        q, limit=k, staleness_ms=0.0, radius=radius, range_filter=range_filter
+    )
+    want = oracle_range(metric, q, v1, k, radius, range_filter)
+    for r in range(nq):
+        live = res.pks[r][res.pks[r] >= 0]
+        assert live.tolist() == want[r]
+    # cut slots are fully dead (fill score, pk -1), and live scores in bounds
+    dead = res.pks < 0
+    fill = np.inf if metric is Metric.L2 else -np.inf
+    assert (res.scores[dead] == fill).all()
+    live_s = res.scores[res.pks >= 0]
+    if metric is Metric.L2:
+        assert ((live_s < radius) & (live_s >= range_filter)).all()
+    else:
+        assert ((live_s > radius) & (live_s <= range_filter)).all()
+
+
+def test_filter_and_range_compose(rng):
+    """radius cut applies to the top-k of the FILTERED candidate set."""
+    system = make_system()
+    coll, v1, _v2, price = make_collection(system, Metric.L2, rng)
+    nq, k = 2, 10
+    q = rng.standard_normal((nq, DIM1)).astype(np.float32)
+    sel = price < 40
+    s = field_scores(Metric.L2, q, v1[sel])
+    radius = float(np.sort(s[0])[7]) + 1e-5
+    res = coll.search(
+        q, limit=k, staleness_ms=0.0, filter_expr="price < 40", radius=radius
+    )
+    want = oracle_range(Metric.L2, q, v1[sel], k, radius)
+    sel_ids = np.nonzero(sel)[0]
+    for r in range(nq):
+        live = res.pks[r][res.pks[r] >= 0]
+        assert live.tolist() == [int(sel_ids[i]) for i in want[r]]
+        assert (price[live] < 40).all()
+
+
+def test_per_field_radius_params_override(rng):
+    """AnnsQuery.params radius overrides the request-level bound per field."""
+    system = make_system()
+    coll, v1, v2, _ = make_collection(system, Metric.L2, rng)
+    q1 = rng.standard_normal((1, DIM1)).astype(np.float32)
+    q2 = rng.standard_normal((1, DIM2)).astype(np.float32)
+    k = 6
+    s1 = np.sort(field_scores(Metric.L2, q1, v1)[0])
+    tight = float(s1[2]) + 1e-5  # field 1 keeps only 3 candidates
+    res = coll.search(
+        SearchRequest(
+            anns=[
+                AnnsQuery("vector", q1, params={"radius": tight}),
+                AnnsQuery("img_vec", q2),
+            ],
+            k=k,
+            staleness_ms=0.0,
+            ranker=Ranker.rrf(10.0),
+        )
+    )
+    # with field 2 uncut, fusion still returns k live candidates
+    assert (res.pks[0] >= 0).sum() == k
+    want = set()
+    pks1 = oracle_range(Metric.L2, q1, v1, k, tight)[0]
+    s2 = field_scores(Metric.L2, q2, v2)
+    pks2, _ = field_topk(Metric.L2, s2, k)
+    cand = set(pks1) | set(int(p) for p in pks2[0])
+    assert set(res.pks[0].tolist()) <= cand
+
+
+# ---------------------------------------------------------------------------
+# output-field hydration
+# ---------------------------------------------------------------------------
+
+
+def test_output_fields_hydration(rng):
+    system = make_system()
+    coll, v1, v2, price = make_collection(system, Metric.L2, rng)
+    q = rng.standard_normal((3, DIM1)).astype(np.float32)
+    res = coll.search(
+        q, limit=5, staleness_ms=0.0, output_fields=("price", "pk", "img_vec")
+    )
+    assert res.fields is not None
+    pks = res.pks
+    np.testing.assert_allclose(res.fields["price"], price[pks], rtol=0, atol=0)
+    np.testing.assert_array_equal(res.fields["pk"], pks)
+    assert res.fields["img_vec"].shape == (3, 5, DIM2)
+    np.testing.assert_array_equal(res.fields["img_vec"], v2[pks])
+
+
+def test_output_fields_hydration_empty_slots(rng):
+    """Range-cut holes hydrate as NaN, not as some row's value."""
+    system = make_system()
+    coll, v1, _v2, price = make_collection(system, Metric.L2, rng)
+    q = rng.standard_normal((1, DIM1)).astype(np.float32)
+    s = np.sort(field_scores(Metric.L2, q, v1)[0])
+    res = coll.search(
+        q, limit=8, staleness_ms=0.0, radius=float(s[3]) + 1e-5,
+        output_fields=("price",),
+    )
+    live = res.pks[0] >= 0
+    assert live.sum() == 4
+    np.testing.assert_allclose(res.fields["price"][0][live], price[res.pks[0][live]])
+    assert np.isnan(res.fields["price"][0][~live]).all()
+
+
+def test_hydration_covers_growing_rows(rng):
+    """Rows still in growing segments (never flushed) hydrate too."""
+    system = make_system()
+    coll = system.create_collection(
+        "g", dim=DIM1,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT)],
+    )
+    v = rng.standard_normal((60, DIM1)).astype(np.float32)
+    price = rng.uniform(0, 9, 60)
+    coll.insert({"vector": v, "price": price})
+    q = rng.standard_normal((1, DIM1)).astype(np.float32)
+    res = coll.search(q, limit=4, staleness_ms=0.0, output_fields=("price",))
+    assert (res.pks[0] >= 0).all()
+    np.testing.assert_allclose(res.fields["price"][0], price[res.pks[0]])
+
+
+# ---------------------------------------------------------------------------
+# back-compat facade & consistency levels
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_kwargs_equal_explicit_request(rng):
+    system = make_system()
+    coll, v1, _v2, price = make_collection(system, Metric.L2, rng)
+    q = rng.standard_normal((3, DIM1)).astype(np.float32)
+    legacy = coll.search(q, limit=7, staleness_ms=0.0, filter_expr="price < 60")
+    explicit = coll.search(
+        SearchRequest.single(
+            q, field="vector", k=7, staleness_ms=0.0, filter="price < 60"
+        )
+    )
+    np.testing.assert_array_equal(legacy.pks, explicit.pks)
+    np.testing.assert_array_equal(legacy.scores, explicit.scores)
+
+
+def test_consistency_level_strong_equals_staleness_zero(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM1)
+    v = rng.standard_normal((300, DIM1)).astype(np.float32)
+    coll.insert({"vector": v})
+    q = rng.standard_normal((2, DIM1)).astype(np.float32)
+    via_level = coll.search(
+        SearchRequest.single(q, k=5, consistency=ConsistencyLevel.STRONG)
+    )
+    via_tau = coll.search(q, limit=5, staleness_ms=0.0)
+    np.testing.assert_array_equal(via_level.pks, via_tau.pks)
+
+
+def test_session_consistency_reads_own_writes(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM1)
+    coll.insert({"vector": rng.standard_normal((40, DIM1)).astype(np.float32)})
+    q = rng.standard_normal((1, DIM1)).astype(np.float32)
+    res = coll.search(
+        SearchRequest.single(q, k=5, consistency=ConsistencyLevel.SESSION)
+    )
+    assert (res.pks[0] >= 0).sum() == 5
+
+
+def test_session_consistency_via_legacy_kwargs(rng):
+    """consistency=SESSION through the kwarg facade must wait for the
+    handle's last write, same as read_your_writes=True."""
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM1)
+    coll.insert({"vector": rng.standard_normal((40, DIM1)).astype(np.float32)})
+    q = rng.standard_normal((1, DIM1)).astype(np.float32)
+    res = coll.search(q, limit=5, consistency=ConsistencyLevel.SESSION)
+    assert (res.pks[0] >= 0).sum() == 5
+
+
+def test_reused_session_request_not_mutated(rng):
+    """A caller-owned SESSION request must not be mutated: reusing it after
+    a later write still reads that later write."""
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM1)
+    base = rng.standard_normal((30, DIM1)).astype(np.float32)
+    coll.insert({"vector": base})
+    probe = (base[0] + 1e-3).reshape(1, -1).astype(np.float32)
+    req = SearchRequest.single(probe, k=1, consistency=ConsistencyLevel.SESSION)
+    coll.search(req)
+    assert req.session_ts == 0  # untouched
+    # a row exactly at the probe, written AFTER the first search
+    coll.insert({"pk": np.array([777]), "vector": probe})
+    res = coll.search(req)
+    assert res.pks[0][0] == 777
+
+
+def test_inverted_range_bounds_rejected(rng):
+    """An always-empty range window (swapped bounds) raises instead of
+    silently returning nothing."""
+    system = make_system()
+    coll, *_ = make_collection(system, Metric.L2, rng, n=60)
+    q = rng.standard_normal((1, DIM1)).astype(np.float32)
+    with pytest.raises(ValueError, match="range window is empty"):
+        coll.search(q, limit=5, staleness_ms=0.0, radius=1.0, range_filter=1e9)
+    ip_sys = make_system()
+    ip_coll, *_ = make_collection(ip_sys, Metric.IP, rng, n=60)
+    with pytest.raises(ValueError, match="range window is empty"):
+        ip_coll.search(q, limit=5, staleness_ms=0.0, radius=1e9, range_filter=1.0)
+
+
+def test_empty_hydration_keeps_vector_shape(rng):
+    """When the range cut removes every candidate, vector output fields
+    still hydrate with the documented [nq, k, dim] shape."""
+    system = make_system()
+    coll, *_ = make_collection(system, Metric.L2, rng, n=60)
+    q = rng.standard_normal((2, DIM1)).astype(np.float32)
+    res = coll.search(
+        q, limit=5, staleness_ms=0.0, radius=1e-12,
+        output_fields=("img_vec", "price"),
+    )
+    assert (res.pks < 0).all()
+    assert res.fields["img_vec"].shape == (2, 5, DIM2)
+    assert np.isnan(res.fields["img_vec"]).all()
+    assert res.fields["price"].shape == (2, 5)
+
+
+def test_request_validation_rejects_bad_fields(rng):
+    system = make_system()
+    coll, *_ = make_collection(system, Metric.L2, rng, n=60)
+    q_ok = rng.standard_normal((1, DIM1)).astype(np.float32)
+    with pytest.raises(KeyError):
+        coll.search(SearchRequest.single(q_ok, field="nope", k=3))
+    with pytest.raises(ValueError):
+        coll.search(SearchRequest.single(q_ok, field="price", k=3))
+    with pytest.raises(ValueError):  # dim mismatch
+        coll.search(SearchRequest.single(q_ok, field="img_vec", k=3))
+    with pytest.raises(ValueError):  # duplicate anns field
+        coll.search(
+            SearchRequest(
+                anns=[AnnsQuery("vector", q_ok), AnnsQuery("vector", q_ok)], k=3
+            )
+        )
+
+
+@pytest.mark.parametrize("metric", [Metric.COSINE, Metric.IP],
+                         ids=["cosine", "ip"])
+def test_growing_slices_stay_exact_for_non_l2_metrics(metric, rng):
+    """Temp slice indexes are built L2 off the WAL; for IP/cosine requests
+    the planner must skip them (brute tail) so growing reads match the
+    oracle exactly."""
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=1, seal_rows=10_000, slice_rows=64,
+                   num_shards=1)
+    )
+    coll = system.create_collection("c", dim=DIM1, metric=metric)
+    v = rng.standard_normal((300, DIM1)).astype(np.float32)
+    coll.insert({"vector": v})  # stays growing; slices 0..3 get temp indexes
+    assert any(
+        gs.slice_index_built
+        for qn in system.query_nodes.values()
+        for gs in qn.growing.values()
+    )
+    q = rng.standard_normal((3, DIM1)).astype(np.float32)
+    res = coll.search(q, limit=6, staleness_ms=0.0)
+    s = field_scores(metric, q, v)
+    want, _ = field_topk(metric, s, 6)
+    np.testing.assert_array_equal(res.pks, want)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: num_entities & create_index validation
+# ---------------------------------------------------------------------------
+
+
+def test_num_entities_is_per_collection_and_dedups_replicas(rng):
+    system = make_system()
+    a = system.create_collection("a", dim=DIM1)
+    b = system.create_collection("b", dim=DIM1)
+    a.insert({"vector": rng.standard_normal((300, DIM1)).astype(np.float32)})
+    b.insert({"vector": rng.standard_normal((120, DIM1)).astype(np.float32)})
+    a.flush()
+    assert a.num_entities() == 300
+    assert b.num_entities() == 120
+    # replicate every sealed segment of "a" onto BOTH query nodes: the
+    # count must not change (the seed implementation double-counted here
+    # and summed both collections).
+    for sid in system.data_coord.sealed_segments("a"):
+        for qn in system.query_nodes.values():
+            qn.load_sealed("a", sid)
+    assert a.num_entities() == 300
+    assert b.num_entities() == 120
+
+
+def test_create_index_accepts_named_vector_field_rejects_scalars(rng):
+    system = make_system()
+    coll, *_ = make_collection(system, Metric.L2, rng, n=220)
+    coll.create_index("img_vec", kind="ivf_flat", params={"nlist": 4, "nprobe": 4})
+    with pytest.raises(ValueError):
+        coll.create_index("price", kind="flat")
+    with pytest.raises(KeyError):
+        coll.create_index("missing", kind="flat")
+    system.run_until_idle()
+    # the named field got its own per-field index objects
+    keys = [m.key for m in system.store.list("index/c/")]
+    assert keys and all("/img_vec/" in key for key in keys)
+
+
+# ---------------------------------------------------------------------------
+# fuzz: hybrid × metric × ranker × filter against the oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fuzz_hybrid_filter_range(seed):
+    rng = np.random.default_rng(seed)
+    system = make_system()
+    metric = [Metric.L2, Metric.IP, Metric.COSINE][seed % 3]
+    coll, v1, v2, price = make_collection(system, metric, rng, n=260)
+    nq, k = 3, 7
+    q1 = rng.standard_normal((nq, DIM1)).astype(np.float32)
+    q2 = rng.standard_normal((nq, DIM2)).astype(np.float32)
+    ranker = Ranker.rrf(25.0) if seed % 2 else Ranker.weighted()
+    w = [float(rng.uniform(0.2, 1.0)), float(rng.uniform(0.2, 1.0))]
+    res = coll.search(
+        SearchRequest(
+            anns=[AnnsQuery("vector", q1, weight=w[0]),
+                  AnnsQuery("img_vec", q2, weight=w[1])],
+            k=k, staleness_ms=0.0, ranker=ranker,
+        )
+    )
+    want = oracle_hybrid(metric, [q1, q2], [v1, v2], w, k, ranker)
+    for r in range(nq):
+        assert res.pks[r].tolist() == want[r]
+
+    # filtered single-field + radius vs oracle over the filtered base
+    sel = price < 55
+    s = field_scores(metric, q1, v1[sel])
+    if metric is Metric.L2:
+        radius = float(np.sort(s[0])[8]) + 1e-5
+    else:
+        radius = float(np.sort(s[0])[-9]) - 1e-5
+    fres = coll.search(
+        q1, limit=k, staleness_ms=0.0, filter_expr="price < 55", radius=radius
+    )
+    sel_ids = np.nonzero(sel)[0]
+    want_rng = oracle_range(metric, q1, v1[sel], k, radius)
+    for r in range(nq):
+        live = fres.pks[r][fres.pks[r] >= 0]
+        assert live.tolist() == [int(sel_ids[i]) for i in want_rng[r]]
