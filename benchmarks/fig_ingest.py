@@ -1,0 +1,71 @@
+"""fig_ingest: write-path throughput through the typed mutation pipeline.
+
+Measures end-to-end ingestion (client -> proxy -> logger -> WAL -> growing
+segments, cooperative pump included) in rows/s at 1, 2, and 4 shards, each
+with and without partition placement (4 partitions, round-robin batches).
+Sharding widens the WAL (one vectorized shard-split scatter per batch feeds
+N channels); partitions add per-partition segment allocation on top.  The
+derived column carries rows/s so the trajectory file tracks write
+throughput across PRs.
+
+Emits:
+    fig_ingest-shards{n}              us/batch, derived rows_per_s
+    fig_ingest-shards{n}-partitioned  same with 4-partition placement
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import InsertRequest, ManuConfig, ManuSystem
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _ingest(num_shards: int, partitioned: bool, n: int, dim: int, batch: int):
+    system = ManuSystem(
+        ManuConfig(num_shards=num_shards, num_query_nodes=2, seal_rows=batch * 2)
+    )
+    coll = system.create_collection("w", dim=dim)
+    parts = ["_default"]
+    if partitioned:
+        parts = [f"p{i}" for i in range(4)]
+        for p in parts:
+            coll.create_partition(p)
+    rng = np.random.default_rng(42)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    n_batches = n // batch
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        rows = {"vector": vecs[i * batch : (i + 1) * batch]}
+        coll.insert(InsertRequest(rows, partition=parts[i % len(parts)]))
+    elapsed = time.perf_counter() - t0
+    us_per_batch = elapsed / n_batches * 1e6
+    rows_per_s = n / elapsed
+    return us_per_batch, rows_per_s
+
+
+def main() -> list[tuple[str, float, str]]:
+    n, dim, batch = (8_192, 16, 512) if SMOKE else (65_536, 32, 2_048)
+    rows: list[tuple[str, float, str]] = []
+    for shards in (1, 2, 4):
+        for partitioned in (False, True):
+            us, rps = _ingest(shards, partitioned, n, dim, batch)
+            suffix = "-partitioned" if partitioned else ""
+            rows.append(
+                (
+                    f"fig_ingest-shards{shards}{suffix}",
+                    us,
+                    f"n={n},dim={dim},batch={batch};rows_per_s={rps:.0f}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(main())

@@ -169,6 +169,74 @@ def filtered_range_rows(rng) -> list[tuple[str, float, str]]:
     ]
 
 
+def ingest_rows(rng) -> list[tuple[str, float, str]]:
+    """Write-pipeline shard split: the seed per-row ``shard_of_pk`` Python
+    loop + boolean masks vs one vectorized hash + bincount/argsort scatter
+    (what ``Logger.mutate`` runs on every insert/upsert batch)."""
+    from repro.core.log import shard_of_pk, shards_of_pks
+
+    n, shards = (20_000, 4) if SMOKE else (200_000, 4)
+    pks = rng.permutation(n).astype(np.int64)
+
+    def python_loop():
+        sh = np.array([shard_of_pk(int(pk), shards) for pk in pks.tolist()])
+        return [pks[sh == s] for s in range(shards)]
+
+    def vectorized():
+        order, offsets = ops.shard_split(shards_of_pks(pks, shards), shards)
+        return [pks[order[offsets[s] : offsets[s + 1]]] for s in range(shards)]
+
+    t_py = timeit_us(python_loop, best_of=3)
+    t_vec = timeit_us(vectorized, best_of=3)
+    shape = f"n={n},shards={shards}"
+    return [
+        ("kern-ingest-shardsplit-python-loop", t_py, shape),
+        ("kern-ingest-shardsplit-vectorized", t_vec,
+         f"{shape};speedup={t_py / max(t_vec, 1e-9):.1f}x"),
+    ]
+
+
+def upsert_rows(rng) -> list[tuple[str, float, str]]:
+    """kern-upsert: one atomic UPSERT record per shard vs the delete+insert
+    pair through the same proxy -> logger -> WAL pipeline (two LSNs, twice
+    the records, plus a second shard split)."""
+    from repro.core import (
+        DeleteRequest,
+        InsertRequest,
+        ManuConfig,
+        ManuSystem,
+        UpsertRequest,
+    )
+
+    n, dim, batch = (4_000, 16, 512) if SMOKE else (32_000, 32, 4_096)
+    system = ManuSystem(ManuConfig(num_shards=2, seal_rows=1 << 30,
+                                   num_query_nodes=1))
+    coll = system.create_collection("w", dim=dim)
+    pks = np.arange(n, dtype=np.int64)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    system.proxy.mutate(coll.info, InsertRequest({"pk": pks, "vector": vecs}))
+    sel = rng.choice(n, batch, replace=False)
+    newv = rng.standard_normal((batch, dim)).astype(np.float32)
+    rows = {"pk": pks[sel], "vector": newv}
+
+    t_pair = timeit_us(
+        lambda: (
+            system.proxy.mutate(coll.info, DeleteRequest(pks[sel])),
+            system.proxy.mutate(coll.info, InsertRequest(rows)),
+        ),
+        best_of=3,
+    )
+    t_up = timeit_us(
+        lambda: system.proxy.mutate(coll.info, UpsertRequest(rows)), best_of=3
+    )
+    shape = f"batch={batch},dim={dim},shards=2"
+    return [
+        ("kern-upsert-delete-insert-pair", t_pair, shape),
+        ("kern-upsert-atomic", t_up,
+         f"{shape};speedup={t_pair / max(t_up, 1e-9):.1f}x"),
+    ]
+
+
 def _make_ivf_flat(x, nlist, nprobe, rng):
     """CSR-partition ``x`` with sampled centroids (one assignment pass —
     the scan benchmarks measure search, not k-means)."""
@@ -329,6 +397,8 @@ def main() -> list[tuple[str, float, str]]:
     rows += delta_mask_rows(rng)
     rows += hybrid_fuse_rows(rng)
     rows += filtered_range_rows(rng)
+    rows += ingest_rows(rng)
+    rows += upsert_rows(rng)
     rows += ivf_rows(rng)
     return rows
 

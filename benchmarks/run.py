@@ -20,6 +20,7 @@ from . import (
     fig12_grace_time,
     fig13_index_build,
     fig_compaction,
+    fig_ingest,
     kernels_micro,
 )
 from .common import emit
@@ -33,6 +34,7 @@ MODULES = [
     ("fig12", fig12_grace_time),
     ("fig13", fig13_index_build),
     ("fig_compaction", fig_compaction),
+    ("fig_ingest", fig_ingest),
     ("kernels", kernels_micro),
 ]
 

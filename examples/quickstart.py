@@ -23,6 +23,7 @@ from repro.core import (
     ConsistencyLevel,
     FieldSchema,
     FieldType,
+    InsertRequest,
     ManuConfig,
     ManuSystem,
     Metric,
@@ -102,6 +103,42 @@ def main() -> None:
     rollback = coll.search(tq, limit=5, time_travel_ts=strong.query_ts)
     print("time-travel top-5 (deleted rows resurrected):", rollback.pks[0])
     assert set(victims.tolist()) <= set(rollback.pks[0].tolist())
+
+    # ---- upsert: atomic replace at one timestamp ------------------------
+    # Replace the current best match's vectors in ONE WAL record: the old
+    # version dies and the new one appears at the same LSN, and the
+    # MutationResult watermark feeds a read-your-writes SESSION search.
+    target = int(after.pks[0][0])
+    res = coll.upsert({
+        "pk": np.array([target]),
+        "vector": rng.standard_normal((1, 64)).astype(np.float32),
+        "img_vec": rng.standard_normal((1, 32)).astype(np.float32),
+        "price": np.array([9.99]),
+    })
+    fresh = coll.search(res.session_request(tq, k=5))
+    print(f"upserted pk={target} at LSN {res.watermark_ts}; "
+          f"session top-5: {fresh.pks[0]}")
+    was = coll.search(tq, limit=5, time_travel_ts=res.watermark_ts - 1)
+    print("one tick earlier the old version still answers:", was.pks[0])
+
+    # ---- partitions: placement + pruned search --------------------------
+    catalog = manu.create_collection("catalog", dim=16, seal_rows=500)
+    for season in ("summer", "winter"):
+        catalog.create_partition(season)
+    summer = rng.standard_normal((1_000, 16)).astype(np.float32)
+    winter = rng.standard_normal((1_000, 16)).astype(np.float32)
+    catalog.insert(InsertRequest({"vector": summer}, partition="summer"))
+    catalog.insert(InsertRequest({"vector": winter}, partition="winter"))
+    catalog.flush()
+    cq = rng.standard_normal((1, 16)).astype(np.float32)
+    everywhere = catalog.search(cq, limit=5, staleness_ms=0.0)
+    only_summer = catalog.search(SearchRequest.single(
+        cq, k=5, staleness_ms=0.0, partition_names=("summer",),
+    ))
+    print("catalog partitions:", catalog.partitions())
+    print("all partitions :", everywhere.pks[0])
+    print("summer only    :", only_summer.pks[0],
+          "(planner skipped every winter segment)")
 
     print("\nsystem stats:", {k: v for k, v in manu.stats().items() if k != "log"})
 

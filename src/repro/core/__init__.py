@@ -5,10 +5,26 @@ from .collection import FieldSchema, FieldType, Metric, Schema
 from .compaction import CompactionCoordinator, CompactionNode, GCReaper
 from .consistency import ConsistencyLevel, GuaranteeTs
 from .manu import ManuCollection, ManuConfig, ManuSystem
-from .request import AnnsQuery, Ranker, SearchRequest
+from .request import (
+    AnnsQuery,
+    DeleteRequest,
+    InsertRequest,
+    MutationRequest,
+    MutationResult,
+    Ranker,
+    SearchRequest,
+    UpsertRequest,
+)
+from .segment import DEFAULT_PARTITION
 from .timestamp import TSO, Clock, ManualClock
 
 __all__ = [
+    "DEFAULT_PARTITION",
+    "DeleteRequest",
+    "InsertRequest",
+    "MutationRequest",
+    "MutationResult",
+    "UpsertRequest",
     "FieldSchema",
     "FieldType",
     "Metric",

@@ -20,7 +20,7 @@ import json
 import numpy as np
 
 from .object_store import ObjectStore
-from .segment import Segment
+from .segment import DEFAULT_PARTITION, Segment
 
 
 def _col_key(collection: str, segment_id: int, field: str) -> str:
@@ -59,6 +59,7 @@ def write_segment_binlog(store: ObjectStore, seg: Segment) -> dict[str, str]:
         "segment_id": seg.segment_id,
         "collection": seg.collection,
         "shard": seg.shard,
+        "partition": seg.partition,
         "dim": seg.dim,
         "num_rows": seg.num_rows,
         "checkpoint_pos": seg.checkpoint_pos,
@@ -95,6 +96,7 @@ def load_segment(
         shard=meta["shard"],
         dim=meta["dim"],
         extra_fields=tuple(meta.get("extra_fields", ())),
+        partition=meta.get("partition", DEFAULT_PARTITION),
     )
     n = meta["num_rows"]
     if n:

@@ -106,7 +106,18 @@ class CollectionInfo:
 
 
 def validate_rows(schema: Schema, rows: dict[str, np.ndarray]) -> int:
-    """Validate one insert batch against the schema; returns row count."""
+    """Validate one insert batch against the schema; returns row count.
+
+    Rejects unknown field names outright — a typo'd column must fail the
+    request, not silently vanish from the batch."""
+    if not rows:
+        raise ValueError("empty insert batch (no fields)")
+    known = {f.name for f in schema.fields}
+    stray = sorted(set(rows) - known)
+    if stray:
+        raise ValueError(
+            f"unknown field(s) {stray} in insert batch; schema has {sorted(known)}"
+        )
     n = None
     for f in schema.fields:
         if f.name not in rows:

@@ -36,7 +36,7 @@ from .binlog import read_binlog_column, read_binlog_meta, write_segment_binlog
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .meta_store import MetaStore, SegmentMap
 from .object_store import ObjectStore
-from .segment import Segment
+from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombstones
 from .timestamp import TSO
 
 DEFAULT_DELETE_RATIO = 0.2
@@ -45,7 +45,8 @@ MAX_TASK_SEAL_FACTOR = 4  # one task rewrites at most this many seals of rows
 
 
 def prune_folded(dd: dict, folded_pks: np.ndarray, compact_ts: int) -> dict | None:
-    """Drop tombstones folded into a compaction from a pk->delete-ts map.
+    """Drop tombstones folded into a compaction from a pk->delete-ts map
+    (values may be a bare ts or a sorted ts list — upsert histories).
 
     A tombstone dies iff its pk was rewritten out (``folded_pks``, sorted)
     AND its delete predates the swap (``dts <= compact_ts``); later deletes
@@ -57,16 +58,15 @@ def prune_folded(dd: dict, folded_pks: np.ndarray, compact_ts: int) -> dict | No
     folded_pks = np.asarray(folded_pks)
     if not dd or folded_pks.size == 0:
         return None
-    pks = np.asarray(list(dd.keys()))
-    dts = np.asarray(list(dd.values()), np.int64)
+    pks, dts = flatten_tombstones(dd)
     kill = ops.isin_sorted(pks, folded_pks) & (dts <= compact_ts)
     if not kill.any():
         return None
-    return {
-        pk: int(t)
-        for pk, t, dead in zip(pks.tolist(), dts.tolist(), kill.tolist())
-        if not dead
-    }
+    out: dict = {}
+    for pk, t, dead in zip(pks.tolist(), dts.tolist(), kill.tolist()):
+        if not dead:
+            add_tombstone(out, pk, t)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -98,12 +98,14 @@ class CompactionCoordinator:
         self.retention_ms = retention_ms
         self.sub = Subscription(broker, COORD_CHANNEL)
         self._dml_subs: dict[str, Subscription] = {}
-        # collection -> pk -> delete ts (the coordinator's tombstone view,
-        # fed by subscribing to every DML channel like any query node)
+        # collection -> pk -> delete ts (ts list for repeated deletes) —
+        # the coordinator's tombstone view, fed by subscribing to every DML
+        # channel like any query node
         self.tombstones: dict[str, dict] = {}
-        # (collection, segment_id) -> {"rows", "shard"} for live sealed segs
+        # (collection, segment_id) -> {"rows", "shard", "partition"}
         self.sealed: dict[tuple[str, int], dict] = {}
-        self._seg_pks: dict[tuple[str, int], np.ndarray] = {}  # sorted cache
+        # (collection, segment_id) -> (pk column, ts column) scoring cache
+        self._seg_cols: dict[tuple[str, int], tuple[np.ndarray, np.ndarray]] = {}
         self.pending: dict[str, dict] = {}  # task_id -> task payload
         self._next_task = 1
         self.segment_map = SegmentMap(meta)
@@ -120,11 +122,13 @@ class CompactionCoordinator:
         self._refresh_dml_subs()
         for sub in self._dml_subs.values():
             for entry in sub.poll():
-                if entry.type is EntryType.DELETE:
+                if entry.type in (EntryType.DELETE, EntryType.UPSERT):
+                    # an upsert's delete half is a tombstone like any other
+                    # (row-ts aware: it only kills versions older than it)
                     p = entry.payload
                     dd = self.tombstones.setdefault(p["collection"], {})
                     for pk in np.asarray(p["pk"]).tolist():
-                        dd.setdefault(pk, entry.ts)
+                        add_tombstone(dd, pk, entry.ts)
                     progress = True
         for entry in self.sub.poll():
             if entry.type is not EntryType.COORD:
@@ -135,10 +139,16 @@ class CompactionCoordinator:
                 self.sealed[(p["collection"], p["segment_id"])] = {
                     "rows": p["num_rows"],
                     "shard": p["shard"],
+                    "partition": p.get("partition", DEFAULT_PARTITION),
                 }
                 progress = True
             elif msg == "segment_compacted":
                 progress |= self._on_compacted(p)
+            elif msg == "partition_dropped":
+                for sid in p.get("segment_ids", ()):
+                    self.sealed.pop((p["collection"], sid), None)
+                    self._seg_cols.pop((p["collection"], sid), None)
+                progress = True
         return progress
 
     def _on_compacted(self, p: dict) -> bool:
@@ -148,9 +158,10 @@ class CompactionCoordinator:
         coll = p["collection"]
         targets = list(p["segments"])  # [{"segment_id", "num_rows"}, ...]
         sources = list(p["sources"])
+        partition = p.get("partition", DEFAULT_PARTITION)
         for sid in sources:
             self.sealed.pop((coll, sid), None)
-            self._seg_pks.pop((coll, sid), None)
+            self._seg_cols.pop((coll, sid), None)
             self.meta.put(
                 f"retired_segment/{coll}/{sid}",
                 {
@@ -162,6 +173,7 @@ class CompactionCoordinator:
             self.sealed[(coll, t["segment_id"])] = {
                 "rows": t["num_rows"],
                 "shard": p["shard"],
+                "partition": partition,
             }
         self.segment_map.apply(
             coll,
@@ -169,7 +181,7 @@ class CompactionCoordinator:
             remove=sources,
             ts=p["compact_ts"],
         )
-        self.data_coord.on_compacted(coll, sources, targets)
+        self.data_coord.on_compacted(coll, sources, targets, partition)
         # Folded tombstones left the live data entirely (their pks existed
         # only in the rewritten sources), so the coordinator's own view can
         # drop them — same unbounded-growth fix as the query nodes'.
@@ -187,19 +199,26 @@ class CompactionCoordinator:
         return self.sub.lag() + sum(s.lag() for s in self._dml_subs.values())
 
     # --------------------------------------------------------------- policy
-    def _pks_of(self, collection: str, segment_id: int) -> np.ndarray:
+    def _cols_of(
+        self, collection: str, segment_id: int
+    ) -> tuple[np.ndarray, np.ndarray]:
         key = (collection, segment_id)
-        pks = self._seg_pks.get(key)
-        if pks is None:
-            pks = np.sort(read_binlog_column(self.store, collection, segment_id, "pk"))
-            self._seg_pks[key] = pks
-        return pks
+        cols = self._seg_cols.get(key)
+        if cols is None:
+            cols = (
+                read_binlog_column(self.store, collection, segment_id, "pk"),
+                read_binlog_column(self.store, collection, segment_id, "ts"),
+            )
+            self._seg_cols[key] = cols
+        return cols
 
-    def _doomed_now(self, collection: str) -> np.ndarray:
+    def _doomed_now(self, collection: str):
+        """(sorted pks, effective delete ts) of every current tombstone."""
         dd = self.tombstones.get(collection)
         if not dd:
-            return np.empty(0, np.int64)
-        return np.sort(np.asarray(list(dd.keys())))
+            return None
+        pks, dts = flatten_tombstones(dd)
+        return ops.eff_tombstones(pks, dts, np.iinfo(np.int64).max)
 
     def plan(self, collection: str) -> list[dict]:
         """Evaluate the policy and publish the rewrite tasks.
@@ -207,15 +226,16 @@ class CompactionCoordinator:
         A segment becomes a rewrite candidate when >= ``delete_ratio`` of
         its rows are tombstoned (purge) or its live rows fall below
         ``small_fraction * seal_rows`` (fragment).  Candidates are grouped
-        per shard (a rewrite never crosses shard boundaries: delta deletes
-        travel on per-shard DML channels, so a target must stay aligned
-        with one channel's subscriber) and packed into tasks of at most
-        ``MAX_TASK_SEAL_FACTOR`` seals of live rows; each task's output is
-        repacked into seal-size target segments, so compaction
-        simultaneously purges dead rows, merges fragments, and restores
-        the uniform segment sizes the fused scan path batches best on.  A
-        lone candidate with nothing to fold is left alone (rewriting it
-        would churn forever).
+        per (shard, partition) — a rewrite never crosses shard boundaries
+        (delta deletes travel on per-shard DML channels, so a target must
+        stay aligned with one channel's subscriber) nor partition
+        boundaries (partitions are a placement surface the planner prunes
+        on) — and packed into tasks of at most ``MAX_TASK_SEAL_FACTOR``
+        seals of live rows; each task's output is repacked into seal-size
+        target segments, so compaction simultaneously purges dead rows,
+        merges fragments, and restores the uniform segment sizes the fused
+        scan path batches best on.  A lone candidate with nothing to fold
+        is left alone (rewriting it would churn forever).
         """
         seal_rows = self.data_coord.seal_rows_for(collection)
         busy = {
@@ -225,30 +245,31 @@ class CompactionCoordinator:
             for sid in t["sources"]
         }
         doomed = self._doomed_now(collection)
-        # shard -> [(segment_id, live, dead), ...]
-        cands: dict[int, list[tuple[int, int, int]]] = {}
+        # (shard, partition) -> [(segment_id, live, dead), ...]
+        cands: dict[tuple[int, str], list[tuple[int, int, int]]] = {}
         for (coll, sid), info in sorted(self.sealed.items()):
             if coll != collection or sid in busy:
                 continue
             rows = info["rows"]
             if rows == 0:
                 continue
-            n_dead = (
-                int(ops.isin_sorted(self._pks_of(coll, sid), doomed).sum())
-                if doomed.size
-                else 0
-            )
+            if doomed is not None:
+                pk_col, ts_col = self._cols_of(coll, sid)
+                n_dead = int(
+                    ops.tombstone_mask(pk_col, ts_col, doomed[0], doomed[1]).sum()
+                )
+            else:
+                n_dead = 0
             if (
                 n_dead / rows >= self.delete_ratio
                 or rows - n_dead < self.small_fraction * seal_rows
             ):
-                cands.setdefault(info["shard"], []).append(
-                    (sid, rows - n_dead, n_dead)
-                )
+                group_key = (info["shard"], info.get("partition", DEFAULT_PARTITION))
+                cands.setdefault(group_key, []).append((sid, rows - n_dead, n_dead))
 
         tasks = []
         max_rows = MAX_TASK_SEAL_FACTOR * seal_rows
-        for shard in sorted(cands):
+        for shard, partition in sorted(cands):
             group: list[tuple[int, int, int]] = []
             group_live = 0
 
@@ -257,39 +278,40 @@ class CompactionCoordinator:
                 if group and (len(group) >= 2 or any(d for _s, _l, d in group)):
                     tasks.append(
                         self._publish_task(
-                            collection, shard, [s for s, _l, _d in group],
-                            group_live, seal_rows,
+                            collection, shard, partition,
+                            [s for s, _l, _d in group], group_live, seal_rows,
                         )
                     )
                 group, group_live = [], 0
 
-            for cand in cands[shard]:
+            for cand in cands[(shard, partition)]:
                 if group and group_live + cand[1] > max_rows:
                     emit_group()
                 group.append(cand)
                 group_live += cand[1]
             emit_group()
-        # The pk columns are only needed while scoring candidates; holding
-        # them between plans would pin the whole corpus' pks in memory.
-        self._seg_pks.clear()
+        # The pk/ts columns are only needed while scoring candidates;
+        # holding them between plans would pin the whole corpus in memory.
+        self._seg_cols.clear()
         return tasks
 
     def _publish_task(
         self,
         collection: str,
         shard: int,
+        partition: str,
         sources: list[int],
         live_rows: int,
         seal_rows: int,
     ) -> dict:
         compact_ts = self.tso.next()
         dd = self.tombstones.get(collection) or {}
+        doomed = None
         if dd:
-            pks = np.asarray(list(dd.keys()))
-            dts = np.asarray(list(dd.values()), np.int64)
-            doomed = np.sort(pks[dts <= compact_ts])
-        else:
-            doomed = np.empty(0, np.int64)
+            pks, dts = flatten_tombstones(dd)
+            doomed = ops.eff_tombstones(pks, dts, compact_ts)
+        if doomed is None:
+            doomed = (np.empty(0, np.int64), np.empty(0, np.int64))
         n_targets = max(1, -(-live_rows // seal_rows))  # ceil
         task_id = f"ct-{self._next_task}"
         self._next_task += 1
@@ -298,13 +320,15 @@ class CompactionCoordinator:
             "task_id": task_id,
             "collection": collection,
             "shard": shard,
+            "partition": partition,
             "sources": list(sources),
             "targets": [
                 self.data_coord.allocate_segment_id() for _ in range(n_targets)
             ],
             "seal_rows": seal_rows,
             "compact_ts": compact_ts,
-            "doomed_pks": doomed,
+            "doomed_pks": doomed[0],
+            "doomed_eff": doomed[1],
         }
         self.pending[task_id] = payload
         self.broker.publish(
@@ -391,9 +415,20 @@ class CompactionNode:
     def _rewrite(self, task: dict) -> bool:
         coll = task["collection"]
         sources = list(task["sources"])
-        doomed = np.asarray(task["doomed_pks"])  # sorted by the coordinator
+        # Sorted pks + aligned effective delete ts (coordinator-materialized):
+        # a row dies iff its pk is doomed AND its row ts predates the
+        # effective delete, so upserted row versions written after the
+        # delete survive the rewrite.
+        doomed_pks = np.asarray(task["doomed_pks"])
+        doomed_eff = np.asarray(
+            task.get("doomed_eff", np.full(len(doomed_pks), np.iinfo(np.int64).max)),
+            np.int64,
+        )
         metas = [read_binlog_meta(self.store, coll, sid) for sid in sources]
         extra_fields = tuple(metas[0].get("extra_fields", ()))
+        partition = task.get(
+            "partition", metas[0].get("partition", DEFAULT_PARTITION)
+        )
         cols: dict[str, list[np.ndarray]] = {
             f: [] for f in ("pk", "vector", "ts", *extra_fields)
         }
@@ -403,14 +438,16 @@ class CompactionNode:
             if m["num_rows"] == 0:
                 continue
             pks = read_binlog_column(self.store, coll, sid, "pk")
+            ts_col = read_binlog_column(self.store, coll, sid, "ts")
             rows_in += len(pks)
-            keep = ~ops.isin_sorted(pks, doomed)
+            keep = ~ops.tombstone_mask(pks, ts_col, doomed_pks, doomed_eff)
             if not keep.all():
                 folded.append(pks[~keep])
             if not keep.any():
                 continue
             cols["pk"].append(pks[keep])
-            for field in ("vector", "ts", *extra_fields):
+            cols["ts"].append(ts_col[keep])
+            for field in ("vector", *extra_fields):
                 cols[field].append(
                     read_binlog_column(self.store, coll, sid, field)[keep]
                 )
@@ -436,7 +473,7 @@ class CompactionNode:
                 continue
             seg = Segment(
                 target, coll, metas[0]["shard"], metas[0]["dim"],
-                extra_fields=extra_fields,
+                extra_fields=extra_fields, partition=partition,
             )
             seg.append(
                 merged["pk"][lo:hi],
@@ -450,7 +487,7 @@ class CompactionNode:
             out_segments.append({"segment_id": target, "num_rows": seg.num_rows})
 
         folded_pks = (
-            np.sort(np.concatenate(folded)) if folded else np.empty(0, np.int64)
+            np.unique(np.concatenate(folded)) if folded else np.empty(0, np.int64)
         )
         self.compactions_completed += 1
         self.rows_purged += rows_in - n_live
@@ -466,6 +503,7 @@ class CompactionNode:
                     "segments": out_segments,
                     "sources": sources,
                     "shard": metas[0]["shard"],
+                    "partition": partition,
                     "num_rows": n_live,
                     "rows_purged": rows_in - n_live,
                     "compact_ts": task["compact_ts"],

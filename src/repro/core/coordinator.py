@@ -25,9 +25,44 @@ from .log import (
     dml_channel,
 )
 from .meta_store import MetaStore, SegmentMap
+from .segment import DEFAULT_PARTITION
 from .timestamp import TSO, Clock
 
 DEFAULT_SEAL_ROWS = 8_192
+
+
+class IdAllocator:
+    """Typed auto-ID allocator (paper §3.2: the root coordinator assigns
+    entity IDs).  Hands out dense per-collection int64 ranges and tracks a
+    high watermark across *explicit* user keys too, so the write path can
+    cheaply reject deletes of never-allocated pks (the no-match no-op)."""
+
+    def __init__(self) -> None:
+        self._next: dict[str, int] = {}
+
+    def allocate(self, collection: str, n: int) -> "np.ndarray":
+        import numpy as np
+
+        start = self._next.get(collection, 0)
+        self._next[collection] = start + n
+        return np.arange(start, start + n, dtype=np.int64)
+
+    def note_explicit(self, collection: str, pks) -> None:
+        """Bump the watermark past user-supplied integer keys."""
+        import numpy as np
+
+        pks = np.asarray(pks)
+        if pks.size and pks.dtype.kind in "iu":
+            self._next[collection] = max(
+                self._next.get(collection, 0), int(pks.max()) + 1
+            )
+
+    def high(self, collection: str) -> int:
+        """Exclusive upper bound of every pk ever seen for the collection."""
+        return self._next.get(collection, 0)
+
+    def forget(self, collection: str) -> None:
+        self._next.pop(collection, None)
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +105,11 @@ class RootCoordinator:
                 "dim": info.schema.vector_fields()[0].dim,
             },
         )
+        # Every collection starts with the implicit default partition.
+        self.meta.put(
+            f"partition/{name}/{DEFAULT_PARTITION}",
+            {"name": DEFAULT_PARTITION, "created_ts": ts},
+        )
         self.broker.publish(
             DDL_CHANNEL,
             LogEntry(ts=ts, type=EntryType.DDL,
@@ -80,10 +120,60 @@ class RootCoordinator:
     def drop_collection(self, name: str) -> None:
         ts = self.tso.next()
         self.meta.delete(f"collection/{name}")
+        for key in self.meta.scan(f"partition/{name}/"):
+            self.meta.delete(key)
         self.broker.publish(
             DDL_CHANNEL,
             LogEntry(ts=ts, type=EntryType.DDL,
                      payload={"msg": "drop_collection", "name": name}),
+        )
+
+    # ------------------------------------------------------------ partitions
+    def create_partition(self, collection: str, partition: str) -> None:
+        """Register a named partition (paper §3.1: collection → shard →
+        partition → segment).  The meta store is the authoritative list;
+        proxies watch the prefix to verify placement early."""
+        if self.meta.get(f"collection/{collection}") is None:
+            raise KeyError(f"collection '{collection}' does not exist")
+        if not partition or "/" in partition:
+            raise ValueError(f"invalid partition name '{partition}'")
+        key = f"partition/{collection}/{partition}"
+        if self.meta.get(key) is not None:
+            raise ValueError(
+                f"partition '{partition}' already exists in '{collection}'"
+            )
+        ts = self.tso.next()
+        self.meta.put(key, {"name": partition, "created_ts": ts})
+        self.broker.publish(
+            DDL_CHANNEL,
+            LogEntry(ts=ts, type=EntryType.DDL,
+                     payload={"msg": "create_partition", "name": collection,
+                              "partition": partition}),
+        )
+
+    def drop_partition(self, collection: str, partition: str) -> int:
+        """Unregister a partition; returns the drop timestamp.  The system
+        facade broadcasts the matching ``partition_dropped`` coordination
+        message so serving nodes release the partition's segments."""
+        if partition == DEFAULT_PARTITION:
+            raise ValueError("the default partition cannot be dropped")
+        key = f"partition/{collection}/{partition}"
+        if self.meta.get(key) is None:
+            raise KeyError(f"no partition '{partition}' in '{collection}'")
+        ts = self.tso.next()
+        self.meta.delete(key)
+        self.broker.publish(
+            DDL_CHANNEL,
+            LogEntry(ts=ts, type=EntryType.DDL,
+                     payload={"msg": "drop_partition", "name": collection,
+                              "partition": partition}),
+        )
+        return ts
+
+    def partitions(self, collection: str) -> list[str]:
+        return sorted(
+            key.rsplit("/", 1)[1]
+            for key in self.meta.scan(f"partition/{collection}/")
         )
 
 
@@ -106,9 +196,11 @@ class DataCoordinator:
         self.tso = tso
         self.clock = clock
         self._next_segment = 1
-        self._next_pk: dict[str, int] = {}
-        # (collection, shard) -> current growing allocation
-        self._growing: dict[tuple[str, int], SegmentAlloc] = {}
+        self.id_alloc = IdAllocator()
+        # (collection, shard, partition) -> current growing allocation;
+        # partitions are a placement surface, so each gets its own growing
+        # segment per shard and sealed segments never mix partitions.
+        self._growing: dict[tuple[str, int, str], SegmentAlloc] = {}
         self._to_seal: set[tuple[str, int]] = set()  # (collection, segment_id)
         self._sealed_rows: dict[tuple[str, int], int] = {}
         self._sealed_upto_pos: dict[tuple[str, int], int] = {}  # per channel shard
@@ -116,18 +208,20 @@ class DataCoordinator:
 
     # ------------------------------------------------------------ allocation
     def allocate_pks(self, collection: str, n: int):
-        import numpy as np
-
-        start = self._next_pk.get(collection, 0)
-        self._next_pk[collection] = start + n
-        return np.arange(start, start + n, dtype=np.int64)
+        return self.id_alloc.allocate(collection, n)
 
     def seal_rows_for(self, collection: str) -> int:
         info = self.meta.get(f"collection/{collection}") or {}
         return int(info.get("seal_rows", DEFAULT_SEAL_ROWS))
 
-    def assign_segment(self, collection: str, shard: int, n_rows: int) -> int:
-        key = (collection, shard)
+    def assign_segment(
+        self,
+        collection: str,
+        shard: int,
+        n_rows: int,
+        partition: str = DEFAULT_PARTITION,
+    ) -> int:
+        key = (collection, shard, partition)
         alloc = self._growing.get(key)
         if alloc is None:
             alloc = SegmentAlloc(self._next_segment)
@@ -145,11 +239,18 @@ class DataCoordinator:
     def should_seal(self, collection: str, segment_id: int) -> bool:
         return (collection, segment_id) in self._to_seal
 
-    def on_sealed(self, collection: str, segment_id: int, rows: int) -> None:
+    def on_sealed(
+        self,
+        collection: str,
+        segment_id: int,
+        rows: int,
+        partition: str = DEFAULT_PARTITION,
+    ) -> None:
         self._to_seal.discard((collection, segment_id))
         self._sealed_rows[(collection, segment_id)] = rows
         self.meta.put(
-            f"segment/{collection}/{segment_id}", {"rows": rows, "state": "sealed"}
+            f"segment/{collection}/{segment_id}",
+            {"rows": rows, "state": "sealed", "partition": partition},
         )
         self.segment_map.apply(
             collection, add=[segment_id], ts=self.tso.last_issued()
@@ -162,7 +263,11 @@ class DataCoordinator:
         return sid
 
     def on_compacted(
-        self, collection: str, sources: list[int], targets: list[dict]
+        self,
+        collection: str,
+        sources: list[int],
+        targets: list[dict],
+        partition: str = DEFAULT_PARTITION,
     ) -> None:
         """Swap segment identity after a compaction rewrite completed.
 
@@ -179,18 +284,18 @@ class DataCoordinator:
             self._sealed_rows[(collection, t["segment_id"])] = t["num_rows"]
             self.meta.put(
                 f"segment/{collection}/{t['segment_id']}",
-                {"rows": t["num_rows"], "state": "sealed"},
+                {"rows": t["num_rows"], "state": "sealed", "partition": partition},
             )
 
     def flush(self, collection: str) -> list[int]:
         """Force-seal every growing segment of a collection."""
         sealed = []
-        for (coll, shard), alloc in list(self._growing.items()):
+        for (coll, shard, part), alloc in list(self._growing.items()):
             if coll != collection or alloc.rows == 0:
                 continue
             self._to_seal.add((coll, alloc.segment_id))
             sealed.append(alloc.segment_id)
-            self._growing[(coll, shard)] = SegmentAlloc(self._next_segment)
+            self._growing[(coll, shard, part)] = SegmentAlloc(self._next_segment)
             self._next_segment += 1
         return sealed
 
@@ -198,16 +303,51 @@ class DataCoordinator:
         """Time-based sealing (paper: seal after a period without inserts)."""
         now = self.clock.now_ms()
         sealed = []
-        for (coll, shard), alloc in list(self._growing.items()):
+        for (coll, shard, part), alloc in list(self._growing.items()):
             if alloc.rows > 0 and (now - alloc.last_alloc_ms) >= max_idle_ms:
                 self._to_seal.add((coll, alloc.segment_id))
                 sealed.append(alloc.segment_id)
-                self._growing[(coll, shard)] = SegmentAlloc(self._next_segment)
+                self._growing[(coll, shard, part)] = SegmentAlloc(self._next_segment)
                 self._next_segment += 1
         return sealed
 
     def sealed_segments(self, collection: str) -> list[int]:
         return sorted(sid for (c, sid) in self._sealed_rows if c == collection)
+
+    def segment_partition(self, collection: str, segment_id: int) -> str:
+        info = self.meta.get(f"segment/{collection}/{segment_id}") or {}
+        return info.get("partition", DEFAULT_PARTITION)
+
+    def partition_segments(self, collection: str, partition: str) -> list[int]:
+        """Sealed segments currently placed under ``partition``."""
+        return sorted(
+            sid
+            for (c, sid) in self._sealed_rows
+            if c == collection
+            and self.segment_partition(collection, sid) == partition
+        )
+
+    def drop_partition_state(self, collection: str, partition: str, ts: int) -> list[int]:
+        """Forget a dropped partition's placement: clear its growing
+        allocations and retire its sealed segments (marked for GC).
+        Returns the retired sealed segment ids."""
+        for key in [k for k in self._growing if k[0] == collection and k[2] == partition]:
+            self._to_seal.discard((collection, self._growing[key].segment_id))
+            del self._growing[key]
+        sids = self.partition_segments(collection, partition)
+        for sid in sids:
+            self._sealed_rows.pop((collection, sid), None)
+            self.meta.put(
+                f"segment/{collection}/{sid}",
+                {"rows": 0, "state": "retired", "partition": partition},
+            )
+            self.meta.put(
+                f"retired_segment/{collection}/{sid}",
+                {"retired_at_ts": ts, "compacted_into": []},
+            )
+        if sids:
+            self.segment_map.apply(collection, remove=sids, ts=ts)
+        return sids
 
     def record_sealed_position(self, collection: str, shard: int, pos: int) -> None:
         key = (collection, shard)
@@ -454,7 +594,32 @@ class QueryCoordinator:
                 progress = True
             elif msg == "segment_compacted":
                 progress |= self._handle_compacted(p)
+            elif msg == "partition_dropped":
+                progress |= self._handle_partition_dropped(p)
         return progress
+
+    def _handle_partition_dropped(self, p: dict) -> bool:
+        """Release every assignment of a dropped partition's segments."""
+        coll = p["collection"]
+        changed = False
+        for sid in p.get("segment_ids", ()):
+            key = (coll, sid)
+            owner = self.assignment.pop(key, None)
+            self._known_indexes.pop(key, None)
+            self._visible_from.pop(key, None)
+            self.meta.delete(f"assignment/{coll}/{sid}")
+            if owner in self.nodes:
+                self.nodes[owner].segments.discard(key)
+                self._publish(
+                    {
+                        "msg": "release_segment",
+                        "node_id": owner,
+                        "collection": coll,
+                        "segment_id": sid,
+                    }
+                )
+            changed = True
+        return changed
 
     def _handle_compacted(self, p: dict) -> bool:
         """Hot-swap a compacted rewrite for its source segments.

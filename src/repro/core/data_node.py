@@ -14,7 +14,7 @@ from __future__ import annotations
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .binlog import write_segment_binlog
 from .object_store import ObjectStore
-from .segment import Segment
+from .segment import DEFAULT_PARTITION, Segment
 from .timestamp import TSO
 
 
@@ -55,8 +55,17 @@ class DataNode:
         return progress
 
     def _consume(self, entry: LogEntry, position: int) -> bool:
-        if entry.type is EntryType.INSERT:
+        import numpy as np
+
+        if entry.type in (EntryType.INSERT, EntryType.UPSERT):
             p = entry.payload
+            if entry.type is EntryType.UPSERT:
+                # Delete half of the atomic upsert record: tombstone older
+                # versions of these pks (rows with ts < entry.ts) wherever
+                # they live; the insert half below lands at the same LSN.
+                for (coll, _sid), seg in self.growing.items():
+                    if coll == p["collection"]:
+                        seg.delete(p["pk"], entry.ts)
             key = (p["collection"], p["segment_id"])
             seg = self.growing.get(key)
             if seg is None:
@@ -65,13 +74,13 @@ class DataNode:
                 seg = Segment(
                     p["segment_id"], p["collection"], p["shard"], dim,
                     extra_fields=extra_fields,
+                    partition=p.get("partition", DEFAULT_PARTITION),
                 )
                 self.growing[key] = seg
             n = len(p["pk"])
-            ts_col = [entry.ts] * n
-            import numpy as np
-
-            seg.append(p["pk"], p["vector"], np.asarray(ts_col), p.get("extras"))
+            seg.append(
+                p["pk"], p["vector"], np.full(n, entry.ts, np.int64), p.get("extras")
+            )
             seg.checkpoint_pos = position
             return True
         if entry.type is EntryType.DELETE:
@@ -103,6 +112,7 @@ class DataNode:
                         "collection": coll,
                         "segment_id": sid,
                         "shard": seg.shard,
+                        "partition": seg.partition,
                         "num_rows": seg.num_rows,
                         "binlog_keys": keys,
                         "checkpoint_pos": seg.checkpoint_pos,
@@ -111,6 +121,18 @@ class DataNode:
                     },
                 ),
             )
-            self.data_coord.on_sealed(coll, sid, seg.num_rows)
+            self.data_coord.on_sealed(coll, sid, seg.num_rows, seg.partition)
             progress = True
         return progress
+
+    def drop_partition(self, collection: str, partition: str) -> int:
+        """Discard growing segments of a dropped partition (their rows
+        must not seal into binlogs after the drop)."""
+        doomed = [
+            key
+            for key, seg in self.growing.items()
+            if key[0] == collection and seg.partition == partition
+        ]
+        for key in doomed:
+            del self.growing[key]
+        return len(doomed)

@@ -36,6 +36,10 @@ import numpy as np
 class EntryType(Enum):
     INSERT = "insert"
     DELETE = "delete"
+    # One atomic record carrying a delete-by-pk half AND an insert half:
+    # MVCC visibility of the old and new row versions flips at the record's
+    # single LSN (the paper's row-level ACID upsert idiom).
+    UPSERT = "upsert"
     DDL = "ddl"
     COORD = "coord"
     TIME_TICK = "time_tick"
@@ -242,11 +246,44 @@ def dml_channel(collection: str, shard: int) -> str:
     return f"dml/{collection}/{shard}"
 
 
+_HASH_MASK = 0x7FFFFFFF
+
+
 def shard_of_pk(pk: int | str, num_shards: int) -> int:
-    """Consistent hash of a primary key onto a shard (paper Fig. 4)."""
+    """Consistent hash of a primary key onto a shard (paper Fig. 4).
+
+    String keys hash their unicode codepoints through a Horner polynomial —
+    the scalar twin of the vectorized :func:`shards_of_pks`, which the write
+    pipeline uses to split whole batches without per-row Python loops."""
     if isinstance(pk, str):
         h = 0
-        for c in pk.encode():
-            h = (h * 131 + c) & 0x7FFFFFFF
+        for c in pk:
+            h = (h * 131 + ord(c)) & _HASH_MASK
         return h % num_shards
     return int(pk) % num_shards
+
+
+def shards_of_pks(pks: np.ndarray, num_shards: int) -> np.ndarray:
+    """Vectorized :func:`shard_of_pk` over a whole pk batch.
+
+    Integer keys are one modulo; string keys view the fixed-width unicode
+    buffer as a [n, width] codepoint matrix and run the Horner hash one
+    *column* at a time (loop over max string length, not over rows),
+    skipping NUL padding so short and long keys agree with the scalar hash.
+    """
+    pks = np.asarray(pks)
+    if pks.size == 0:
+        return np.empty(0, np.int64)
+    if pks.dtype.kind in "iu":
+        return (pks.astype(np.int64) % num_shards).astype(np.int64)
+    codes = (
+        np.ascontiguousarray(pks.astype(np.str_))
+        .view(np.uint32)
+        .reshape(len(pks), -1)
+        .astype(np.int64)
+    )
+    h = np.zeros(len(pks), np.int64)
+    for col in range(codes.shape[1]):
+        c = codes[:, col]
+        h = np.where(c > 0, (h * 131 + c) & _HASH_MASK, h)
+    return h % num_shards

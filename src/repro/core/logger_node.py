@@ -1,19 +1,37 @@
-"""Loggers: WAL entry points (paper Fig. 4).
+"""Loggers: WAL entry points (paper Fig. 4, §4.2).
 
 Loggers sit in a consistent-hash ring; each owns one or more shards
-(logical buckets).  On an insert/delete the owning logger verifies the
-request, obtains an LSN from the TSO, resolves the *segment* each entity
-belongs to (consulting the data coordinator's allocations), and appends the
-entry to the shard's WAL channel.  Loggers also emit the periodic
-time-ticks that drive delta consistency.
+(logical buckets).  Every mutation arrives as one typed request
+(:class:`InsertRequest` / :class:`DeleteRequest` / :class:`UpsertRequest`):
+the owning logger verifies it, obtains ONE LSN from the TSO (row-level
+ACID: all rows of a request share it), splits the batch over shards with
+a single vectorized hash + ``bincount``/``argsort`` scatter, resolves the
+*segment* each entity belongs to (consulting the data coordinator's
+per-partition allocations), and appends one entry per touched shard to
+the WAL channels.  The answer is a :class:`MutationResult` whose
+``watermark_ts`` feeds SESSION-consistency reads.
+
+Upserts publish a single ``UPSERT`` record per shard carrying both the
+delete-by-pk half and the insert half, so MVCC visibility of the old and
+new row versions flips atomically at the record's LSN.
+
+Loggers also emit the periodic time-ticks that drive delta consistency.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from ..kernels import ops
 from .collection import CollectionInfo, validate_rows
-from .log import EntryType, LogBroker, LogEntry, dml_channel, shard_of_pk
+from .log import EntryType, LogBroker, LogEntry, dml_channel, shards_of_pks
+from .request import (
+    DeleteRequest,
+    InsertRequest,
+    MutationRequest,
+    MutationResult,
+    UpsertRequest,
+)
 from .timestamp import TSO, Clock
 
 
@@ -38,75 +56,160 @@ class Logger:
         self._last_tick_ms: dict[str, float] = {}
         self.alive = True
 
-    # ------------------------------------------------------------- inserts
-    def insert(
-        self, info: CollectionInfo, rows: dict[str, np.ndarray]
-    ) -> tuple[int, int]:
-        """Validate, assign LSN + segment, publish to WAL.
-
-        Returns (lsn, row_count).  The paper assigns one LSN per request;
-        all rows in the batch share it (row-level ACID).
-        """
+    # ----------------------------------------------------------- mutations
+    def mutate(self, info: CollectionInfo, request: MutationRequest) -> MutationResult:
+        """Validate, assign one LSN, split by shard, publish to the WAL."""
         if not self.alive:
             raise RuntimeError(f"logger {self.logger_id} is down")
-        n = validate_rows(info.schema, rows)
+        if isinstance(request, UpsertRequest):
+            return self._write_rows(info, request.rows, request.partition, upsert=True)
+        if isinstance(request, InsertRequest):
+            return self._write_rows(info, request.rows, request.partition, upsert=False)
+        if isinstance(request, DeleteRequest):
+            request.validate(info.schema)
+            return self._delete(info, request.pks)
+        raise TypeError(f"unknown mutation request {type(request).__name__}")
+
+    def _write_rows(
+        self,
+        info: CollectionInfo,
+        rows: dict[str, np.ndarray],
+        partition: str,
+        upsert: bool,
+    ) -> MutationResult:
+        n = validate_rows(info.schema, rows)  # the logger verifies (Fig. 4)
         pk_field = info.schema.primary()
-        if pk_field and pk_field.name in rows:
+        explicit = pk_field is not None and pk_field.name in rows
+        if explicit:
             pks = np.asarray(rows[pk_field.name])
+            # keep the auto-ID watermark ahead of user-supplied keys so
+            # allocation never collides and no-match deletes stay cheap
+            self.data_coord.id_alloc.note_explicit(info.name, pks)
         else:
             pks = self.data_coord.allocate_pks(info.name, n)
+        # Fresh auto-IDs cannot collide: nothing to replace, plain insert.
+        upsert = upsert and explicit
 
         lsn = self.tso.next()
-        shards = np.array([shard_of_pk(pk, info.num_shards) for pk in pks.tolist()])
+        # One vectorized hash over the whole batch, then a bincount/argsort
+        # scatter into per-shard row groups — no per-row Python loops.
+        shards = shards_of_pks(pks, info.num_shards)
+        order, offsets = ops.shard_split(shards, info.num_shards)
+
         # The first vector field is the segment's primary "vector" column;
         # additional vector fields ride the extras columns under their own
         # names (same path as attributes), so multi-vector rows stay columnar
         # end to end (WAL -> growing segment -> binlog).
         vec_fields = info.schema.vector_fields()
-        vec_field = vec_fields[0].name
-        extra_names = [
-            f.name for f in info.schema.attribute_fields() if f.name in rows
-        ]
-        extra_vec_names = [f.name for f in vec_fields[1:] if f.name in rows]
-        for shard in np.unique(shards):
-            sel = shards == shard
-            count = int(sel.sum())
-            segment_id = self.data_coord.assign_segment(info.name, int(shard), count)
-            extras = {f: np.asarray(rows[f])[sel] for f in extra_names}
-            extras.update(
-                {f: np.asarray(rows[f], np.float32)[sel] for f in extra_vec_names}
+        vectors = np.asarray(rows[vec_fields[0].name], np.float32)
+        extras_all = {
+            f.name: np.asarray(rows[f.name])
+            for f in info.schema.attribute_fields()
+            if f.name in rows
+        }
+        extras_all.update(
+            {
+                f.name: np.asarray(rows[f.name], np.float32)
+                for f in vec_fields[1:]
+                if f.name in rows
+            }
+        )
+        shard_lsns: dict[int, int] = {}
+        for shard in range(info.num_shards):
+            sel = order[offsets[shard] : offsets[shard + 1]]
+            if sel.size == 0:
+                continue
+            segment_id = self.data_coord.assign_segment(
+                info.name, shard, len(sel), partition
             )
             payload = {
                 "collection": info.name,
-                "shard": int(shard),
+                "shard": shard,
                 "segment_id": segment_id,
+                "partition": partition,
                 "pk": pks[sel],
-                "vector": np.asarray(rows[vec_field], np.float32)[sel],
-                "extras": extras,
+                "vector": vectors[sel],
+                "extras": {f: a[sel] for f, a in extras_all.items()},
             }
             self.broker.publish(
-                dml_channel(info.name, int(shard)),
-                LogEntry(ts=lsn, type=EntryType.INSERT, payload=payload),
+                dml_channel(info.name, shard),
+                LogEntry(
+                    ts=lsn,
+                    type=EntryType.UPSERT if upsert else EntryType.INSERT,
+                    payload=payload,
+                ),
             )
-        return lsn, n
+            shard_lsns[shard] = lsn
+        return MutationResult(
+            op="upsert" if upsert else "insert",
+            pks=pks,
+            shard_lsns=shard_lsns,
+            watermark_ts=lsn,
+            row_count=n,
+            ack_rows=n,
+        )
 
-    def delete(self, info: CollectionInfo, pks: np.ndarray) -> int:
-        if not self.alive:
-            raise RuntimeError(f"logger {self.logger_id} is down")
+    def _delete(self, info: CollectionInfo, pks: np.ndarray) -> MutationResult:
+        pks = np.atleast_1d(np.asarray(pks))
+        requested = len(pks)
+        if pks.size and pks.dtype.kind in "iu":
+            # Cheap no-match rejection: integer keys beyond the allocator's
+            # high watermark (or negative) were never inserted.
+            high = self.data_coord.id_alloc.high(info.name)
+            pks = pks[(pks >= 0) & (pks < high)]
+        if pks.size == 0:
+            # No-op: publish nothing, but hand back a valid watermark — the
+            # last issued timestamp is already covered by any read that
+            # waits on it, so a SESSION follow-up costs nothing.
+            return MutationResult(
+                op="delete",
+                pks=pks,
+                shard_lsns={},
+                watermark_ts=self.tso.last_issued(),
+                row_count=requested,
+                ack_rows=0,
+            )
         lsn = self.tso.next()
-        pks = np.asarray(pks)
-        shards = np.array([shard_of_pk(pk, info.num_shards) for pk in pks.tolist()])
-        for shard in np.unique(shards):
-            sel = shards == shard
+        shards = shards_of_pks(pks, info.num_shards)
+        order, offsets = ops.shard_split(shards, info.num_shards)
+        shard_lsns: dict[int, int] = {}
+        for shard in range(info.num_shards):
+            sel = order[offsets[shard] : offsets[shard + 1]]
+            if sel.size == 0:
+                continue
             self.broker.publish(
-                dml_channel(info.name, int(shard)),
+                dml_channel(info.name, shard),
                 LogEntry(
                     ts=lsn,
                     type=EntryType.DELETE,
-                    payload={"collection": info.name, "shard": int(shard), "pk": pks[sel]},
+                    payload={
+                        "collection": info.name,
+                        "shard": shard,
+                        "pk": pks[sel],
+                    },
                 ),
             )
-        return lsn
+            shard_lsns[shard] = lsn
+        return MutationResult(
+            op="delete",
+            pks=pks,
+            shard_lsns=shard_lsns,
+            watermark_ts=lsn,
+            row_count=requested,
+            ack_rows=len(pks),
+        )
+
+    # ------------------------------------------------------ legacy facades
+    def insert(
+        self, info: CollectionInfo, rows: dict[str, np.ndarray]
+    ) -> tuple[int, int]:
+        """Legacy surface: (lsn, row_count) via the typed pipeline."""
+        res = self.mutate(info, InsertRequest(rows))
+        return res.watermark_ts, res.row_count
+
+    def delete(self, info: CollectionInfo, pks: np.ndarray) -> int:
+        """Legacy surface: bare LSN via the typed pipeline."""
+        return self.mutate(info, DeleteRequest(pks)).watermark_ts
 
     # ---------------------------------------------------------- time ticks
     def tick(self, channels: list[str], force: bool = False) -> int:

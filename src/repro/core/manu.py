@@ -46,13 +46,24 @@ from .coordinator import (
 )
 from .data_node import DataNode
 from .index_node import IndexNode
-from .log import COORD_CHANNEL, LogBroker, dml_channel
+from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, dml_channel
 from .logger_node import Logger
 from .meta_store import MetaStore
 from .object_store import MemoryObjectStore, ObjectStore
 from .proxy import BatchingProxy, Proxy, SearchResult
 from .query_node import QueryNode
-from .request import AnnsQuery, Ranker, SearchRequest, vector_column_of
+from .request import (
+    AnnsQuery,
+    DeleteRequest,
+    InsertRequest,
+    MutationRequest,
+    MutationResult,
+    Ranker,
+    SearchRequest,
+    UpsertRequest,
+    vector_column_of,
+)
+from .segment import DEFAULT_PARTITION
 from .time_travel import RestoredCollection, TimeTravel
 from .timestamp import INFINITE_STALENESS, TSO, Clock, ManualClock
 
@@ -89,19 +100,70 @@ class ManuCollection:
     def name(self) -> str:
         return self.info.name
 
-    def insert(self, rows: dict[str, np.ndarray]) -> int:
-        lsn, _n = self.system.proxy.insert(self.info, rows)
-        self.last_write_ts = lsn
-        if not self.system.config.threaded:
-            self.system.pump()
-        return lsn
+    def mutate(self, request: MutationRequest) -> MutationResult:
+        """Execute one typed mutation through the full pipeline
+        (client -> proxy -> logger -> WAL) and return its
+        :class:`MutationResult` watermark."""
+        return self.system.mutate(self, request)
 
-    def delete(self, pks) -> int:
-        lsn = self.system.proxy.delete(self.info, np.asarray(pks))
-        self.last_write_ts = lsn
-        if not self.system.config.threaded:
-            self.system.pump()
-        return lsn
+    def insert(
+        self, rows, partition: str | None = None
+    ) -> "int | MutationResult":
+        """Insert a batch.
+
+        Accepts either a typed :class:`InsertRequest` (returned value is
+        its :class:`MutationResult`) or the legacy ``rows`` dict — a thin
+        facade packing the dict into an ``InsertRequest`` and returning
+        the bare LSN exactly as before; both run the same pipeline.
+        """
+        if isinstance(rows, InsertRequest):
+            if partition is not None:
+                raise ValueError(
+                    "pass partition inside the InsertRequest, not as a kwarg"
+                )
+            return self.mutate(rows)
+        return self.mutate(
+            InsertRequest(rows, partition=partition or DEFAULT_PARTITION)
+        ).watermark_ts
+
+    def upsert(
+        self, rows, partition: str | None = None
+    ) -> MutationResult:
+        """Insert-or-replace by primary key: ONE WAL record per shard
+        carries the delete-by-pk and insert halves, so visibility flips
+        atomically at ``MutationResult.watermark_ts``."""
+        if isinstance(rows, UpsertRequest):
+            if partition is not None:
+                raise ValueError(
+                    "pass partition inside the UpsertRequest, not as a kwarg"
+                )
+            return self.mutate(rows)
+        return self.mutate(
+            UpsertRequest(rows, partition=partition or DEFAULT_PARTITION)
+        )
+
+    def delete(self, pks) -> "int | MutationResult":
+        """Delete by primary key.  A typed :class:`DeleteRequest` returns
+        its :class:`MutationResult`; the legacy array form returns the
+        bare LSN.  Empty or provably no-match deletes publish nothing and
+        hand back an already-covered watermark."""
+        if isinstance(pks, DeleteRequest):
+            return self.mutate(pks)
+        return self.mutate(DeleteRequest(np.asarray(pks))).watermark_ts
+
+    # ------------------------------------------------------------ partitions
+    def create_partition(self, partition: str) -> None:
+        """Register a named partition as a placement target for writes and
+        a pruning target for ``SearchRequest.partition_names``."""
+        self.system.create_partition(self.name, partition)
+
+    def drop_partition(self, partition: str) -> dict:
+        """Drop a partition and release its segments everywhere; their
+        binlogs are reclaimed by the next GC cycle."""
+        return self.system.drop_partition(self.name, partition)
+
+    def partitions(self) -> list[str]:
+        return self.system.root_coord.partitions(self.name)
 
     def create_index(self, field: str, kind: str, params: dict | None = None) -> None:
         fs = self.info.schema.field(field)  # KeyError for unknown fields
@@ -151,6 +213,7 @@ class ManuCollection:
         radius: float | None = None,
         range_filter: float | None = None,
         output_fields=(),
+        partition_names=(),
         request: SearchRequest | None = None,
     ) -> SearchResult:
         """Search the collection.
@@ -175,6 +238,7 @@ class ManuCollection:
                 "radius": radius is not None,
                 "range_filter": range_filter is not None,
                 "output_fields": bool(tuple(output_fields)),
+                "partition_names": bool(tuple(partition_names)),
             }
             bad = [name for name, is_set in stray.items() if is_set]
             if bad:
@@ -197,6 +261,7 @@ class ManuCollection:
                 radius=radius,
                 range_filter=range_filter,
                 output_fields=tuple(output_fields),
+                partition_names=tuple(partition_names),
                 time_travel_ts=time_travel_ts,
             )
         elif (
@@ -371,8 +436,12 @@ class ManuSystem:
         num_shards: int | None = None,
         extra_fields: list[FieldSchema] | None = None,
         seal_rows: int | None = None,
+        schema: Schema | None = None,
     ) -> ManuCollection:
-        schema = Schema.simple(dim, metric, extra=extra_fields)
+        """Create a collection.  The common int-pk + one-vector case is
+        built from ``dim``/``extra_fields``; pass an explicit ``schema``
+        for anything else (string primary keys, custom layouts)."""
+        schema = schema or Schema.simple(dim, metric, extra=extra_fields)
         info = self.root_coord.create_collection(
             name,
             schema,
@@ -394,6 +463,111 @@ class ManuSystem:
     def drop_collection(self, name: str) -> None:
         self.root_coord.drop_collection(name)
         self.collections.pop(name, None)
+
+    # ---------------------------------------------------------- partitions
+    def create_partition(self, name: str, partition: str) -> None:
+        self.root_coord.create_partition(name, partition)
+        if not self.config.threaded:
+            self.pump()
+
+    def drop_partition(self, name: str, partition: str) -> dict:
+        """Drop a partition: unregister it, retire its sealed segments
+        (reclaimed by the next GC cycle), discard its growing rows, and
+        broadcast ``partition_dropped`` so serving nodes release their
+        copies.  Like ``drop_collection``, the drop is not MVCC-gated:
+        time-travel reads into the dropped partition stop working.
+
+        Tombstones whose pks lived ONLY in the dropped partition can never
+        be folded by a future compaction (their segments are gone), so the
+        drop reuses the compaction machinery: it broadcasts them as
+        ``tombstones_folded`` and the query nodes prune their delta-delete
+        maps at the next retention-horizon advance — same unbounded-growth
+        fix as PR 2's fold pruning."""
+        from .binlog import read_binlog_column
+        from .compaction import prune_folded
+
+        if not self.config.threaded:
+            self.run_until_idle()  # let in-flight seals land first
+        else:
+            self.wait_idle()
+        ts = self.root_coord.drop_partition(name, partition)
+        sids = self.data_coord.drop_partition_state(name, partition, ts)
+
+        # pk accounting BEFORE nodes release anything: which pks vanish
+        # with the partition, and which survive elsewhere?
+        dropped_pks: list[np.ndarray] = [
+            read_binlog_column(self.store, name, sid, "pk") for sid in sids
+        ]
+        surviving_pks: list[np.ndarray] = [
+            read_binlog_column(self.store, name, sid, "pk")
+            for sid in self.data_coord.sealed_segments(name)
+        ]
+        for node in list(self.query_nodes.values()) + self.data_nodes:
+            for (coll, _sid), item in list(node.growing.items()):
+                if coll != name:
+                    continue
+                seg = getattr(item, "segment", item)  # GrowingState | Segment
+                (dropped_pks if seg.partition == partition else surviving_pks).append(
+                    seg.pks()
+                )
+
+        self.broker.publish(
+            COORD_CHANNEL,
+            LogEntry(
+                ts=self.tso.next(),
+                type=EntryType.COORD,
+                payload={
+                    "msg": "partition_dropped",
+                    "collection": name,
+                    "partition": partition,
+                    "segment_ids": sids,
+                    "drop_ts": ts,
+                },
+            ),
+        )
+        for dn in self.data_nodes:
+            dn.drop_partition(name, partition)
+
+        exclusive = np.empty(0, np.int64)
+        if dropped_pks:
+            exclusive = np.unique(np.concatenate(dropped_pks))
+            if surviving_pks:
+                exclusive = np.setdiff1d(
+                    exclusive, np.concatenate(surviving_pks), assume_unique=False
+                )
+        if exclusive.size:
+            self.broker.publish(
+                COORD_CHANNEL,
+                LogEntry(
+                    ts=self.tso.next(),
+                    type=EntryType.COORD,
+                    payload={
+                        "msg": "tombstones_folded",
+                        "collection": name,
+                        "folded_pks": exclusive,
+                        "compact_ts": ts,
+                    },
+                ),
+            )
+            pruned = prune_folded(
+                self.compaction_coord.tombstones.get(name) or {}, exclusive, ts
+            )
+            if pruned is not None:
+                self.compaction_coord.tombstones[name] = pruned
+        if not self.config.threaded:
+            self.run_until_idle()
+        return {"partition": partition, "segments_dropped": len(sids)}
+
+    # ------------------------------------------------------------ mutations
+    def mutate(self, coll: ManuCollection, request: MutationRequest) -> MutationResult:
+        """Run one typed mutation through the proxy pipeline, remember its
+        watermark for SESSION reads on this handle, and (cooperative mode)
+        pump the components so subscribers observe the WAL entries."""
+        result = self.proxy.mutate(coll.info, request)
+        coll.last_write_ts = result.watermark_ts
+        if not self.config.threaded:
+            self.pump()
+        return result
 
     # ---------------------------------------------------------------- pump
     def pump(self, rounds: int = 1) -> bool:

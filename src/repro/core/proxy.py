@@ -30,10 +30,16 @@ from .logger_node import Logger
 from .meta_store import MetaStore
 from .query_node import QueryNode
 from .request import (
+    DeleteRequest,
+    InsertRequest,
+    MutationRequest,
+    MutationResult,
     NodeSearchRequest,
     SearchRequest,
+    UpsertRequest,
     vector_column_of,
 )
+from .segment import DEFAULT_PARTITION
 from .timestamp import TSO, INFINITE_STALENESS
 
 
@@ -70,6 +76,12 @@ class Proxy:
         self._cancel_watch = meta.watch("collection/", self._on_meta)
         for key, value in meta.scan("collection/").items():
             self._meta_cache[key.split("/", 1)[1]] = value
+        # Partition cache: collection -> live partition names, kept fresh
+        # the same way so placement/pruning verify without a meta round-trip.
+        self._partition_cache: dict[str, set[str]] = {}
+        self._cancel_partition_watch = meta.watch("partition/", self._on_partition)
+        for key in meta.scan("partition/"):
+            self._on_partition(key, True)
 
     def _on_meta(self, key: str, value) -> None:
         name = key.split("/", 1)[1]
@@ -77,6 +89,14 @@ class Proxy:
             self._meta_cache.pop(name, None)
         else:
             self._meta_cache[name] = value
+
+    def _on_partition(self, key: str, value) -> None:
+        _, coll, name = key.split("/", 2)
+        parts = self._partition_cache.setdefault(coll, set())
+        if value is None:
+            parts.discard(name)
+        else:
+            parts.add(name)
 
     # ------------------------------------------------------------- routing
     def _verify(self, collection: str) -> dict:
@@ -91,19 +111,47 @@ class Proxy:
             raise RuntimeError("no live loggers")
         return live[shard % len(live)]
 
-    def insert(self, info: CollectionInfo, rows: dict[str, np.ndarray]) -> tuple[int, int]:
+    def partitions_of(self, collection: str) -> set[str]:
+        parts = self._partition_cache.get(collection)
+        # A collection created before any partition watch fired still owns
+        # the implicit default partition.
+        return parts if parts else {DEFAULT_PARTITION}
+
+    def _verify_partition(self, collection: str, partition: str) -> None:
+        if partition not in self.partitions_of(collection):
+            raise KeyError(
+                f"no partition '{partition}' in collection '{collection}'"
+            )
+
+    def mutate(self, info: CollectionInfo, request: MutationRequest) -> MutationResult:
+        """Execute one typed mutation: verify against cached metadata
+        (early rejection, paper §3.2), then route to the owning logger on
+        the hash ring (the logger owning the batch's first shard handles
+        the request; batches span shards and each shard gets its own WAL
+        record)."""
         self._verify(info.name)
-        # Hash-ring: the logger owning shard 0 of this batch handles the
-        # request (batches span shards; each logger writes its shards).
+        request.validate(info.schema)
         shard0 = 0
-        if info.schema.primary() and info.schema.primary().name in rows:
-            shard0 = shard_of_pk(int(np.asarray(rows[info.schema.primary().name])[0]),
-                                 info.num_shards)
-        return self._logger_for(shard0).insert(info, rows)
+        if isinstance(request, (InsertRequest, UpsertRequest)):
+            self._verify_partition(info.name, request.partition)
+            pk_field = info.schema.primary()
+            if pk_field is not None and pk_field.name in request.rows:
+                first = np.asarray(request.rows[pk_field.name])[:1]
+                if first.size:
+                    shard0 = shard_of_pk(first.tolist()[0], info.num_shards)
+        elif isinstance(request, DeleteRequest) and len(request.pks):
+            shard0 = shard_of_pk(request.pks.tolist()[0], info.num_shards)
+        return self._logger_for(shard0).mutate(info, request)
+
+    # ------------------------------------------------------ legacy facades
+    def insert(self, info: CollectionInfo, rows: dict[str, np.ndarray]) -> tuple[int, int]:
+        """Legacy surface: (lsn, row_count) via the typed pipeline."""
+        res = self.mutate(info, InsertRequest(rows))
+        return res.watermark_ts, res.row_count
 
     def delete(self, info: CollectionInfo, pks: np.ndarray) -> int:
-        self._verify(info.name)
-        return self._logger_for(0).delete(info, pks)
+        """Legacy surface: bare LSN via the typed pipeline."""
+        return self.mutate(info, DeleteRequest(np.asarray(pks))).watermark_ts
 
     # -------------------------------------------------------------- search
     def search(
@@ -144,6 +192,13 @@ class Proxy:
         active_filter = request.filter if request.filter is not None else filter_expr
         self._verify(info.name)
         request.validate(info.schema)
+        if request.partition_names:
+            known = self.partitions_of(info.name)
+            unknown = sorted(set(request.partition_names) - known)
+            if unknown:
+                raise ValueError(
+                    f"unknown partition(s) {unknown} in collection '{info.name}'"
+                )
         self._check_range_bounds(info.metric, request)
         if guarantee is None:
             # Standalone proxy use: honor the request's own consistency

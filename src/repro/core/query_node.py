@@ -32,7 +32,7 @@ from .consistency import GuaranteeTs
 from .log import EntryType, LogBroker, LogEntry, Subscription
 from .object_store import ObjectStore
 from .request import PRIMARY_VECTOR_COLUMN, AnnsQuery, NodeSearchRequest
-from .segment import Segment
+from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombstones
 
 TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
 
@@ -145,8 +145,15 @@ class QueryNode:
         self.coord_sub = Subscription(broker, "coord") if broker.has_channel("coord") else None
         self.sealed: dict[tuple[str, int], SealedHandle] = {}
         self.growing: dict[tuple[str, int], GrowingState] = {}
-        # Delta deletes for rows living in sealed segments: coll -> pk -> ts
-        self.delta_deletes: dict[str, dict[object, int]] = {}
+        # Delta deletes for rows living in sealed segments:
+        # coll -> pk -> delete ts (or a sorted ts list when the same pk was
+        # deleted/upserted more than once).  Tombstones are row-ts aware: a
+        # (pk, dts) pair kills only versions with row_ts < dts, so the
+        # insert half of an upsert at the same LSN survives its own delete.
+        self.delta_deletes: dict[str, dict[object, object]] = {}
+        # Partitions dropped while this node serves the collection: WAL
+        # replays must not resurrect their rows into growing segments.
+        self.dropped_partitions: set[tuple[str, str]] = set()
         # Tombstones folded into compacted segments, pending removal from
         # ``delta_deletes`` once the retention horizon passes (the old
         # segment versions still need them until then).
@@ -209,6 +216,22 @@ class QueryNode:
             return True
         if msg == "retention_advance":
             return self.apply_retention(p["horizon_ts"], p.get("collection"))
+        if msg == "partition_dropped":
+            # Broadcast: drop the partition's segments everywhere at once
+            # (sealed copies by id, growing copies by tag) and remember the
+            # drop so later WAL replays don't resurrect its rows.
+            coll, part = p["collection"], p["partition"]
+            self.dropped_partitions.add((coll, part))
+            for sid in p.get("segment_ids", ()):
+                self.sealed.pop((coll, sid), None)
+                self.growing.pop((coll, sid), None)
+            for key, gs in list(self.growing.items()):
+                if key[0] == coll and gs.segment.partition == part:
+                    del self.growing[key]
+            for key, handle in list(self.sealed.items()):
+                if key[0] == coll and handle.segment.partition == part:
+                    del self.sealed[key]
+            return True
         if p.get("node_id") != self.node_id:
             return False
         if msg == "load_segment":
@@ -253,19 +276,38 @@ class QueryNode:
             return True
         return False
 
+    def _apply_delete(self, collection: str, pks, ts: int) -> None:
+        """Record tombstones for sealed rows and growing copies alike."""
+        dd = self.delta_deletes.setdefault(collection, {})
+        for pk in np.asarray(pks).tolist():
+            add_tombstone(dd, pk, ts)
+        for (c, _sid), gs in self.growing.items():
+            if c == collection:
+                gs.segment.delete(pks, ts)
+
     def _consume(self, entry: LogEntry) -> bool:
-        if entry.type is EntryType.INSERT:
+        if entry.type in (EntryType.INSERT, EntryType.UPSERT):
             p = entry.payload
+            if entry.type is EntryType.UPSERT:
+                # Delete half of the atomic record: older versions of these
+                # pks die at this LSN; the insert half below lands at the
+                # SAME LSN, so visibility flips in one step.
+                self._apply_delete(p["collection"], p["pk"], entry.ts)
             key = (p["collection"], p["segment_id"])
+            partition = p.get("partition", DEFAULT_PARTITION)
+            if (p["collection"], partition) in self.dropped_partitions:
+                return True  # replay of a dropped partition: insert half void
             if key in self.sealed:
-                return False  # already have the sealed (authoritative) copy
+                # already have the sealed (authoritative) copy of the rows;
+                # the upsert's delete half above still applies
+                return entry.type is EntryType.UPSERT
             gs = self.growing.get(key)
             if gs is None:
                 extra_fields = tuple(sorted(p.get("extras", {})))
                 seg = Segment(
                     p["segment_id"], p["collection"], p["shard"],
                     p["vector"].shape[1], slice_rows=self.slice_rows,
-                    extra_fields=extra_fields,
+                    extra_fields=extra_fields, partition=partition,
                 )
                 gs = GrowingState(seg)
                 self.growing[key] = gs
@@ -276,13 +318,7 @@ class QueryNode:
             return True
         if entry.type is EntryType.DELETE:
             p = entry.payload
-            coll = p["collection"]
-            dd = self.delta_deletes.setdefault(coll, {})
-            for pk in np.asarray(p["pk"]).tolist():
-                dd.setdefault(pk, entry.ts)
-            for (c, _sid), gs in self.growing.items():
-                if c == coll:
-                    gs.segment.delete(p["pk"], entry.ts)
+            self._apply_delete(p["collection"], p["pk"], entry.ts)
             return True
         return False
 
@@ -415,24 +451,25 @@ class QueryNode:
         return out
 
     # --------------------------------------------------------------- search
-    def _request_doomed_pks(self, collection: str, ts: int) -> np.ndarray | None:
-        """Materialize the delta-delete pk set ONCE per search request.
+    def _request_doomed_pks(
+        self, collection: str, ts: int
+    ) -> "tuple[np.ndarray, np.ndarray] | None":
+        """Materialize the delta-delete tombstone set ONCE per request.
 
-        Returns the sorted array of pks deleted as of ``ts`` (or None).
-        Every segment then probes it with a vectorized binary search
-        (``ops.isin_sorted``) instead of rebuilding the array and re-sorting
-        it inside ``np.isin`` once per segment per query.
+        Returns ``(sorted pks, per-pk effective delete ts at query time)``
+        or None.  Every segment then probes it with one vectorized binary
+        search (``ops.tombstone_mask``) instead of rebuilding and
+        re-sorting the set once per segment per query.  The effective-ts
+        half makes the kill row-version aware: rows written at or after
+        their pk's delete (upsert insert halves, re-inserts) survive.
         """
         dd = self.delta_deletes.get(collection)
         if not dd:
             return None
-        pks = np.asarray(list(dd.keys()))
-        dts = np.asarray(list(dd.values()), np.int64)
-        doomed = pks[dts <= ts]
-        if doomed.size == 0:
-            return None
-        doomed.sort()
-        return doomed
+        from ..kernels import ops
+
+        pks, dts = flatten_tombstones(dd)
+        return ops.eff_tombstones(pks, dts, ts)
 
     _DOOMED_UNSET = object()  # sentinel: standalone call, derive the set here
 
@@ -449,7 +486,9 @@ class QueryNode:
             doomed = self._request_doomed_pks(collection, ts)
         mask = seg.visible_mask(ts)
         if doomed is not None:
-            mask &= ~ops.isin_sorted(seg.pks(), doomed)
+            mask &= ~ops.tombstone_mask(
+                seg.pks(), seg.timestamps(), doomed[0], doomed[1]
+            )
         return mask
 
     def plan_search(
@@ -460,6 +499,7 @@ class QueryNode:
         column: str = PRIMARY_VECTOR_COLUMN,
         metric: Metric | None = None,
         doomed=_DOOMED_UNSET,
+        partitions: "tuple[str, ...] | None" = None,
     ) -> SearchPlan:
         """Gather every candidate (segment, visibility, filter) unit for a
         request pinned at ``ts`` and group it by execution class.
@@ -470,11 +510,14 @@ class QueryNode:
         cosine requests pass ``metric`` so brute units take the segments'
         cached row-normalized columns (indexes normalize at build).
         ``doomed`` lets multi-field requests share one materialized
-        delta-delete set across sub-requests.
+        delta-delete set across sub-requests.  ``partitions`` prunes the
+        plan to segments tagged with one of the named partitions BEFORE
+        any distance work happens (None = no pruning).
         """
         plan = SearchPlan()
         if doomed is QueryNode._DOOMED_UNSET:
             doomed = self._request_doomed_pks(collection, ts)
+        prune = set(partitions) if partitions is not None else None
         unit_cols = metric is Metric.COSINE
 
         def brute_column(seg: Segment) -> np.ndarray | None:
@@ -490,6 +533,8 @@ class QueryNode:
             if not handle.covers_ts(ts):
                 continue  # wrong segment-map epoch for this MVCC timestamp
             seg = handle.segment
+            if prune is not None and seg.partition not in prune:
+                continue  # partition pruning: skip before any scan work
             if seg.num_rows == 0:
                 continue
             mask = self._visible(collection, seg, ts, doomed)
@@ -515,6 +560,8 @@ class QueryNode:
             if coll != collection:
                 continue
             seg = gs.segment
+            if prune is not None and seg.partition not in prune:
+                continue
             if seg.num_rows == 0:
                 continue
             mask = self._visible(collection, seg, ts, doomed)
@@ -631,6 +678,7 @@ class QueryNode:
             plan = self.plan_search(
                 request.collection, ts, request.filter_masks,
                 column=a.field, metric=metric, doomed=doomed,
+                partitions=request.partitions,
             )
             pool_s, pool_p = self._execute_plan(plan, queries, request.k, metric)
             if not pool_s:

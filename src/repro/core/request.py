@@ -1,4 +1,4 @@
-"""Declarative search requests (paper §3.1 Table 2, §6.4).
+"""Declarative search and mutation requests (paper §3.1 Table 2, §6.4).
 
 The read path is driven by one typed object instead of a kwarg chain:
 a :class:`SearchRequest` carries the top-k budget, the consistency
@@ -14,6 +14,15 @@ The proxy translates schema field names into segment *column* names
 additional vector fields ride the extras columns under their own
 names) and ships a :class:`NodeSearchRequest` to every query node —
 the single object that replaces the old seven-positional-kwarg chain.
+
+The *write* path mirrors the same design (paper §4.2): one typed
+:class:`InsertRequest` / :class:`DeleteRequest` / :class:`UpsertRequest`
+flows client → proxy → logger → WAL, and every mutation answers with a
+:class:`MutationResult` whose ``watermark_ts`` plugs directly into a
+SESSION-consistency read (``SearchRequest(session_ts=...)``) — the
+delta-consistency handshake between writes and reads.  Upserts travel as
+a single WAL record carrying both the delete-by-pk and the insert half,
+so old/new row visibility flips atomically at one LSN.
 """
 
 from __future__ import annotations
@@ -24,26 +33,131 @@ import numpy as np
 
 from .collection import FieldType, Metric, Schema
 from .consistency import ConsistencyLevel, GuaranteeTs, staleness_ms_of
+from .segment import DEFAULT_PARTITION
 
 #: Segment column name of the first (primary) vector field.
 PRIMARY_VECTOR_COLUMN = "vector"
 
 
-def vector_column_of(schema: Schema, field: str) -> str:
-    """Map a schema vector-field name to its segment column name."""
-    return PRIMARY_VECTOR_COLUMN if field == schema.vector_fields()[0].name else field
+def vector_column_of(schema: Schema, field: str | None) -> str:
+    """Map a schema vector-field name to its segment column name.
+    ``None`` means "the primary vector field" (resolved per collection —
+    see :class:`AnnsQuery`)."""
+    if field is None or field == schema.vector_fields()[0].name:
+        return PRIMARY_VECTOR_COLUMN
+    return field
+
+
+# ---------------------------------------------------------------------------
+# Typed mutations (the write-path twin of SearchRequest)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MutationResult:
+    """What every mutation hands back instead of a bare LSN.
+
+    ``watermark_ts`` is the request's LSN — feed it to a SESSION
+    :class:`SearchRequest` (``session_ts=watermark_ts``) for
+    read-your-writes.  ``shard_lsns`` lists the WAL channels the request
+    actually touched (the paper assigns ONE LSN per request — row-level
+    ACID — so every touched shard shares it).  ``pks`` are the primary
+    keys assigned (insert/upsert) or accepted for deletion; ``ack_rows``
+    counts rows acknowledged into the WAL (0 for a no-op delete).
+    """
+
+    op: str  # "insert" | "delete" | "upsert"
+    pks: np.ndarray
+    shard_lsns: dict[int, int]
+    watermark_ts: int
+    row_count: int
+    ack_rows: int
+
+    def session_request(
+        self, queries, field: str | None = None, **kw
+    ) -> "SearchRequest":
+        """A read-your-writes follow-up read pinned at this watermark.
+        ``field=None`` targets the collection's primary vector field,
+        resolved against the schema when the request executes."""
+        kw.setdefault("consistency", ConsistencyLevel.SESSION)
+        return SearchRequest.single(
+            queries, field=field, session_ts=self.watermark_ts, **kw
+        )
+
+
+@dataclass
+class MutationRequest:
+    """Base of the typed write surface; subclasses set ``op``."""
+
+    op = "mutation"
+
+    def validate(self, schema: Schema) -> None:  # pragma: no cover - interface
+        """Early rejection against cached metadata (paper §3.2)."""
+
+
+@dataclass
+class InsertRequest(MutationRequest):
+    """One insert batch, optionally placed into a named partition."""
+
+    rows: dict[str, np.ndarray]
+    partition: str = DEFAULT_PARTITION
+    op = "insert"
+
+    def validate(self, schema: Schema) -> None:
+        from .collection import validate_rows
+
+        validate_rows(schema, self.rows)
+
+
+@dataclass
+class DeleteRequest(MutationRequest):
+    """Delete by primary key (global: pks are partition-independent)."""
+
+    pks: np.ndarray
+    op = "delete"
+
+    def __post_init__(self):
+        self.pks = np.atleast_1d(np.asarray(self.pks))
+
+    def validate(self, schema: Schema) -> None:
+        if self.pks.ndim != 1:
+            raise ValueError(f"delete pks must be 1-D, got shape {self.pks.shape}")
+
+
+@dataclass
+class UpsertRequest(MutationRequest):
+    """Insert-or-replace by primary key.
+
+    Travels the WAL as ONE record per shard carrying the delete-by-pk
+    half and the insert half, so MVCC visibility of the old and new row
+    versions flips atomically at the record's single LSN.  Batches
+    without an explicit pk column degrade to plain inserts (fresh
+    auto-IDs cannot collide, so there is nothing to replace).
+    """
+
+    rows: dict[str, np.ndarray]
+    partition: str = DEFAULT_PARTITION
+    op = "upsert"
+
+    def validate(self, schema: Schema) -> None:
+        from .collection import validate_rows
+
+        validate_rows(schema, self.rows)
 
 
 @dataclass
 class AnnsQuery:
     """One per-vector-field sub-request of a (possibly hybrid) search.
 
-    ``weight`` scales this field's contribution during fusion.  ``params``
-    may override request-level knobs per field (``radius`` /
-    ``range_filter``).
+    ``field=None`` means "the collection's primary vector field" and is
+    resolved against the schema at validation/dispatch time (requests
+    built without a schema in hand — e.g. ``MutationResult.
+    session_request`` — stay collection-agnostic).  ``weight`` scales
+    this field's contribution during fusion.  ``params`` may override
+    request-level knobs per field (``radius`` / ``range_filter``).
     """
 
-    field: str
+    field: str | None
     queries: np.ndarray  # [nq, dim] float32
     weight: float = 1.0
     params: dict = dc_field(default_factory=dict)
@@ -104,6 +218,10 @@ class SearchRequest:
     radius: float | None = None  # range search outer bound
     range_filter: float | None = None  # range search inner bound
     output_fields: tuple[str, ...] = ()
+    # Partition pruning: restrict the scan to these partitions (empty =
+    # every partition).  The query-node planner skips non-matching
+    # segments before any distance work happens.
+    partition_names: tuple[str, ...] = ()
     time_travel_ts: int | None = None
     ranker: Ranker = dc_field(default_factory=Ranker)
 
@@ -114,6 +232,9 @@ class SearchRequest:
         if not self.anns:
             raise ValueError("SearchRequest needs at least one AnnsQuery")
         self.output_fields = tuple(self.output_fields)
+        if isinstance(self.partition_names, str):
+            self.partition_names = (self.partition_names,)
+        self.partition_names = tuple(self.partition_names)
         nqs = {len(a.queries) for a in self.anns}
         if len(nqs) != 1:
             raise ValueError(f"sub-requests disagree on query count: {sorted(nqs)}")
@@ -122,8 +243,10 @@ class SearchRequest:
 
     # ------------------------------------------------------------- helpers
     @classmethod
-    def single(cls, queries: np.ndarray, field: str = "vector", **kw) -> "SearchRequest":
-        """The common one-vector-field case."""
+    def single(
+        cls, queries: np.ndarray, field: str | None = "vector", **kw
+    ) -> "SearchRequest":
+        """The common one-vector-field case (None = primary vector field)."""
         return cls(anns=[AnnsQuery(field, queries)], **kw)
 
     @property
@@ -144,8 +267,12 @@ class SearchRequest:
 
     def validate(self, schema: Schema) -> None:
         """Early rejection against cached metadata (paper §3.2)."""
+        primary_vec = schema.vector_fields()[0].name
         for a in self.anns:
-            fs = schema.field(a.field)  # KeyError for unknown fields
+            if a.field is None:
+                fs = schema.vector_fields()[0]
+            else:
+                fs = schema.field(a.field)  # KeyError for unknown fields
             if fs.dtype is not FieldType.VECTOR:
                 raise ValueError(
                     f"anns field '{a.field}' is {fs.dtype.value}, not a vector field"
@@ -157,9 +284,10 @@ class SearchRequest:
                 )
         seen = set()
         for a in self.anns:
-            if a.field in seen:
-                raise ValueError(f"duplicate anns field '{a.field}'")
-            seen.add(a.field)
+            name = a.field if a.field is not None else primary_vec
+            if name in seen:
+                raise ValueError(f"duplicate anns field '{name}'")
+            seen.add(name)
         for f in self.output_fields:
             if f != "pk":
                 schema.field(f)
@@ -182,6 +310,9 @@ class NodeSearchRequest:
     guarantee: GuaranteeTs
     anns: list[AnnsQuery]  # .field holds the segment COLUMN name here
     filter_masks: dict[int, np.ndarray] | None = None
+    # None = no pruning; otherwise only segments tagged with one of these
+    # partitions enter the plan.
+    partitions: tuple[str, ...] | None = None
 
     @classmethod
     def from_request(
@@ -206,4 +337,5 @@ class NodeSearchRequest:
             guarantee=guarantee,
             anns=anns,
             filter_masks=filter_masks,
+            partitions=request.partition_names or None,
         )

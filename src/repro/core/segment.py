@@ -7,10 +7,18 @@ into *slices* (10k vectors by default); once a slice fills up, a
 light-weight temporary index (IVF-FLAT) is built for it so brute-force
 scan cost stays bounded (paper reports up to 10x speedup).
 
-MVCC: every row carries its LSN (HLC timestamp); deletes are recorded in
-a bitmap with their own timestamps.  ``visible_mask(ts)`` gives the set of
-rows a query pinned at ``ts`` may see — this one primitive yields delta
-consistency, repeatable reads, and time travel.
+MVCC: every row carries its LSN (HLC timestamp); deletes are recorded as
+per-pk tombstone timestamps.  A tombstone ``(pk, dts)`` kills exactly the
+row versions with ``row_ts < dts`` — so an upsert's delete half (published
+at the same LSN as its insert half) retires the old version without
+touching the new one, and visibility flips atomically at one timestamp.
+``visible_mask(ts)`` gives the set of rows a query pinned at ``ts`` may
+see — this one primitive yields delta consistency, repeatable reads, and
+time travel.
+
+Partitions: each segment carries the partition tag it was placed under
+(paper §3.1: collection → shard → partition → segment); the query-node
+planner prunes non-matching segments before any scan.
 """
 
 from __future__ import annotations
@@ -25,6 +33,44 @@ import numpy as np
 
 DEFAULT_SLICE_ROWS = 10_000
 DEFAULT_SEAL_ROWS = 65_536
+#: Every collection owns one implicit partition; unplaced writes land here.
+DEFAULT_PARTITION = "_default"
+
+
+# Tombstone maps (pk -> delete ts) keep the common single-delete case as a
+# bare int and promote to a sorted list only when the same pk is deleted
+# (upserted) again — the dict shape older tests poke directly stays valid.
+def add_tombstone(dd: dict, pk, ts: int) -> bool:
+    """Record one (pk, delete-ts) tombstone; returns False on duplicates."""
+    cur = dd.get(pk)
+    if cur is None:
+        dd[pk] = int(ts)
+        return True
+    if isinstance(cur, list):
+        if ts in cur:
+            return False
+        cur.append(int(ts))
+        cur.sort()
+        return True
+    if cur == ts:
+        return False
+    dd[pk] = sorted((cur, int(ts)))
+    return True
+
+
+def flatten_tombstones(dd: dict) -> tuple[np.ndarray, np.ndarray]:
+    """Flatten a pk -> (ts | [ts, ...]) tombstone map into aligned
+    (pks, dts) arrays — the shape ``ops.eff_tombstones`` consumes."""
+    pks: list = []
+    dts: list = []
+    for pk, v in dd.items():
+        if isinstance(v, list):
+            pks.extend([pk] * len(v))
+            dts.extend(v)
+        else:
+            pks.append(pk)
+            dts.append(v)
+    return np.asarray(pks), np.asarray(dts, np.int64)
 
 
 class SegmentState(Enum):
@@ -57,10 +103,12 @@ class Segment:
         dim: int,
         slice_rows: int = DEFAULT_SLICE_ROWS,
         extra_fields: tuple[str, ...] = (),
+        partition: str = DEFAULT_PARTITION,
     ):
         self.segment_id = segment_id
         self.collection = collection
         self.shard = shard
+        self.partition = partition
         self.dim = dim
         self.slice_rows = slice_rows
         self.state = SegmentState.GROWING
@@ -78,9 +126,11 @@ class Segment:
         # name; invalidated on append alongside ``_mat``.
         self._unit: dict[str, np.ndarray] = {}
 
-        # Deletes: pk -> delete timestamp.  The bitmap over row indices is
-        # derived lazily (and is what the scan kernels consume).
-        self._deleted: dict[Any, int] = {}
+        # Tombstones: pk -> delete ts (or a sorted list when the pk was
+        # deleted more than once — repeated upserts).  The row-level kill
+        # masks are derived lazily (and are what the scan kernels consume).
+        self._deleted: dict[Any, Any] = {}
+        self._del_flat: tuple[np.ndarray, np.ndarray] | None = None
 
         # Slice boundaries with a temporary index handle each (built by the
         # query node once a slice is full).
@@ -118,14 +168,19 @@ class Segment:
             self._unit.clear()
 
     def delete(self, pks: np.ndarray, ts: int) -> int:
-        """Mark primary keys deleted as of ``ts``.  Returns #marked."""
+        """Tombstone primary keys as of ``ts``: row versions with
+        ``row_ts < ts`` become invisible to queries pinned at or after
+        ``ts``; versions written at or after ``ts`` (re-inserts, the
+        insert half of an upsert at the same LSN) are untouched.
+        Returns the number of tombstones recorded."""
         with self._lock:
             existing = set(np.asarray(self.pks()).tolist())
             hits = 0
             for pk in np.asarray(pks).tolist():
-                if pk in existing and pk not in self._deleted:
-                    self._deleted[pk] = ts
+                if pk in existing and add_tombstone(self._deleted, pk, ts):
                     hits += 1
+            if hits:
+                self._del_flat = None
             return hits
 
     def seal(self) -> None:
@@ -187,27 +242,31 @@ class Segment:
                 self._unit[name] = cached
             return cached
 
+    def _tombstones_flat(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """(pks, dts) tombstone pairs, cached until the next delete."""
+        with self._lock:
+            if not self._deleted:
+                return None
+            if self._del_flat is None:
+                self._del_flat = flatten_tombstones(self._deleted)
+            return self._del_flat
+
     def delete_bitmap(self) -> np.ndarray:
-        """Boolean mask of rows currently deleted (any timestamp)."""
-        pks = self.pks()
-        if not self._deleted:
-            return np.zeros(len(pks), dtype=bool)
-        doomed = np.array(list(self._deleted.keys()))
-        return np.isin(pks, doomed)
+        """Boolean mask of rows currently dead (killed at any timestamp)."""
+        return ~self.visible_mask(np.iinfo(np.int64).max)
 
     def visible_mask(self, ts: int) -> np.ndarray:
-        """MVCC visibility at query timestamp ``ts``."""
+        """MVCC visibility at query timestamp ``ts``: rows written at or
+        before ``ts`` and not killed by any tombstone in ``(row_ts, ts]``."""
+        from ..kernels import ops
+
         cols = self._materialize()
         mask = cols["ts"] <= ts
-        if self._deleted:
-            pks = cols["pk"]
-            del_ts = np.full(len(pks), np.iinfo(np.int64).max, dtype=np.int64)
-            lut = self._deleted
-            # vectorized map: only touch rows whose pk is deleted
-            doomed = np.isin(pks, np.array(list(lut.keys())))
-            for i in np.nonzero(doomed)[0]:
-                del_ts[i] = lut[pks[i]]
-            mask &= del_ts > ts
+        flat = self._tombstones_flat()
+        if flat is not None:
+            eff = ops.eff_tombstones(flat[0], flat[1], ts)
+            if eff is not None:
+                mask &= ~ops.tombstone_mask(cols["pk"], cols["ts"], eff[0], eff[1])
         return mask
 
     def min_ts(self) -> int:
@@ -244,10 +303,16 @@ class Segment:
 
     # -------------------------------------------------- binlog (de)serialize
     def to_binlog(self) -> bytes:
-        """Columnar serialization (the binlog format, paper §3.3)."""
+        """Columnar serialization (the binlog format, paper §3.3).
+        Tombstones flatten to aligned (pk, ts) pair arrays — one entry per
+        delete event, so multi-delete histories round-trip exactly."""
         cols = dict(self._materialize())
-        cols["__deleted_pks"] = np.array(list(self._deleted.keys()), dtype=cols["pk"].dtype if len(self._deleted) else np.int64)
-        cols["__deleted_ts"] = np.array(list(self._deleted.values()), dtype=np.int64)
+        flat = self._tombstones_flat()
+        if flat is not None:
+            cols["__deleted_pks"], cols["__deleted_ts"] = flat
+        else:
+            cols["__deleted_pks"] = np.empty(0, cols["pk"].dtype)
+            cols["__deleted_ts"] = np.empty(0, np.int64)
         buf = io.BytesIO()
         np.savez_compressed(
             buf,
@@ -255,6 +320,7 @@ class Segment:
                 [self.segment_id, self.shard, self.dim, self.checkpoint_pos],
                 dtype=np.int64,
             ),
+            __partition=np.array(self.partition),
             **cols,
         )
         return buf.getvalue()
@@ -269,16 +335,21 @@ class Segment:
             extra_names = tuple(
                 k
                 for k in z.files
-                if k not in ("__meta", "pk", "vector", "ts", "__deleted_pks", "__deleted_ts")
+                if k not in ("__meta", "__partition", "pk", "vector", "ts",
+                             "__deleted_pks", "__deleted_ts")
             )
-            seg = cls(segment_id, collection, shard, dim, slice_rows, extra_names)
+            partition = (
+                str(z["__partition"]) if "__partition" in z.files else DEFAULT_PARTITION
+            )
+            seg = cls(segment_id, collection, shard, dim, slice_rows, extra_names,
+                      partition=partition)
             n = len(z["pk"])
             if n:
                 extras = {k: z[k] for k in extra_names}
                 seg.append(z["pk"], z["vector"], z["ts"], extras)
             seg.checkpoint_pos = ckpt
             for pk, dts in zip(z["__deleted_pks"].tolist(), z["__deleted_ts"].tolist()):
-                seg._deleted[pk] = dts
+                add_tombstone(seg._deleted, pk, dts)
             seg.seal()
             return seg
 
@@ -293,7 +364,8 @@ def merge_segments(new_id: int, segments: list[Segment]) -> Segment:
         raise ValueError("nothing to merge")
     base = segments[0]
     out = Segment(
-        new_id, base.collection, base.shard, base.dim, base.slice_rows, base.extra_fields
+        new_id, base.collection, base.shard, base.dim, base.slice_rows,
+        base.extra_fields, partition=base.partition,
     )
     for seg in segments:
         keep = ~seg.delete_bitmap()

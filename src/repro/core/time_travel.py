@@ -115,8 +115,14 @@ class TimeTravel:
             for entry in self.broker.read(channel, pos):
                 if entry.ts > target_ts:
                     break
-                if entry.type is EntryType.INSERT:
+                if entry.type in (EntryType.INSERT, EntryType.UPSERT):
                     p = entry.payload
+                    if entry.type is EntryType.UPSERT:
+                        # Delete half of the atomic record applies even when
+                        # the insert half is already materialized from a
+                        # sealed binlog (the OLD versions may live anywhere);
+                        # row-ts-aware tombstones make the replay order-free.
+                        deletes.append((p["pk"], entry.ts))
                     if p["segment_id"] in known_sealed:
                         continue  # already materialized from binlog
                     seg = recon.get(shard)

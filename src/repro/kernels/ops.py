@@ -32,6 +32,9 @@ __all__ = [
     "topk_scan_segmented",
     "merge_topk",
     "isin_sorted",
+    "eff_tombstones",
+    "tombstone_mask",
+    "shard_split",
     "normalized_similarity",
     "hybrid_fuse",
     "range_cut",
@@ -479,6 +482,62 @@ def isin_sorted(values, sorted_haystack) -> np.ndarray:
         return np.zeros(v.shape, bool)
     idx = np.searchsorted(hay, v)
     return hay[np.minimum(idx, hay.size - 1)] == v
+
+
+def eff_tombstones(pks, dts, ts: int):
+    """Reduce (pk, delete-ts) tombstone pairs to the per-pk *effective*
+    delete timestamp at query time ``ts``.
+
+    A row version ``(pk, row_ts)`` is dead at ``ts`` iff some tombstone of
+    its pk has ``row_ts < dts <= ts``; that is equivalent to comparing
+    against ``max(dts | dts <= ts)``, so one (sorted-unique pks, eff-dts)
+    pair per pk captures the whole tombstone history for one query — the
+    shape every segment then probes with :func:`tombstone_mask`.  Returns
+    ``(pks_sorted, eff_dts)`` or ``None`` when no tombstone applies.
+    """
+    pks = np.asarray(pks)
+    dts = np.asarray(dts, np.int64)
+    sel = dts <= ts
+    if not sel.any():
+        return None
+    p, d = pks[sel], dts[sel]
+    order = np.lexsort((d, p))
+    p, d = p[order], d[order]
+    last = np.r_[p[1:] != p[:-1], True] if p.size > 1 else np.ones(1, bool)
+    return p[last], d[last]
+
+
+def tombstone_mask(seg_pks, seg_ts, doomed_pks, doomed_eff) -> np.ndarray:
+    """Rows of a segment killed by a materialized tombstone set.
+
+    ``doomed_pks`` is sorted with ``doomed_eff`` aligned (the output of
+    :func:`eff_tombstones`); a row dies iff its pk is doomed AND its row
+    timestamp predates the effective delete — so a row re-inserted (or
+    upserted) after the delete survives, which is what makes one-LSN
+    upserts possible.  One binary-search probe per segment, no re-sorts.
+    """
+    seg_pks = np.asarray(seg_pks)
+    if seg_pks.size == 0 or np.asarray(doomed_pks).size == 0:
+        return np.zeros(seg_pks.shape, bool)
+    idx = np.searchsorted(doomed_pks, seg_pks)
+    idx = np.minimum(idx, len(doomed_pks) - 1)
+    hit = doomed_pks[idx] == seg_pks
+    return hit & (np.asarray(seg_ts, np.int64) < doomed_eff[idx])
+
+
+def shard_split(shards: np.ndarray, num_shards: int) -> tuple[np.ndarray, np.ndarray]:
+    """Group a batch by shard id in one pass: hash once upstream, then
+    ``bincount`` + stable ``argsort`` here — no per-row Python loops.
+
+    Returns ``(order, offsets)``: ``order[offsets[s]:offsets[s+1]]`` are
+    the original row indices of shard ``s``, in arrival order (the stable
+    sort preserves WAL ordering within a shard).
+    """
+    shards = np.asarray(shards)
+    counts = np.bincount(shards, minlength=num_shards)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    order = np.argsort(shards, kind="stable")
+    return order, offsets
 
 
 def normalized_similarity(scores, metric: str = "l2") -> np.ndarray:

@@ -1,0 +1,584 @@
+"""The typed mutation API: upsert atomicity vs the delete+insert oracle,
+MutationResult watermarks feeding SESSION reads, partition placement and
+pruning, legacy facade equivalence, string-pk shard hashing, and the
+validate_rows / empty-delete satellites."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConsistencyLevel,
+    DeleteRequest,
+    FieldSchema,
+    FieldType,
+    InsertRequest,
+    ManuConfig,
+    ManuSystem,
+    Metric,
+    Schema,
+    SearchRequest,
+    UpsertRequest,
+)
+from repro.core.collection import validate_rows
+from repro.core.log import dml_channel, shard_of_pk, shards_of_pks
+from repro.core.segment import DEFAULT_PARTITION
+from repro.kernels import ops
+
+
+def make_system(**kw):
+    cfg = dict(num_query_nodes=2, seal_rows=200, slice_rows=64, num_shards=2)
+    cfg.update(kw)
+    return ManuSystem(ManuConfig(**cfg))
+
+
+@pytest.fixture
+def system():
+    return make_system()
+
+
+def live(res):
+    return set(res.pks[res.pks >= 0].ravel().tolist())
+
+
+def brute_l2(base, queries, k):
+    d = np.sum(queries**2, 1, keepdims=True) - 2 * queries @ base.T + np.sum(base**2, 1)
+    return np.argsort(d, axis=1)[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# Upsert: atomicity + delete+insert equivalence oracle
+# ---------------------------------------------------------------------------
+
+
+def seeded_pair(rng_seed=3, n=500, dim=8):
+    """Two identically seeded systems with the same ingested collection."""
+    rng = np.random.default_rng(rng_seed)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    systems = []
+    for _ in range(2):
+        s = make_system()
+        c = s.create_collection("c", dim=dim)
+        c.insert({"vector": vecs})
+        c.flush()
+        systems.append((s, c))
+    return systems, vecs, rng
+
+
+def test_upsert_equals_delete_plus_insert_oracle():
+    (sa, ca), (sb, cb) = seeded_pair()[0]
+    rng = np.random.default_rng(11)
+    victims = np.arange(0, 40, dtype=np.int64)
+    newv = (rng.standard_normal((40, 8)) * 3).astype(np.float32)
+
+    res = ca.upsert({"pk": victims, "vector": newv})
+    assert res.op == "upsert" and res.ack_rows == 40
+    cb.delete(victims)
+    cb.insert({"pk": victims, "vector": newv})
+
+    q = rng.standard_normal((4, 8)).astype(np.float32)
+    ra = ca.search(q, limit=10, staleness_ms=0.0)
+    rb = cb.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(ra.pks, rb.pks)
+    np.testing.assert_allclose(ra.scores, rb.scores, rtol=1e-6)
+
+
+def test_upsert_atomic_at_one_timestamp():
+    """Time-travel at watermark_ts - 1 sees only the OLD rows, at
+    watermark_ts only the NEW rows — bit-for-bit vs the pinned reads."""
+    (sa, ca), _ = seeded_pair()[0]
+    rng = np.random.default_rng(5)
+    q = rng.standard_normal((3, 8)).astype(np.float32)
+    pre = ca.search(q, limit=8, staleness_ms=0.0)
+
+    victims = pre.pks[:, :3].ravel()
+    victims = np.unique(victims[victims >= 0])
+    newv = (rng.standard_normal((len(victims), 8)) * 50).astype(np.float32)
+    res = ca.upsert({"pk": victims, "vector": newv})
+    wm = res.watermark_ts
+
+    at_minus = ca.search(q, limit=8, time_travel_ts=wm - 1)
+    np.testing.assert_array_equal(at_minus.pks, pre.pks)
+    np.testing.assert_allclose(at_minus.scores, pre.scores, rtol=1e-6)
+
+    at_wm = ca.search(q, limit=8, time_travel_ts=wm)
+    post = ca.search(q, limit=8, staleness_ms=0.0)
+    np.testing.assert_array_equal(at_wm.pks, post.pks)
+    # old versions invisible at the watermark, new versions visible
+    assert not set(victims.tolist()) & live(at_wm) or (
+        # upserted pks may still rank: but then their score must be the NEW
+        # vector's distance, which post-search agrees with bit-for-bit
+        np.array_equal(at_wm.scores, post.scores)
+    )
+
+
+def test_upsert_without_pk_degrades_to_insert(system, rng):
+    coll = system.create_collection("c", dim=8)
+    res = coll.upsert({"vector": rng.standard_normal((30, 8)).astype(np.float32)})
+    assert res.op == "insert"
+    assert len(res.pks) == 30
+    assert coll.num_entities() == 30
+
+
+def test_repeated_upsert_chain_visibility(system, rng):
+    """pk upserted twice: each pinned read sees exactly one version."""
+    coll = system.create_collection("c", dim=4)
+    v0 = np.full((1, 4), 1.0, np.float32)
+    v1 = np.full((1, 4), 10.0, np.float32)
+    v2 = np.full((1, 4), 100.0, np.float32)
+    coll.insert({"pk": np.array([7]), "vector": v0})
+    r1 = coll.upsert({"pk": np.array([7]), "vector": v1})
+    r2 = coll.upsert({"pk": np.array([7]), "vector": v2})
+    q = np.zeros((1, 4), np.float32)
+
+    def score_at(ts):
+        r = coll.search(q, limit=1, time_travel_ts=ts)
+        assert r.pks[0, 0] == 7
+        return float(r.scores[0, 0])
+
+    # L2 distance to origin identifies which version answered
+    assert score_at(r1.watermark_ts - 1) == pytest.approx(4 * 1.0)
+    assert score_at(r1.watermark_ts) == pytest.approx(4 * 100.0)
+    assert score_at(r2.watermark_ts - 1) == pytest.approx(4 * 100.0)
+    assert score_at(r2.watermark_ts) == pytest.approx(4 * 10000.0)
+    # exactly one visible version at any pinned ts (no duplicate pk rows)
+    r = coll.search(q, limit=3, staleness_ms=0.0)
+    assert (r.pks[0] == 7).sum() == 1
+
+
+def test_upsert_survives_compaction(system, rng):
+    """Compaction rewrites are row-version aware: the upserted NEW rows
+    survive the fold even though their pks are tombstoned."""
+    coll = system.create_collection("c", dim=8)
+    vecs = rng.standard_normal((600, 8)).astype(np.float32)
+    coll.insert({"vector": vecs})
+    coll.flush()
+    victims = np.arange(0, 240, dtype=np.int64)
+    newv = (rng.standard_normal((240, 8)) * 2).astype(np.float32)
+    coll.upsert({"pk": victims, "vector": newv})
+    coll.flush()
+
+    q = rng.standard_normal((3, 8)).astype(np.float32)
+    before = coll.search(q, limit=10, staleness_ms=0.0)
+    report = coll.compact()
+    assert report["tasks"] >= 1
+    after = coll.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(before.pks, after.pks)
+    np.testing.assert_allclose(before.scores, after.scores, rtol=1e-6)
+    # only the OLD versions were purged
+    assert report["rows_purged"] == 240
+
+
+# ---------------------------------------------------------------------------
+# MutationResult watermarks -> SESSION reads
+# ---------------------------------------------------------------------------
+
+
+def test_watermark_feeds_session_read(rng):
+    # ticks ~never fire on their own: only the session wait pinned at the
+    # mutation's watermark can make the fresh rows visible
+    system = make_system(num_query_nodes=1, seal_rows=10_000, tick_interval_ms=1e12)
+    coll = system.create_collection("c", dim=4)
+    res = coll.mutate(
+        InsertRequest({"vector": rng.standard_normal((40, 4)).astype(np.float32)})
+    )
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    r = coll.search(res.session_request(q, k=5))  # MutationResult helper
+    assert (r.pks[0] >= 0).sum() == 5
+
+
+def test_session_helper_equals_manual_request(system, rng):
+    coll = system.create_collection("c", dim=4)
+    res = coll.mutate(
+        InsertRequest({"vector": rng.standard_normal((40, 4)).astype(np.float32)})
+    )
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    manual = coll.search(
+        SearchRequest.single(
+            q, k=5, consistency=ConsistencyLevel.SESSION,
+            session_ts=res.watermark_ts,
+        )
+    )
+    helper = coll.search(res.session_request(q, k=5))
+    np.testing.assert_array_equal(manual.pks, helper.pks)
+    assert (helper.pks[0] >= 0).sum() == 5
+
+
+def test_mutation_result_shape(system, rng):
+    coll = system.create_collection("c", dim=8)
+    res = coll.mutate(
+        InsertRequest({"vector": rng.standard_normal((50, 8)).astype(np.float32)})
+    )
+    assert res.op == "insert"
+    assert res.row_count == res.ack_rows == 50
+    assert len(res.pks) == 50
+    assert res.shard_lsns and all(
+        lsn == res.watermark_ts for lsn in res.shard_lsns.values()
+    )  # one LSN per request: row-level ACID
+    d = coll.mutate(DeleteRequest(res.pks[:7]))
+    assert d.op == "delete" and d.ack_rows == 7
+    assert d.watermark_ts >= res.watermark_ts
+
+
+# ---------------------------------------------------------------------------
+# Partitions: placement + pruning
+# ---------------------------------------------------------------------------
+
+
+def partitioned_pair(rng, n=600, dim=8, parts=("hot", "cold", "warm")):
+    """One partitioned and one unpartitioned collection with identical
+    rows; returns (system, part_coll, flat_coll, vectors, part_of_pk)."""
+    system = make_system()
+    pc = system.create_collection("p", dim=dim)
+    fc = system.create_collection("f", dim=dim)
+    for p in parts:
+        pc.create_partition(p)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    part_of = {}
+    step = n // len(parts)
+    for i, p in enumerate(parts):
+        lo, hi = i * step, (i + 1) * step if i < len(parts) - 1 else n
+        pks = np.arange(lo, hi, dtype=np.int64)
+        pc.insert(InsertRequest({"pk": pks, "vector": vecs[lo:hi]}, partition=p))
+        fc.insert({"pk": pks, "vector": vecs[lo:hi]})
+        for pk in pks.tolist():
+            part_of[pk] = p
+    pc.flush()
+    fc.flush()
+    return system, pc, fc, vecs, part_of
+
+
+def test_partition_pruning_matches_unpartitioned_oracle(rng):
+    system, pc, fc, vecs, part_of = partitioned_pair(rng)
+    q = rng.standard_normal((4, 8)).astype(np.float32)
+    hot_pks = {pk for pk, p in part_of.items() if p == "hot"}
+
+    res = pc.search(q, limit=10, staleness_ms=0.0, partition_names=("hot",))
+    assert live(res) <= hot_pks
+    # oracle: exact brute force over only the partition's rows
+    idx = np.array(sorted(hot_pks))
+    gt = idx[brute_l2(vecs[idx], q, 10)]
+    np.testing.assert_array_equal(res.pks, gt)
+
+    # multi-partition request unions the partitions
+    res2 = pc.search(q, limit=10, staleness_ms=0.0,
+                     partition_names=("hot", "cold"))
+    hc = np.array(sorted({pk for pk, p in part_of.items() if p in ("hot", "cold")}))
+    np.testing.assert_array_equal(res2.pks, hc[brute_l2(vecs[hc], q, 10)])
+
+    # no partition filter == the unpartitioned twin, bit for bit
+    r_all = pc.search(q, limit=10, staleness_ms=0.0)
+    r_flat = fc.search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(r_all.pks, r_flat.pks)
+
+
+def test_planner_visits_only_matching_segments(rng):
+    system, pc, fc, vecs, part_of = partitioned_pair(rng)
+    ts = system.tso.last_issued()
+    hot_sids = set()
+    for sid in system.data_coord.sealed_segments("p"):
+        if system.data_coord.segment_partition("p", sid) == "hot":
+            hot_sids.add(sid)
+    assert hot_sids
+    visited_pruned, visited_full = set(), set()
+    for qn in system.query_nodes.values():
+        for u in qn.plan_search("p", ts, partitions=("hot",)).units():
+            visited_pruned.add(u.segment_id)
+        for u in qn.plan_search("p", ts).units():
+            visited_full.add(u.segment_id)
+    assert visited_pruned, "pruned plan must still cover the partition"
+    assert visited_pruned <= hot_sids  # provably only matching segments
+    assert visited_pruned < visited_full
+
+
+def test_partition_search_during_compaction(rng):
+    """Partition-scoped reads stay exact while a partitioned collection's
+    segments are being compacted (grouping never crosses partitions)."""
+    system, pc, fc, vecs, part_of = partitioned_pair(rng)
+    victims = np.array(sorted({pk for pk, p in part_of.items() if p == "hot"}))[:150]
+    pc.delete(victims)
+    fc.delete(victims)
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    baseline = pc.search(q, limit=10, staleness_ms=0.0, partition_names=("hot",))
+    assert not set(victims.tolist()) & live(baseline)
+
+    tasks = system.compaction_coord.plan("p")
+    assert tasks
+    # tasks never mix partitions
+    for t in tasks:
+        parts = {
+            system.data_coord.segment_partition("p", sid) for sid in t["sources"]
+        }
+        assert len(parts) == 1 and parts == {t["partition"]}
+    # search between every scheduling round of the in-flight compaction
+    for _ in range(40):
+        mid = pc.search(q, limit=10, staleness_ms=0.0, partition_names=("hot",))
+        np.testing.assert_array_equal(mid.pks, baseline.pks)
+        if not system.pump():
+            break
+    after = pc.search(q, limit=10, staleness_ms=0.0, partition_names=("hot",))
+    np.testing.assert_array_equal(after.pks, baseline.pks)
+    # rewritten segments keep their partition tag
+    for sid in system.data_coord.sealed_segments("p"):
+        assert system.data_coord.segment_partition("p", sid) in (
+            "hot", "cold", "warm", DEFAULT_PARTITION,
+        )
+
+
+def test_drop_partition_removes_rows_and_unknown_partition_rejected(rng):
+    system, pc, fc, vecs, part_of = partitioned_pair(rng)
+    cold = {pk for pk, p in part_of.items() if p == "cold"}
+    hot = {pk for pk, p in part_of.items() if p == "hot"}
+    # tombstones in both partitions: the cold ones become unfoldable once
+    # the partition is gone and must be pruned at the retention horizon
+    cold_victims = sorted(cold)[:5]
+    hot_victims = sorted(hot)[:5]
+    pc.delete(np.asarray(cold_victims + hot_victims))
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    report = pc.drop_partition("cold")
+    assert report["segments_dropped"] >= 1
+    after = pc.search(q, limit=20, staleness_ms=0.0)
+    assert not cold & live(after)
+    assert "cold" not in pc.partitions()
+    # unknown partition: writes and reads reject early
+    with pytest.raises(KeyError):
+        pc.insert(InsertRequest({"vector": vecs[:5]}, partition="cold"))
+    with pytest.raises(ValueError):
+        pc.search(q, limit=5, partition_names=("cold",))
+    with pytest.raises(ValueError):
+        pc.drop_partition(DEFAULT_PARTITION)
+    # dropped binlogs become reclaimable garbage
+    rep = pc.gc()
+    assert rep["segments"]
+    # the gc's retention advance pruned tombstones of pks that lived only
+    # in the dropped partition; tombstones still covering live rows stay
+    kept = set()
+    for qn in system.query_nodes.values():
+        dd = qn.delta_deletes.get("p", {})
+        assert not set(dd) & cold
+        kept |= set(dd)
+    # tombstones still covering live (hot) rows survive across the cluster
+    # (each node holds the ones of its subscribed shard channels)
+    assert set(hot_victims) <= kept
+    assert not set(system.compaction_coord.tombstones.get("p", {})) & cold
+
+
+def test_typed_request_rejects_stray_partition_kwarg(system, rng):
+    coll = system.create_collection("c", dim=4)
+    coll.create_partition("hot")
+    rows = {"vector": rng.standard_normal((3, 4)).astype(np.float32)}
+    with pytest.raises(ValueError, match="inside the InsertRequest"):
+        coll.insert(InsertRequest(rows), partition="hot")
+    with pytest.raises(ValueError, match="inside the UpsertRequest"):
+        coll.upsert(UpsertRequest(rows), partition="hot")
+
+
+def test_session_request_resolves_custom_vector_field(rng):
+    """MutationResult.session_request works on collections whose primary
+    vector field is not named 'vector'."""
+    schema = Schema(
+        (
+            FieldSchema("pk", FieldType.INT, is_primary=True),
+            FieldSchema("emb", FieldType.VECTOR, dim=4),
+        )
+    )
+    system = make_system()
+    coll = system.create_collection("e", dim=4, schema=schema)
+    res = coll.upsert(
+        {"pk": np.arange(20), "emb": rng.standard_normal((20, 4)).astype(np.float32)}
+    )
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    r = coll.search(res.session_request(q, k=5))
+    assert (r.pks[0] >= 0).sum() == 5
+
+
+# ---------------------------------------------------------------------------
+# Legacy facade back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_facades_run_through_pipeline(rng):
+    """coll.insert(dict) / coll.delete(array) return bare LSNs and produce
+    bit-identical state to the typed requests."""
+    vecs = rng.standard_normal((400, 8)).astype(np.float32)
+    sa, sb = make_system(), make_system()
+    ca = sa.create_collection("c", dim=8)
+    cb = sb.create_collection("c", dim=8)
+
+    lsn = ca.insert({"vector": vecs})  # legacy: bare int LSN
+    assert isinstance(lsn, (int, np.integer))
+    res = cb.mutate(InsertRequest({"vector": vecs}))
+    assert res.watermark_ts == lsn  # identical ManualClock schedules
+
+    dl = ca.delete(np.arange(10))
+    assert isinstance(dl, (int, np.integer))
+    cb.mutate(DeleteRequest(np.arange(10)))
+
+    q = rng.standard_normal((3, 8)).astype(np.float32)
+    ra = ca.search(q, limit=8, staleness_ms=0.0)
+    rb = cb.search(q, limit=8, staleness_ms=0.0)
+    np.testing.assert_array_equal(ra.pks, rb.pks)
+    np.testing.assert_allclose(ra.scores, rb.scores)
+    # proxy/logger facades answer the old tuple/int shapes
+    lsn2, n2 = sa.proxy.insert(ca.info, {"vector": vecs[:5]})
+    assert n2 == 5 and lsn2 > lsn
+
+
+def test_session_read_your_writes_through_legacy_facade(rng):
+    system = make_system(num_query_nodes=1, seal_rows=10_000, tick_interval_ms=1e12)
+    coll = system.create_collection("c", dim=4)
+    coll.insert({"vector": rng.standard_normal((30, 4)).astype(np.float32)})
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    res = coll.search(q, limit=5, read_your_writes=True)
+    assert (res.pks[0] >= 0).sum() == 5
+
+
+# ---------------------------------------------------------------------------
+# String primary keys: vectorized shard hashing
+# ---------------------------------------------------------------------------
+
+
+def test_string_pk_vectorized_hash_matches_scalar(rng):
+    keys = np.array(
+        ["user-%d" % i for i in range(50)]
+        + ["", "a", "Ω-unicode-Ψ", "日本語キー", "x" * 40]
+    )
+    for shards in (1, 2, 3, 7):
+        vec = shards_of_pks(keys, shards)
+        ref = np.array([shard_of_pk(k, shards) for k in keys.tolist()])
+        np.testing.assert_array_equal(vec, ref)
+    ints = rng.integers(0, 1 << 40, 200)
+    np.testing.assert_array_equal(
+        shards_of_pks(ints, 5), np.array([shard_of_pk(int(p), 5) for p in ints])
+    )
+
+
+def test_string_pk_rows_route_by_hash(rng):
+    schema = Schema(
+        (
+            FieldSchema("pk", FieldType.STRING, is_primary=True),
+            FieldSchema("vector", FieldType.VECTOR, dim=4),
+        )
+    )
+    system = make_system(num_shards=2)
+    coll = system.create_collection("s", dim=4, schema=schema)
+    pks = np.array([f"doc-{i}" for i in range(100)])
+    vecs = rng.standard_normal((100, 4)).astype(np.float32)
+    res = coll.mutate(InsertRequest({"pk": pks, "vector": vecs}))
+    assert res.row_count == 100 and set(res.shard_lsns) == {0, 1}
+    # every WAL record landed on the channel its pks hash to, rows intact
+    seen = []
+    for shard in range(2):
+        for e in system.broker.read(dml_channel("s", shard), 0):
+            if "pk" in e.payload:
+                got = e.payload["pk"]
+                np.testing.assert_array_equal(
+                    shards_of_pks(got, 2), np.full(len(got), shard)
+                )
+                seen.extend(got.tolist())
+    assert sorted(seen) == sorted(pks.tolist())
+    assert coll.num_entities() == 100
+
+
+# ---------------------------------------------------------------------------
+# validate_rows satellite
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rows_rejects_stray_and_empty(rng):
+    schema = Schema.simple(4)
+    with pytest.raises(ValueError, match="no fields"):
+        validate_rows(schema, {})
+    with pytest.raises(ValueError, match="prise"):
+        validate_rows(
+            schema,
+            {"vector": np.zeros((2, 4), np.float32), "prise": np.zeros(2)},
+        )
+    # the error lists every stray key
+    with pytest.raises(ValueError, match="bad_a.*bad_b"):
+        validate_rows(
+            schema,
+            {
+                "vector": np.zeros((2, 4), np.float32),
+                "bad_b": np.zeros(2),
+                "bad_a": np.zeros(2),
+            },
+        )
+    system = make_system()
+    coll = system.create_collection("c", dim=4)
+    with pytest.raises(ValueError, match="vektor"):
+        coll.insert({"vektor": rng.standard_normal((2, 4)).astype(np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# Empty / no-match delete satellite
+# ---------------------------------------------------------------------------
+
+
+def test_empty_delete_is_noop_with_valid_watermark(system, rng):
+    coll = system.create_collection("c", dim=4)
+    coll.insert({"vector": rng.standard_normal((50, 4)).astype(np.float32)})
+    entries_before = {
+        ch: system.broker.end_position(ch) for ch in system.broker.channels("dml/")
+    }
+    res = coll.mutate(DeleteRequest(np.array([], dtype=np.int64)))
+    assert res.ack_rows == 0 and res.shard_lsns == {}
+    # nothing was published (ticks aside, no DELETE entries)
+    for ch, before in entries_before.items():
+        new = system.broker.read(ch, before)
+        assert all(e.payload == {} for e in new)  # time-ticks only
+    # the watermark is valid: a SESSION read pinned at it succeeds
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    r = coll.search(res.session_request(q, k=5))
+    assert (r.pks[0] >= 0).sum() == 5
+
+
+def test_no_match_delete_is_noop(system, rng):
+    coll = system.create_collection("c", dim=4)
+    coll.insert({"vector": rng.standard_normal((50, 4)).astype(np.float32)})
+    res = coll.mutate(DeleteRequest(np.array([123_456, 999_999, -3])))
+    assert res.ack_rows == 0 and res.shard_lsns == {}
+    assert res.row_count == 3  # requested vs acknowledged
+    # partial overlap still publishes only the real pks
+    res2 = coll.mutate(DeleteRequest(np.array([0, 777_777])))
+    assert res2.ack_rows == 1
+    q = rng.standard_normal((1, 4)).astype(np.float32)
+    r = coll.search(q, limit=50, staleness_ms=0.0)
+    assert 0 not in live(r)
+
+
+# ---------------------------------------------------------------------------
+# Tombstone kernel units (the machinery under the upsert semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_eff_tombstones_and_mask_match_naive(rng):
+    for _ in range(20):
+        n_pairs = int(rng.integers(1, 60))
+        pks = rng.integers(0, 30, n_pairs)
+        dts = rng.integers(1, 100, n_pairs).astype(np.int64)
+        ts = int(rng.integers(0, 110))
+        eff = ops.eff_tombstones(pks, dts, ts)
+        seg_pks = rng.integers(0, 35, 50)
+        seg_ts = rng.integers(0, 110, 50).astype(np.int64)
+        if eff is None:
+            killed = np.zeros(50, bool)
+        else:
+            killed = ops.tombstone_mask(seg_pks, seg_ts, eff[0], eff[1])
+        # naive per-row oracle
+        want = np.zeros(50, bool)
+        for i in range(50):
+            for p, d in zip(pks.tolist(), dts.tolist()):
+                if p == seg_pks[i] and seg_ts[i] < d <= ts:
+                    want[i] = True
+        np.testing.assert_array_equal(killed, want)
+
+
+def test_shard_split_grouping(rng):
+    shards = rng.integers(0, 4, 200)
+    order, offsets = ops.shard_split(shards, 4)
+    for s in range(4):
+        sel = order[offsets[s] : offsets[s + 1]]
+        assert (shards[sel] == s).all()
+        # stable: arrival order preserved within the shard
+        assert (np.diff(sel) > 0).all() or len(sel) <= 1
+    assert offsets[-1] == 200
