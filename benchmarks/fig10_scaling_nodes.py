@@ -5,10 +5,16 @@ wall-clock QPS cannot scale.  We measure each node's *own* scan time for
 its segment share and report the parallel-execution model QPS =
 nq / max(per-node time) — the quantity the paper's multi-machine cluster
 realizes physically (each node is an independent EC2 instance).
+
+A second row set runs with ``replication_factor=2``: every segment lives
+on two nodes, so each node carries twice the rf=1 share — the price of
+failover capacity, visible as roughly halved model QPS at equal node
+count (and the reason the fig9 kill-node run loses no answers).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -19,17 +25,27 @@ from repro.core.timestamp import INFINITE_STALENESS
 
 from .common import emit, sift_like
 
-DIM, N, NQ = 64, 24_000, 32
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+DIM = 32 if SMOKE else 64
+N = 8_000 if SMOKE else 24_000
+NQ = 16 if SMOKE else 32
+SEAL = 1_000 if SMOKE else 1_500
 
 
-def qps_with_nodes(n_nodes: int) -> tuple[float, float]:
+def qps_with_nodes(n_nodes: int, replication_factor: int = 1) -> tuple[float, float]:
     rng = np.random.default_rng(0)
-    system = ManuSystem(ManuConfig(num_query_nodes=n_nodes, seal_rows=1_500))
+    system = ManuSystem(
+        ManuConfig(
+            num_query_nodes=n_nodes,
+            seal_rows=SEAL,
+            replication_factor=replication_factor,
+        )
+    )
     coll = system.create_collection("c", dim=DIM)
     coll.create_index("vector", kind="ivf_flat", params={"nlist": 32, "nprobe": 8})
     base = sift_like(N, DIM)
-    for lo in range(0, N, 6_000):
-        coll.insert({"vector": base[lo : lo + 6_000]})
+    for lo in range(0, N, N // 4):
+        coll.insert({"vector": base[lo : lo + N // 4]})
     coll.flush()
     q = rng.standard_normal((NQ, DIM)).astype(np.float32)
     g = GuaranteeTs(system.tso.next(), INFINITE_STALENESS)
@@ -55,6 +71,13 @@ def main() -> list[tuple[str, float, str]]:
         rows.append((
             f"fig10-nodes{n_nodes}", slowest / NQ * 1e6,
             f"qps={qps:.0f};speedup={qps/base_qps:.2f}x",
+        ))
+    # replicated serving: rf=2 at 1/2/4 nodes (failover capacity cost)
+    for n_nodes in (1, 2, 4):
+        qps, slowest = qps_with_nodes(n_nodes, replication_factor=2)
+        rows.append((
+            f"fig10-nodes{n_nodes}-rf2", slowest / NQ * 1e6,
+            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x;replication=2",
         ))
     return rows
 

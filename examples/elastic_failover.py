@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/elastic_failover.py
 
 Replays a bursty workload against Manu: the latency-threshold autoscaler
-adds/removes query nodes; mid-run we crash a node holding live segments and
-show the coordinator's failover restoring identical results.
+adds/removes query nodes; mid-run we crash a node *mid-request* and show
+the replica groups + HealthMonitor/StateReconciler loop restoring
+identical results, introspected through the typed cluster-admin API.
 """
 
 import os
@@ -20,7 +21,9 @@ from repro.core import ManuConfig, ManuSystem
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    system = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=1_000))
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=3, seal_rows=1_000, replication_factor=2)
+    )
     coll = system.create_collection("c", dim=64)
     coll.create_index("vector", kind="ivf_flat", params={"nlist": 16, "nprobe": 8})
     base = rng.standard_normal((8_000, 64)).astype(np.float32)
@@ -30,10 +33,15 @@ def main() -> None:
     q = rng.standard_normal((8, 64)).astype(np.float32)
     coll.search(q, limit=10)  # warmup
 
-    def live_nodes():
-        return [n for n, qn in system.query_nodes.items() if qn.alive]
+    d = coll.describe()
+    print(f"collection {d.name!r}: {d.num_entities} rows, "
+          f"replication_factor={d.replication_factor}, "
+          f"index={d.index_on('vector').kind}")
 
-    print("== elastic scaling on a bursty trace ==")
+    def live_nodes():
+        return system.cluster_state().live_node_ids
+
+    print("\n== elastic scaling on a bursty trace ==")
     for phase, load in enumerate([1, 4, 16, 16, 4, 1]):
         t0 = time.perf_counter()
         for _ in range(load):
@@ -49,19 +57,33 @@ def main() -> None:
         print(f"phase {phase}: load={load:>2} latency/node={ms:6.1f}ms "
               f"nodes={len(live_nodes())} action={action}")
 
-    print("\n== failure recovery ==")
+    print("\n== mid-request failover ==")
     before = coll.search(q, limit=10, staleness_ms=0.0)
-    victim = next(iter(system.query_coord.assignment.values()))
-    held = system.query_nodes[victim].held_segments("c")
-    print(f"crashing {victim} (held segments {held})")
-    system.kill_query_node(victim)
-    dead = system.recover_failures()
+    cs = system.cluster_state()
+    victim_id = next(p.replicas[0] for p in cs.placement if p.replicas)
+    print(f"placement before: "
+          f"{[(p.segment_id, p.replicas) for p in cs.placement]}")
+    victim = system.query_nodes[victim_id]
+
+    def dying(request):  # the node dies between planning and scan
+        victim.alive = False
+        raise RuntimeError("injected crash mid-request")
+
+    victim.search_request = dying
+    print(f"crashing {victim_id} mid-request ...")
     after = coll.search(q, limit=10, staleness_ms=0.0)
     same = (np.sort(before.pks, 1) == np.sort(after.pks, 1)).all()
-    print(f"coordinator declared dead: {dead}; results identical: {same}")
-    assert same
-    print("segments now held by:",
-          {n: qn.held_segments('c') for n, qn in system.query_nodes.items() if qn.alive})
+
+    cs = system.cluster_state()
+    statuses = {n.node_id: n.status for n in cs.nodes}
+    reassigned = all(victim_id not in p.replicas for p in cs.placement)
+    print(f"results identical: {same}")
+    print(f"node statuses: {statuses}")
+    print(f"dead node out of every replica group: {reassigned}; "
+          f"under-replicated segments: {cs.under_replicated}")
+    assert same and reassigned
+    print("placement after:  "
+          f"{[(p.segment_id, p.replicas) for p in cs.placement]}")
 
 
 if __name__ == "__main__":

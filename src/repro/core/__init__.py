@@ -7,12 +7,17 @@ from .consistency import ConsistencyLevel, GuaranteeTs
 from .manu import ManuCollection, ManuConfig, ManuSystem
 from .request import (
     AnnsQuery,
+    ClusterState,
     DeleteRequest,
+    DescribeCollection,
+    IndexDescription,
     InsertRequest,
     MutationRequest,
     MutationResult,
+    NodeStatus,
     Ranker,
     SearchRequest,
+    SegmentPlacement,
     UpsertRequest,
 )
 from .segment import DEFAULT_PARTITION
@@ -37,6 +42,11 @@ __all__ = [
     "AnnsQuery",
     "Ranker",
     "SearchRequest",
+    "ClusterState",
+    "NodeStatus",
+    "SegmentPlacement",
+    "DescribeCollection",
+    "IndexDescription",
     "ManuCollection",
     "ManuConfig",
     "ManuSystem",

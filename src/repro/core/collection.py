@@ -100,6 +100,7 @@ class CollectionInfo:
     created_ts: int = 0
     index_specs: dict[str, dict[str, Any]] = field(default_factory=dict)
     dropped: bool = False
+    replication_factor: int = 1
 
     def dim(self, vector_field: str = "vector") -> int:
         return self.schema.field(vector_field).dim

@@ -11,8 +11,9 @@ the meta store (see ``QueryCoordinator.recover_state``).
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 from .collection import CollectionInfo, Metric, Schema
 from .log import (
@@ -85,12 +86,18 @@ class RootCoordinator:
         num_shards: int = 2,
         metric: Metric = Metric.L2,
         seal_rows: int = DEFAULT_SEAL_ROWS,
+        replication_factor: int = 1,
     ) -> CollectionInfo:
         if self.meta.get(f"collection/{name}") is not None:
             raise ValueError(f"collection '{name}' already exists")
+        if not isinstance(replication_factor, int) or replication_factor < 1:
+            raise ValueError(
+                f"replication_factor must be an int >= 1, got {replication_factor!r}"
+            )
         ts = self.tso.next()
         info = CollectionInfo(
-            name=name, schema=schema, num_shards=num_shards, metric=metric, created_ts=ts
+            name=name, schema=schema, num_shards=num_shards, metric=metric,
+            created_ts=ts, replication_factor=replication_factor,
         )
         for shard in range(num_shards):
             self.broker.create_channel(dml_channel(name, shard))
@@ -103,6 +110,7 @@ class RootCoordinator:
                 "created_ts": ts,
                 "seal_rows": seal_rows,
                 "dim": info.schema.vector_fields()[0].dim,
+                "replication_factor": replication_factor,
             },
         )
         # Every collection starts with the implicit default partition.
@@ -501,7 +509,7 @@ class IndexCoordinator:
 
 
 # ---------------------------------------------------------------------------
-# Query coordinator: segment assignment, load balance, failover, scaling
+# Query coordinator: replica groups, load balance, failover, scaling
 # ---------------------------------------------------------------------------
 
 
@@ -511,40 +519,74 @@ class QueryNodeState:
     lease_id: int
     segments: set[tuple[str, int]] = field(default_factory=set)
     channels: set[str] = field(default_factory=set)
+    draining: bool = False
+    last_beat_ms: float = 0.0
 
 
 class QueryCoordinator:
+    """Single-leader query coordinator (paper §3.2, §3.6).
+
+    Every sealed segment is owned by a **replica group** — an ordered list
+    of query nodes (index 0 is the primary).  The authoritative placement
+    record lives in the meta store at ``assignment/{coll}/{sid}`` and every
+    mutation goes through the CAS-safe ``update_placement`` primitive, so a
+    failover racing a rebalance converges on the committed winner instead
+    of clobbering it.  Health observation (``HealthMonitor``) and
+    convergence (``StateReconciler``) are split per the single-writer
+    control-loop idiom: the monitor only observes, the reconciler acts.
+    """
+
     HEARTBEAT_TTL_MS = 5_000
 
-    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO, data_coord: DataCoordinator):
+    def __init__(
+        self,
+        broker: LogBroker,
+        meta: MetaStore,
+        tso: TSO,
+        data_coord: DataCoordinator,
+        replication_factor: int = 1,
+        heartbeat_ttl_ms: float | None = None,
+    ):
         self.broker = broker
         self.meta = meta
         self.tso = tso
         self.data_coord = data_coord
+        self.clock = data_coord.clock
         self.sub = Subscription(broker, COORD_CHANNEL)
         self.nodes: dict[str, QueryNodeState] = {}
-        # (collection, segment_id) -> node_id  (single assignment; replicas
-        # are modelled by assign_replicas)
-        self.assignment: dict[tuple[str, int], str] = {}
-        self.replicas: int = 1
+        # (collection, segment_id) -> ordered replica group (node ids);
+        # in-memory mirror of the committed ``assignment/`` meta records.
+        self.replica_sets: dict[tuple[str, int], list[str]] = {}
+        self.replication_factor = max(1, int(replication_factor))
+        self.heartbeat_ttl_ms = float(
+            heartbeat_ttl_ms if heartbeat_ttl_ms is not None else self.HEARTBEAT_TTL_MS
+        )
         # (collection, segment_id) -> {field: index_built payload}
         self._known_indexes: dict[tuple[str, int], dict[str, dict]] = {}
         # (collection, segment_id) -> visible_from_ts MVCC gate of compacted
         # rewrites; must survive failover/rebalance reloads or a pinned
         # query would see both the rewrite and its retired sources.
         self._visible_from: dict[tuple[str, int], int] = {}
+        # Serializes control-loop passes against coordination-log consumption
+        # when a threaded watchdog reconciles concurrently with the pump.
+        self._mutex = threading.RLock()
+        self.health = HealthMonitor(self)
+        self.reconciler = StateReconciler(self)
 
     # ------------------------------------------------------------ membership
     def register_node(self, node_id: str) -> int:
-        lease = self.meta.grant_lease(self.HEARTBEAT_TTL_MS)
+        lease = self.meta.grant_lease(self.heartbeat_ttl_ms)
         self.meta.put(f"querynode/{node_id}", {"node_id": node_id}, lease_id=lease)
-        self.nodes[node_id] = QueryNodeState(node_id, lease)
+        self.nodes[node_id] = QueryNodeState(
+            node_id, lease, last_beat_ms=self.clock.now_ms()
+        )
         return lease
 
     def heartbeat(self, node_id: str) -> None:
         st = self.nodes.get(node_id)
         if st:
             self.meta.keepalive(st.lease_id)
+            st.last_beat_ms = self.clock.now_ms()
 
     def deregister_node(self, node_id: str) -> None:
         # Revoke the lease only; the node stays in ``self.nodes`` until
@@ -554,18 +596,156 @@ class QueryCoordinator:
         if st:
             self.meta.revoke_lease(st.lease_id)
 
+    def start_drain(self, node_id: str) -> None:
+        """Mark a node for graceful scale-down: it keeps serving, but the
+        reconciler sheds its replicas (load-before-release) and it stops
+        receiving new placements."""
+        st = self.nodes.get(node_id)
+        if st:
+            st.draining = True
+
     def live_nodes(self) -> list[str]:
         alive = set(self.meta.scan("querynode/"))
         return sorted(
             n for n in self.nodes if f"querynode/{n}" in alive
         )
 
-    # ------------------------------------------------------------ assignment
+    def on_node_down(self, node_id: str) -> None:
+        """Immediate failure report from the dispatch path (a request found
+        the node dead): revoke its lease and reconcile now rather than
+        waiting out the heartbeat TTL."""
+        st = self.nodes.get(node_id)
+        if st is not None:
+            self.meta.revoke_lease(st.lease_id)
+        self.reconciler.reconcile()
+
+    # ------------------------------------------------------------ placement
+    @property
+    def assignment(self) -> dict[tuple[str, int], str]:
+        """Legacy single-owner view: segment -> primary replica."""
+        return {key: nodes[0] for key, nodes in self.replica_sets.items() if nodes}
+
+    def replication_for(self, collection: str) -> int:
+        """Desired replica count: per-collection override, else config."""
+        info = self.meta.get(f"collection/{collection}") or {}
+        return max(1, int(info.get("replication_factor", self.replication_factor)))
+
+    def placement_for(self, collection: str) -> dict[int, list[str]]:
+        """segment_id -> replica group, for the proxy's dispatch planner."""
+        return {
+            sid: list(nodes)
+            for (coll, sid), nodes in self.replica_sets.items()
+            if coll == collection
+        }
+
+    def _placement_candidates(self, exclude: set[str] | None = None) -> list[str]:
+        """Live, non-draining nodes eligible to receive new replicas."""
+        exclude = exclude or set()
+        return [
+            n for n in self.live_nodes()
+            if n not in exclude and not self.nodes[n].draining
+        ]
+
     def _least_loaded(self, exclude: set[str] | None = None) -> str | None:
-        nodes = [n for n in self.live_nodes() if not exclude or n not in exclude]
+        nodes = self._placement_candidates(exclude)
         if not nodes:
             return None
-        return min(nodes, key=lambda n: len(self.nodes[n].segments))
+        return min(nodes, key=lambda n: (len(self.nodes[n].segments), n))
+
+    def update_placement(
+        self,
+        collection: str,
+        segment_id: int,
+        fn: Callable[[list[str]], "list[str] | None"],
+    ) -> list[str]:
+        """CAS-safe read-modify-write of one segment's replica group.
+
+        ``fn(current_nodes) -> new_nodes | None`` computes the new replica
+        list from the value *actually committed* in the meta store (None
+        aborts).  The write is retried until the compare-and-swap lands, so
+        a reassignment racing a concurrent rebalance recomputes from the
+        winner's committed record instead of overwriting it.  Load/release
+        messages and in-memory mirrors are applied only for the committed
+        value.  Returns the committed replica list (the pre-existing one on
+        abort).
+        """
+        with self._mutex:
+            key = (collection, segment_id)
+            mkey = f"assignment/{collection}/{segment_id}"
+            desired = self.replication_for(collection)
+            while True:
+                rev = self.meta.get_rev(mkey)
+                cur = self.meta.get(mkey) or {}
+                cur_nodes = list(cur.get("nodes") or ())
+                if not cur_nodes and cur.get("node"):
+                    cur_nodes = [cur["node"]]
+                new_nodes = fn(list(cur_nodes))
+                if new_nodes is None:
+                    return cur_nodes
+                new_nodes = list(dict.fromkeys(new_nodes))
+                record = {
+                    "nodes": new_nodes,
+                    "node": new_nodes[0] if new_nodes else None,
+                    "visible_from_ts": self._visible_from.get(key, 0),
+                    "under_replicated": len(new_nodes) < desired,
+                }
+                if not self.meta.cas(mkey, rev, record):
+                    continue  # lost the race: recompute from the winner
+                self._apply_committed(key, new_nodes)
+                return new_nodes
+
+    def _apply_committed(self, key: tuple[str, int], new_nodes: list[str]) -> None:
+        """Sync mirrors and publish load/release for a committed placement.
+        Loads are published before releases, so a segment may briefly live
+        on both nodes (the proxy dedups) but never on neither."""
+        coll, sid = key
+        old = self.replica_sets.get(key, [])
+        added = [n for n in new_nodes if n not in old]
+        removed = [n for n in old if n not in new_nodes]
+        if new_nodes:
+            self.replica_sets[key] = list(new_nodes)
+        else:
+            self.replica_sets.pop(key, None)
+            self.meta.delete(f"assignment/{coll}/{sid}")
+        for n in added:
+            if n not in self.nodes:
+                continue
+            self.nodes[n].segments.add(key)
+            self._publish(
+                {
+                    "msg": "load_segment",
+                    "node_id": n,
+                    "collection": coll,
+                    "segment_id": sid,
+                    "visible_from_ts": self._visible_from.get(key, 0),
+                }
+            )
+            for idx in self._known_indexes.get(key, {}).values():
+                self._publish(self._load_index_payload(n, idx))
+        for n in removed:
+            if n not in self.nodes:
+                continue
+            self.nodes[n].segments.discard(key)
+            self._publish(
+                {
+                    "msg": "release_segment",
+                    "node_id": n,
+                    "collection": coll,
+                    "segment_id": sid,
+                }
+            )
+
+    def _fill_replicas(self, nodes: list[str], desired: int) -> list[str]:
+        """Top a replica list up to ``desired`` with least-loaded candidates;
+        degrades gracefully (shorter list) when the cluster is too small —
+        the committed record then carries ``under_replicated: True``."""
+        nodes = [n for n in nodes if n in self.nodes and not self.nodes[n].draining]
+        while len(nodes) < desired:
+            pick = self._least_loaded(exclude=set(nodes))
+            if pick is None:
+                break
+            nodes.append(pick)
+        return nodes
 
     def _publish(self, payload: dict) -> None:
         self.broker.publish(
@@ -574,6 +754,10 @@ class QueryCoordinator:
         )
 
     def step(self) -> bool:
+        with self._mutex:
+            return self._step_locked()
+
+    def _step_locked(self) -> bool:
         progress = False
         for entry in self.sub.poll():
             if entry.type is not EntryType.COORD:
@@ -588,9 +772,9 @@ class QueryCoordinator:
             elif msg == "index_built":
                 key = (p["collection"], p["segment_id"])
                 self._known_indexes.setdefault(key, {})[p.get("field", "vector")] = p
-                node = self.assignment.get(key)
-                if node:
-                    self._publish(self._load_index_payload(node, p))
+                for node in self.replica_sets.get(key, ()):
+                    if node in self.nodes:
+                        self._publish(self._load_index_payload(node, p))
                 progress = True
             elif msg == "segment_compacted":
                 progress |= self._handle_compacted(p)
@@ -599,25 +783,26 @@ class QueryCoordinator:
         return progress
 
     def _handle_partition_dropped(self, p: dict) -> bool:
-        """Release every assignment of a dropped partition's segments."""
+        """Release every replica of a dropped partition's segments."""
         coll = p["collection"]
         changed = False
         for sid in p.get("segment_ids", ()):
             key = (coll, sid)
-            owner = self.assignment.pop(key, None)
+            owners = self.replica_sets.pop(key, [])
             self._known_indexes.pop(key, None)
             self._visible_from.pop(key, None)
             self.meta.delete(f"assignment/{coll}/{sid}")
-            if owner in self.nodes:
-                self.nodes[owner].segments.discard(key)
-                self._publish(
-                    {
-                        "msg": "release_segment",
-                        "node_id": owner,
-                        "collection": coll,
-                        "segment_id": sid,
-                    }
-                )
+            for owner in owners:
+                if owner in self.nodes:
+                    self.nodes[owner].segments.discard(key)
+                    self._publish(
+                        {
+                            "msg": "release_segment",
+                            "node_id": owner,
+                            "collection": coll,
+                            "segment_id": sid,
+                        }
+                    )
             changed = True
         return changed
 
@@ -632,44 +817,39 @@ class QueryCoordinator:
         coll = p["collection"]
         sources = list(p["sources"])
         live = set(self.live_nodes())
-        # Targets stay aligned with their shard's DML channel subscriber so
-        # future delta deletes keep reaching the node that serves the rows.
+        # The primary stays aligned with the shard's DML channel subscriber
+        # so future delta deletes keep reaching the node serving the rows.
         ch = dml_channel(coll, p["shard"])
-        target = next(
+        anchor = next(
             (n for n in sorted(live) if ch in self.nodes[n].channels), None
         )
-        if target is None:
+        if anchor is None:
             owners = [
-                self.assignment.get((coll, sid))
+                n
                 for sid in sources
-                if self.assignment.get((coll, sid)) in live
+                for n in self.replica_sets.get((coll, sid), ())
+                if n in live
             ]
-            target = (
+            anchor = (
                 max(set(owners), key=owners.count) if owners else self._least_loaded()
             )
-        if target is None:
+        if anchor is None:
             return False
+        desired = self.replication_for(coll)
         for t in p["segments"]:
             new_sid = t["segment_id"]
             key = (coll, new_sid)
-            if key in self.assignment or t["num_rows"] == 0:
+            if key in self.replica_sets or t["num_rows"] == 0:
                 continue
             self._visible_from[key] = p["compact_ts"]
-            self.assignment[key] = target
-            self.nodes[target].segments.add(key)
-            self.meta.put(
-                f"assignment/{coll}/{new_sid}",
-                {"node": target, "visible_from_ts": p["compact_ts"]},
-            )
-            self._publish(
-                {
-                    "msg": "load_segment",
-                    "node_id": target,
-                    "collection": coll,
-                    "segment_id": new_sid,
-                    "visible_from_ts": p["compact_ts"],
-                }
-            )
+
+            def place(cur: list[str], anchor: str = anchor) -> list[str]:
+                nodes = [n for n in cur if n in self.nodes]
+                if anchor not in nodes and anchor in self.nodes:
+                    nodes.insert(0, anchor)
+                return self._fill_replicas(nodes, desired) or nodes
+
+            self.update_placement(coll, new_sid, place)
         # Broadcast the folded tombstones: every node prunes its
         # delta-delete map once the retention horizon passes the swap.
         self._publish(
@@ -682,48 +862,35 @@ class QueryCoordinator:
         )
         for sid in sources:
             skey = (coll, sid)
-            owner = self.assignment.pop(skey, None)
+            owners = self.replica_sets.pop(skey, [])
             self._known_indexes.pop(skey, None)
             self._visible_from.pop(skey, None)
-            if owner in self.nodes:
-                self.nodes[owner].segments.discard(skey)
-                self._publish(
-                    {
-                        "msg": "retire_segment",
-                        "node_id": owner,
-                        "collection": coll,
-                        "segment_id": sid,
-                        "retired_at_ts": p["compact_ts"],
-                    }
-                )
+            for owner in owners:
+                if owner in self.nodes:
+                    self.nodes[owner].segments.discard(skey)
+                    self._publish(
+                        {
+                            "msg": "retire_segment",
+                            "node_id": owner,
+                            "collection": coll,
+                            "segment_id": sid,
+                            "retired_at_ts": p["compact_ts"],
+                        }
+                    )
             self.meta.delete(f"assignment/{coll}/{sid}")
         return True
 
     def _assign_segment(self, collection: str, segment_id: int) -> bool:
+        """Least-loaded placement of a fresh sealed segment's replica group."""
         key = (collection, segment_id)
-        if key in self.assignment:
+        if key in self.replica_sets:
             return False
-        node = self._least_loaded()
-        if node is None:
-            return False
-        self.assignment[key] = node
-        self.nodes[node].segments.add(key)
-        self.meta.put(
-            f"assignment/{collection}/{segment_id}",
-            {"node": node, "visible_from_ts": self._visible_from.get(key, 0)},
-        )
-        self._publish(
-            {
-                "msg": "load_segment",
-                "node_id": node,
-                "collection": collection,
-                "segment_id": segment_id,
-                "visible_from_ts": self._visible_from.get(key, 0),
-            }
-        )
-        for idx in self._known_indexes.get(key, {}).values():
-            self._publish(self._load_index_payload(node, idx))
-        return True
+        desired = self.replication_for(collection)
+
+        def place(cur: list[str]) -> "list[str] | None":
+            return self._fill_replicas(cur, desired) or None
+
+        return bool(self.update_placement(collection, segment_id, place))
 
     def _load_index_payload(self, node: str, built: dict) -> dict:
         return {
@@ -739,14 +906,16 @@ class QueryCoordinator:
 
     # ------------------------------------------------------ channel coverage
     def assign_channels(self, collection: str, num_shards: int) -> None:
-        """Distribute DML channel subscriptions over live nodes."""
-        nodes = self.live_nodes()
+        """Distribute DML channel subscriptions over live nodes (draining
+        nodes shed channel ownership so scale-down leaves them idle)."""
+        nodes = self._placement_candidates() or self.live_nodes()
         if not nodes:
             return
+        all_nodes = self.live_nodes()
         for shard in range(num_shards):
             ch = dml_channel(collection, shard)
             owner = nodes[shard % len(nodes)]
-            for n in nodes:
+            for n in all_nodes:
                 st = self.nodes[n]
                 if n == owner and ch not in st.channels:
                     st.channels.add(ch)
@@ -766,80 +935,215 @@ class QueryCoordinator:
 
     # -------------------------------------------------------------- failover
     def handle_failures(self) -> list[str]:
-        """Detect dead nodes (lease expiry) and reassign their work."""
-        self.meta.expire_now()
-        live = set(self.live_nodes())
-        dead = [n for n in self.nodes if n not in live]
-        for node_id in dead:
-            st = self.nodes.pop(node_id)
-            for key in sorted(st.segments):
-                coll, sid = key
-                self.assignment.pop(key, None)
-                self._assign_segment(coll, sid)
-            # re-home channels
-            for ch in sorted(st.channels):
-                parts = ch.split("/")
-                coll, shard = parts[1], int(parts[2])
-                target = self._least_loaded()
-                if target:
-                    self.nodes[target].channels.add(ch)
-                    self._publish(
-                        {
-                            "msg": "subscribe_channel",
-                            "node_id": target,
-                            "channel": ch,
-                            "from_position": self.data_coord.replay_position(coll, shard),
-                        }
-                    )
-        return dead
+        """Detect dead nodes (lease expiry) and reassign their replicas to
+        under-replicated survivors, one CAS-committed record at a time."""
+        with self._mutex:
+            self.meta.expire_now()
+            live = set(self.live_nodes())
+            dead = [n for n in self.nodes if n not in live]
+            for node_id in dead:
+                st = self.nodes.pop(node_id)
+                for key in sorted(st.segments):
+                    coll, sid = key
+                    desired = self.replication_for(coll)
+
+                    def heal(cur: list[str], dead_id: str = node_id,
+                             desired: int = desired) -> "list[str] | None":
+                        survivors = [n for n in cur if n != dead_id]
+                        return self._fill_replicas(survivors, desired)
+
+                    # The dead node is already out of self.nodes, so the
+                    # committed diff only loads onto survivors.
+                    if key in self.replica_sets:
+                        self.replica_sets[key] = [
+                            n for n in self.replica_sets[key] if n != node_id
+                        ]
+                    self.update_placement(coll, sid, heal)
+                # re-home channels
+                for ch in sorted(st.channels):
+                    parts = ch.split("/")
+                    coll, shard = parts[1], int(parts[2])
+                    target = self._least_loaded()
+                    if target:
+                        self.nodes[target].channels.add(ch)
+                        self._publish(
+                            {
+                                "msg": "subscribe_channel",
+                                "node_id": target,
+                                "channel": ch,
+                                "from_position": self.data_coord.replay_position(coll, shard),
+                            }
+                        )
+            return dead
 
     # -------------------------------------------------------------- balance
     def rebalance(self) -> int:
-        """Move segments from the most- to least-loaded node (paper §3.6)."""
-        moved = 0
-        while True:
-            nodes = self.live_nodes()
-            if len(nodes) < 2:
-                return moved
-            counts = {n: len(self.nodes[n].segments) for n in nodes}
-            hi = max(counts, key=counts.get)
-            lo = min(counts, key=counts.get)
-            if counts[hi] - counts[lo] <= 1:
-                return moved
-            key = sorted(self.nodes[hi].segments)[0]
-            coll, sid = key
-            # Load on the new node first, then release (no gap: a segment may
-            # briefly live on two nodes; the proxy dedups).
-            self.nodes[hi].segments.discard(key)
-            self.nodes[lo].segments.add(key)
-            self.assignment[key] = lo
-            self.meta.put(
-                f"assignment/{coll}/{sid}",
-                {"node": lo, "visible_from_ts": self._visible_from.get(key, 0)},
-            )
-            self._publish(
-                {
-                    "msg": "load_segment",
-                    "node_id": lo,
-                    "collection": coll,
-                    "segment_id": sid,
-                    "visible_from_ts": self._visible_from.get(key, 0),
-                }
-            )
-            for idx in self._known_indexes.get(key, {}).values():
-                self._publish(self._load_index_payload(lo, idx))
-            self._publish(
-                {"msg": "release_segment", "node_id": hi, "collection": coll, "segment_id": sid}
-            )
-            moved += 1
+        """Move replicas from the most- to least-loaded node (paper §3.6),
+        never co-locating two replicas of one segment on the same node."""
+        with self._mutex:
+            moved = 0
+            while True:
+                nodes = self._placement_candidates()
+                if len(nodes) < 2:
+                    return moved
+                counts = {n: len(self.nodes[n].segments) for n in nodes}
+                hi = max(nodes, key=lambda n: (counts[n], n))
+                lo = min(nodes, key=lambda n: (counts[n], n))
+                if counts[hi] - counts[lo] <= 1:
+                    return moved
+                key = next(
+                    (
+                        k
+                        for k in sorted(self.nodes[hi].segments)
+                        if lo not in self.replica_sets.get(k, ())
+                    ),
+                    None,
+                )
+                if key is None:
+                    return moved
+                coll, sid = key
+
+                def move(cur: list[str], hi: str = hi, lo: str = lo) -> "list[str] | None":
+                    if hi not in cur or lo in cur:
+                        return None  # placement changed under us: abort
+                    return [lo if n == hi else n for n in cur]
+
+                self.update_placement(coll, sid, move)
+                if lo not in self.replica_sets.get(key, ()):
+                    return moved  # aborted: stop rather than spin
+                moved += 1
 
     def nodes_for_collection(self, collection: str) -> list[str]:
         """All nodes holding segments or channels of the collection."""
         out = set()
-        for (coll, _sid), node in self.assignment.items():
+        for (coll, _sid), nodes in self.replica_sets.items():
             if coll == collection:
-                out.add(node)
+                out.update(nodes)
         for n, st in self.nodes.items():
             if any(ch.startswith(f"dml/{collection}/") for ch in st.channels):
                 out.add(n)
         return sorted(out & set(self.live_nodes()))
+
+
+# ---------------------------------------------------------------------------
+# Health + reconciliation control loop
+# ---------------------------------------------------------------------------
+
+
+class HealthMonitor:
+    """Missed-heartbeat detector.  Observation only — it never mutates
+    placement; the ``StateReconciler`` acts on what it reports (the
+    observe/act split of the single-writer control-loop idiom)."""
+
+    def __init__(self, coord: QueryCoordinator):
+        self.coord = coord
+
+    def observe(self) -> dict[str, str]:
+        """Status per registered node: ``healthy`` / ``suspect`` (more than
+        half a TTL since the last heartbeat) / ``dead`` (lease expired) /
+        ``draining`` (graceful scale-down in progress)."""
+        c = self.coord
+        c.meta.expire_now()
+        now = c.clock.now_ms()
+        alive = set(c.live_nodes())
+        out: dict[str, str] = {}
+        for node_id, st in c.nodes.items():
+            if node_id not in alive:
+                out[node_id] = "dead"
+            elif st.draining:
+                out[node_id] = "draining"
+            elif now - st.last_beat_ms > c.heartbeat_ttl_ms / 2:
+                out[node_id] = "suspect"
+            else:
+                out[node_id] = "healthy"
+        return out
+
+
+class StateReconciler:
+    """Converges desired placement with observed cluster state.  One pass:
+
+    1. **failures** — expired leases: every replica the dead node held is
+       CAS-reassigned to under-replicated survivors,
+    2. **heal** — any sealed segment below its collection's replication
+       factor (node join, prior total outage) gains replicas on the
+       least-loaded candidates,
+    3. **drain** — draining nodes shed replicas load-before-release (a
+       replica leaves the draining node only once a replacement exists),
+    4. **channels** — DML channel ownership re-converges over candidates,
+    5. **rebalance** — replica counts converge toward even load.
+
+    MVCC epoch pins ride along automatically: ``update_placement`` stamps
+    every committed record with the segment's ``visible_from_ts``.
+    """
+
+    def __init__(self, coord: QueryCoordinator):
+        self.coord = coord
+
+    def reconcile(self) -> dict:
+        c = self.coord
+        with c._mutex:
+            report = {
+                "statuses": c.health.observe(),
+                "dead": c.handle_failures(),
+            }
+            report["healed"] = self.heal()
+            report["drained"] = self.drain()
+            for key, info in c.meta.scan("collection/").items():
+                c.assign_channels(key.split("/", 1)[1], info["num_shards"])
+            report["moved"] = c.rebalance()
+            return report
+
+    def heal(self) -> int:
+        """Top every under-replicated sealed segment back up to its desired
+        replica count; returns the number of replicas added."""
+        c = self.coord
+        healed = 0
+        for key in c.meta.scan("collection/"):
+            coll = key.split("/", 1)[1]
+            desired = c.replication_for(coll)
+            capacity = len(c._placement_candidates())
+            for sid in c.data_coord.sealed_segments(coll):
+                skey = (coll, sid)
+                cur = c.replica_sets.get(skey, [])
+                have = [
+                    n for n in cur if n in c.nodes and not c.nodes[n].draining
+                ]
+                if len(have) >= min(desired, capacity):
+                    continue
+
+                def grow(nodes_in: list[str], desired: int = desired) -> "list[str] | None":
+                    grown = self.coord._fill_replicas(list(nodes_in), desired)
+                    return grown if grown != nodes_in else None
+
+                before = len(cur)
+                new = c.update_placement(coll, sid, grow)
+                healed += max(0, len(new) - before)
+        return healed
+
+    def drain(self) -> int:
+        """Shed replicas off draining nodes; a replica is only released once
+        a replacement node carries it (or another replica already does), so
+        pinned MVCC reads keep a serving copy throughout."""
+        c = self.coord
+        shed = 0
+        for node_id, st in list(c.nodes.items()):
+            if not st.draining:
+                continue
+            for key in sorted(st.segments):
+                coll, sid = key
+
+                def shed_one(cur: list[str], node_id: str = node_id) -> "list[str] | None":
+                    if node_id not in cur:
+                        return None
+                    rest = [n for n in cur if n != node_id]
+                    repl = c._least_loaded(exclude=set(cur))
+                    if repl is not None:
+                        rest.append(repl)
+                    # Keep the last copy on the draining node until some
+                    # other node can take it: no serving gap, ever.
+                    return rest if rest else None
+
+                new = c.update_placement(coll, sid, shed_one)
+                if node_id not in new:
+                    shed += 1
+        return shed

@@ -54,12 +54,17 @@ from .proxy import BatchingProxy, Proxy, SearchResult
 from .query_node import QueryNode
 from .request import (
     AnnsQuery,
+    ClusterState,
     DeleteRequest,
+    DescribeCollection,
+    IndexDescription,
     InsertRequest,
     MutationRequest,
     MutationResult,
+    NodeStatus,
     Ranker,
     SearchRequest,
+    SegmentPlacement,
     UpsertRequest,
     vector_column_of,
 )
@@ -86,6 +91,14 @@ class ManuConfig:
     manual_clock: bool = True
     threaded: bool = False
     pump_sleep_s: float = 0.002
+    # Serving-tier replication (paper §6.3 elasticity): every sealed
+    # segment is loaded by this many query nodes (collections may override
+    # via ``create_collection(..., replication_factor=)``).  Fewer live
+    # nodes than replicas degrades gracefully: the placement record is
+    # flagged under-replicated and the reconciler heals it on node join.
+    replication_factor: int = 1
+    heartbeat_ttl_ms: float = 5_000.0
+    reconcile_interval_s: float = 0.25  # threaded-mode watchdog cadence
 
 
 class ManuCollection:
@@ -295,6 +308,30 @@ class ManuCollection:
         """PyManu ``query``: vector search with boolean filter expression."""
         return self.search(queries, limit, filter_expr=expr, **kw)
 
+    def describe(self) -> DescribeCollection:
+        """Typed description of the collection: schema fields, partitions,
+        declared indexes, entity count, sharding and replication — the
+        structured replacement for picking through handle attributes."""
+        specs = self.system.index_coord.index_specs(self.name)
+        return DescribeCollection(
+            name=self.name,
+            fields=tuple(self.info.schema.fields),
+            partitions=tuple(self.partitions()),
+            indexes=tuple(
+                IndexDescription(
+                    field=f,
+                    kind=s["kind"],
+                    params=dict(s.get("params") or {}),
+                    metric=Metric(s["metric"]),
+                )
+                for f, s in sorted(specs.items())
+            ),
+            num_entities=self.num_entities(),
+            num_shards=self.info.num_shards,
+            metric=self.info.metric,
+            replication_factor=self.system.query_coord.replication_for(self.name),
+        )
+
     def num_entities(self) -> int:
         """Rows of THIS collection across the cluster, counting each
         segment once even when replicated on several nodes (and preferring
@@ -323,7 +360,11 @@ class ManuSystem:
         self.root_coord = RootCoordinator(self.broker, self.meta, self.tso)
         self.data_coord = DataCoordinator(self.broker, self.meta, self.tso, self.clock)
         self.index_coord = IndexCoordinator(self.broker, self.meta, self.tso)
-        self.query_coord = QueryCoordinator(self.broker, self.meta, self.tso, self.data_coord)
+        self.query_coord = QueryCoordinator(
+            self.broker, self.meta, self.tso, self.data_coord,
+            replication_factor=self.config.replication_factor,
+            heartbeat_ttl_ms=self.config.heartbeat_ttl_ms,
+        )
 
         self.loggers = [
             Logger(f"logger-{i}", self.broker, self.tso, self.data_coord, self.clock,
@@ -381,20 +422,27 @@ class ManuSystem:
         return qn
 
     def add_query_node(self) -> str:
+        """Scale up: register the node, then let the reconciler heal any
+        under-replicated segments onto it and rebalance toward even load."""
         qn = self._new_query_node()
-        for coll in self.collections.values():
-            self.query_coord.assign_channels(coll.name, coll.info.num_shards)
-        self.query_coord.rebalance()
+        self.query_coord.reconciler.reconcile()
         if not self.config.threaded:
             self.run_until_idle()
         return qn.node_id
 
     def remove_query_node(self, node_id: str | None = None) -> str | None:
-        """Graceful scale-down: reassign segments, then retire the node."""
+        """Graceful scale-down: mark the node draining, reconcile so its
+        replicas are shed to survivors (load-before-release — a segment's
+        last copy stays on the draining node until a replacement holds it,
+        so pinned MVCC reads never hit a serving gap), then retire it."""
         live = [n for n, q in self.query_nodes.items() if q.alive]
         if len(live) <= 1:
             return None
         node_id = node_id or live[-1]
+        self.query_coord.start_drain(node_id)
+        self.query_coord.reconciler.reconcile()
+        if not self.config.threaded:
+            self.run_until_idle()  # survivors load their new replicas
         self.query_coord.deregister_node(node_id)
         self.query_coord.handle_failures()
         node = self.query_nodes.get(node_id)
@@ -411,7 +459,9 @@ class ManuSystem:
         self.query_nodes[node_id].alive = False
 
     def recover_failures(self) -> list[str]:
-        """Expire dead leases and reassign (the query coordinator's watchdog)."""
+        """Expire dead leases and reconcile (the query coordinator's
+        watchdog): failed nodes' segments are CAS-reassigned to surviving
+        replicas, channels re-homed, under-replication healed."""
         st = self.query_coord.nodes
         for node_id, qn in self.query_nodes.items():
             if qn.alive and node_id in st:
@@ -420,12 +470,10 @@ class ManuSystem:
         for node_id, qn in self.query_nodes.items():
             if not qn.alive and node_id in st:
                 self.meta.revoke_lease(st[node_id].lease_id)
-        dead = self.query_coord.handle_failures()
-        for coll in self.collections.values():
-            self.query_coord.assign_channels(coll.name, coll.info.num_shards)
+        report = self.query_coord.reconciler.reconcile()
         if not self.config.threaded:
             self.run_until_idle()
-        return dead
+        return report["dead"]
 
     # ----------------------------------------------------------------- DDL
     def create_collection(
@@ -437,10 +485,13 @@ class ManuSystem:
         extra_fields: list[FieldSchema] | None = None,
         seal_rows: int | None = None,
         schema: Schema | None = None,
+        replication_factor: int | None = None,
     ) -> ManuCollection:
         """Create a collection.  The common int-pk + one-vector case is
         built from ``dim``/``extra_fields``; pass an explicit ``schema``
-        for anything else (string primary keys, custom layouts)."""
+        for anything else (string primary keys, custom layouts).
+        ``replication_factor`` overrides ``ManuConfig.replication_factor``
+        for this collection's sealed segments."""
         schema = schema or Schema.simple(dim, metric, extra=extra_fields)
         info = self.root_coord.create_collection(
             name,
@@ -448,6 +499,11 @@ class ManuSystem:
             num_shards=num_shards or self.config.num_shards,
             metric=metric,
             seal_rows=seal_rows or self.config.seal_rows,
+            replication_factor=(
+                self.config.replication_factor
+                if replication_factor is None
+                else replication_factor
+            ),
         )
         coll = ManuCollection(self, info)
         self.collections[name] = coll
@@ -574,6 +630,11 @@ class ManuSystem:
         """One cooperative scheduling round over every component."""
         progress = False
         for _ in range(rounds):
+            # Alive nodes heartbeat every round: consistency waits advance
+            # the manual clock, which must never expire a *live* lease.
+            for node_id, qn in self.query_nodes.items():
+                if qn.alive and node_id in self.query_coord.nodes:
+                    self.query_coord.heartbeat(node_id)
             for lg in self.loggers:
                 lg.tick(self.broker.channels("dml/"))
             for dn in self.data_nodes:
@@ -718,7 +779,16 @@ class ManuSystem:
             return
         target = guarantee.wait_target_ts()
         for _ in range(100_000):
-            wm = min(node.subscriptions[ch].last_tick_seen for ch in channels)
+            # Re-read each round: a reconcile during the pump may re-home a
+            # channel off this node (its new owner runs its own wait).
+            subs = [
+                node.subscriptions[ch]
+                for ch in channels
+                if ch in node.subscriptions
+            ]
+            if not subs:
+                return
+            wm = min(s.last_tick_seen for s in subs)
             if wm >= target or guarantee.satisfied_by(wm):
                 return
             if isinstance(self.clock, ManualClock):
@@ -763,6 +833,9 @@ class ManuSystem:
     # ------------------------------------------------------------- threads
     def start_threads(self) -> None:
         self._stop.clear()
+        # The pump thread owns node stepping; the proxy's failover waits
+        # must sleep instead of stepping nodes themselves.
+        self.proxy.pump_fn = lambda: time.sleep(self.config.pump_sleep_s)
 
         def pump_loop():
             while not self._stop.is_set():
@@ -770,10 +843,15 @@ class ManuSystem:
                 time.sleep(self.config.pump_sleep_s)
 
         def watchdog_loop():
+            last_reconcile = 0.0
             while not self._stop.is_set():
-                for node_id, qn in self.query_nodes.items():
+                for node_id, qn in list(self.query_nodes.items()):
                     if qn.alive and node_id in self.query_coord.nodes:
                         self.query_coord.heartbeat(node_id)
+                now = time.time()
+                if now - last_reconcile >= self.config.reconcile_interval_s:
+                    last_reconcile = now
+                    self.query_coord.reconciler.reconcile()
                 time.sleep(0.05)
 
         for fn in (pump_loop, watchdog_loop):
@@ -786,15 +864,89 @@ class ManuSystem:
         for t in self._threads:
             t.join(timeout=2.0)
         self._threads.clear()
+        self.proxy.pump_fn = None
 
     # ------------------------------------------------------------ metrics
+    def cluster_state(self) -> ClusterState:
+        """Typed frozen snapshot of the serving tier: node health (as the
+        ``HealthMonitor`` observes it), per-node load, the committed
+        segment -> replica-group placement, and how many sealed segments
+        are currently below their collection's replication factor."""
+        coord = self.query_coord
+        statuses = coord.health.observe()
+        nodes = tuple(
+            NodeStatus(
+                node_id=n,
+                status=statuses.get(n, "dead"),
+                load=len(st.segments),
+                segments=tuple(sorted(st.segments)),
+                channels=tuple(sorted(st.channels)),
+                searches=(
+                    self.query_nodes[n].search_count
+                    if n in self.query_nodes
+                    else 0
+                ),
+            )
+            for n, st in sorted(coord.nodes.items())
+        )
+        placements = []
+        under = 0
+        for (coll, sid), reps in sorted(coord.replica_sets.items()):
+            rec = self.meta.get(f"assignment/{coll}/{sid}") or {}
+            ur = bool(
+                rec.get(
+                    "under_replicated",
+                    len(reps) < coord.replication_for(coll),
+                )
+            )
+            under += int(ur)
+            placements.append(
+                SegmentPlacement(
+                    collection=coll,
+                    segment_id=sid,
+                    replicas=tuple(reps),
+                    under_replicated=ur,
+                    visible_from_ts=int(rec.get("visible_from_ts", 0)),
+                )
+            )
+        # Sealed segments with no committed placement at all (total outage)
+        # count as under-replicated too: the reconciler owes them replicas.
+        placed = set(coord.replica_sets)
+        for key in self.meta.scan("collection/"):
+            coll = key.split("/", 1)[1]
+            for sid in self.data_coord.sealed_segments(coll):
+                if (coll, sid) not in placed:
+                    under += 1
+                    placements.append(
+                        SegmentPlacement(coll, sid, (), True, 0)
+                    )
+        return ClusterState(
+            nodes=nodes,
+            placement=tuple(placements),
+            under_replicated=under,
+            replication_factor=coord.replication_factor,
+        )
+
     def stats(self) -> dict:
+        """Legacy ad-hoc counters — a thin facade now; ``cluster_state()``
+        is the typed view of the serving tier."""
+        cs = self.cluster_state()
+        status_of = {ns.node_id: ns.status for ns in cs.nodes}
         return {
             "log": self.broker.stats(),
             "object_store_puts": getattr(self.store, "put_count", -1),
             "query_nodes": {
-                n: {"rows": q.memory_rows(), "alive": q.alive, "searches": q.search_count}
+                n: {
+                    "rows": q.memory_rows(),
+                    "alive": q.alive,
+                    "searches": q.search_count,
+                    "status": status_of.get(n, "dead"),
+                }
                 for n, q in self.query_nodes.items()
+            },
+            "cluster": {
+                "under_replicated": cs.under_replicated,
+                "replication_factor": cs.replication_factor,
             },
             "index_builds": sum(ix.builds_completed for ix in self.index_nodes),
             "compactions": sum(

@@ -1,16 +1,20 @@
 """Access layer: stateless proxies (paper §3.2, §3.6).
 
 Proxies verify requests against cached metadata (early rejection), route
-inserts/deletes to the owning loggers via the hash ring, fan search
-requests out to the query nodes holding the collection's segments, and
-aggregate node-wise top-k into the global top-k — removing duplicate
-result vectors (a segment may briefly live on two nodes during
-redistribution, and a row may exist both in a growing copy and the sealed
-segment).
+inserts/deletes to the owning loggers via the hash ring, and drive the
+read path with **replica-aware dispatch**: each live sealed segment is
+routed to the least-loaded live replica of its group (plus the DML
+channel owners for growing rows), and the per-node partials reduce into
+the global top-k with pk-dedup (a segment may briefly live on two nodes
+during redistribution, and a row may exist both in a growing copy and
+the sealed segment).
 
-Straggler mitigation: ``search`` takes a ``hedge_timeout_s``; if a query
-node does not answer in time and another live node can cover the same
-segments, the scan is re-dispatched (hedged request).
+Straggler mitigation: ``search`` takes a ``hedge_timeout_s``; a plan
+unit that does not answer in time is re-dispatched to a *different*
+replica of the same segment (blocking fallback on the original node only
+for units with no alternative copy).  If a node dies between planning
+and scan, the proxy reports it to the coordinator's control loop and
+re-dispatches the failed units to surviving replicas mid-request.
 """
 
 from __future__ import annotations
@@ -28,7 +32,7 @@ from .coordinator import QueryCoordinator
 from .log import shard_of_pk
 from .logger_node import Logger
 from .meta_store import MetaStore
-from .query_node import QueryNode
+from .query_node import QueryNode, StalePlanError
 from .request import (
     DeleteRequest,
     InsertRequest,
@@ -70,6 +74,11 @@ class Proxy:
         self.loggers = loggers
         self.query_coord = query_coord
         self.query_nodes = query_nodes
+        # How to advance message delivery while waiting on a placement
+        # change mid-request (failover / slow load).  None = step the live
+        # query nodes directly (cooperative default); the threaded runtime
+        # installs a short sleep so its pump thread does the stepping.
+        self.pump_fn = None
         # Metadata cache, refreshed via meta-store watch (paper: proxies
         # cache a copy of the metadata for verifying legitimacy).
         self._meta_cache: dict[str, dict] = {}
@@ -217,39 +226,85 @@ class Proxy:
                 )
         metric = info.metric
         n_fields = len(request.anns)
-        nodes = self.query_coord.nodes_for_collection(info.name)
-        target_nodes = [
-            self.query_nodes[n] for n in nodes if self.query_nodes[n].alive
-        ]
         t0 = time.perf_counter()
 
-        def dispatch(node: QueryNode):
+        def dispatch(node: QueryNode, sids: "frozenset[int] | None"):
             node_req = NodeSearchRequest.from_request(
                 info.schema, info.name, request, metric, guarantee,
                 filter_masks=self._filters(node, info, active_filter),
+                segments=tuple(sorted(sids)) if sids is not None else None,
             )
             return node.search_request(node_req)
 
+        # Replica-aware plan: (node_id, sealed plan units) per dispatch;
+        # channel owners join with an empty unit set for growing rows.
+        chosen, orphans = self._dispatch_plan(info.name)
+        pending: "list[tuple[str, frozenset[int]]]" = [
+            (n, frozenset(s)) for n, s in sorted(chosen.items())
+        ]
+        if orphans:
+            pending.extend(self._recover_orphans(info.name, orphans))
         # partials[f] collects every node's candidate list for sub-request f
         partials: list[list[tuple[np.ndarray, np.ndarray]]] = [
             [] for _ in range(n_fields)
         ]
-        for node in list(target_nodes):
-            if wait_fn is not None:
-                wait_fn(node, guarantee)
-            try:
-                if hedge_timeout_s is not None:
-                    res = _run_with_timeout(lambda: dispatch(node), hedge_timeout_s)
-                    if res is None:  # straggler: hedge to any other live node
-                        others = [n for n in target_nodes if n is not node and n.alive]
-                        res = dispatch(others[0]) if others else dispatch(node)
-                else:
-                    res = dispatch(node)
-            except RuntimeError:
-                continue  # dead node; coordinator failover will cover its data
-            for f in range(n_fields):
-                partials[f].append(res[f])
+        done_ids: set[str] = set()
+        covered: set[int] = set()  # sealed units already answered
+        while pending:
+            node_id, sids = pending.pop(0)
+            node = self.query_nodes.get(node_id)
+            res = None
+            failed = node is None or not node.alive
+            if not failed:
+                if wait_fn is not None:
+                    wait_fn(node, guarantee)
+                try:
+                    if hedge_timeout_s is not None:
+                        res = _run_with_timeout(
+                            lambda: dispatch(node, sids), hedge_timeout_s
+                        )
+                        if res is None:  # straggler: hedge to other replicas
+                            res, extra = self._hedge(info, node, sids, dispatch)
+                            pending.extend(extra)
+                    else:
+                        res = dispatch(node, sids)
+                except StalePlanError:
+                    # A compaction swap landed between planning and scan:
+                    # the scoped segments were retired and their rewrites
+                    # are live.  Re-plan the uncovered remainder from
+                    # fresh placement (pk-dedup at merge absorbs overlap
+                    # with units already scanned).
+                    pending.extend(
+                        self._replan_stale(info.name, covered, pending)
+                    )
+                    pending.extend(
+                        self._channel_dispatches(info.name, done_ids, pending)
+                    )
+                    continue
+                except RuntimeError:
+                    failed = True
+            if failed:
+                # Mid-request failover: the node died between planning and
+                # scan.  Report it so the control loop reassigns now, then
+                # re-dispatch the failed units to surviving replicas; the
+                # dead node's growing rows replay onto the takeover channel
+                # owner, which joins the plan below.
+                if node_id in self.query_coord.nodes:
+                    self.query_coord.on_node_down(node_id)
+                if sids:
+                    pending.extend(self._recover_orphans(info.name, sids))
+                pending.extend(
+                    self._channel_dispatches(info.name, done_ids, pending)
+                )
+                continue
+            done_ids.add(node_id)
+            if sids:
+                covered.update(sids)
+            if res is not None:
+                for f in range(n_fields):
+                    partials[f].append(res[f])
         waited_ms = (time.perf_counter() - t0) * 1e3
+        target_nodes = [qn for qn in self.query_nodes.values() if qn.alive]
 
         nq = request.nq
         kk = request.k
@@ -302,6 +357,173 @@ class Proxy:
                 target_nodes, info, out_p, request.output_fields, guarantee.query_ts
             )
         return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms, fields)
+
+    # ------------------------------------------------- replica-aware dispatch
+    _FAILOVER_ROUNDS = 200  # pump iterations before giving up on a unit
+
+    def _alive(self, node_id: str) -> bool:
+        qn = self.query_nodes.get(node_id)
+        return qn is not None and qn.alive
+
+    def _node_load(self, node_id: str) -> tuple[int, int]:
+        """(inflight requests, held replicas): the least-loaded key."""
+        qn = self.query_nodes.get(node_id)
+        st = self.query_coord.nodes.get(node_id)
+        return (
+            qn.inflight if qn is not None else 0,
+            len(st.segments) if st is not None else 0,
+        )
+
+    def _pick_replica(
+        self,
+        collection: str,
+        sid: int,
+        exclude: "set[str] | frozenset[str]" = frozenset(),
+        chosen: "dict[str, set[int]] | None" = None,
+    ) -> str | None:
+        """Least-loaded live replica of one segment that has the copy
+        actually loaded (a committed-but-unloaded replica would silently
+        scan nothing); ``chosen`` biases toward spreading this request's
+        units evenly across its candidate nodes."""
+        reps = self.query_coord.replica_sets.get((collection, sid), ())
+        cands = [
+            n for n in reps
+            if n not in exclude
+            and self._alive(n)
+            and (collection, sid) in self.query_nodes[n].sealed
+        ]
+        if not cands:
+            return None
+        chosen = chosen or {}
+        return min(
+            cands,
+            key=lambda n: (len(chosen.get(n, ())), *self._node_load(n), n),
+        )
+
+    def _dispatch_plan(
+        self, collection: str
+    ) -> "tuple[dict[str, set[int]], list[int]]":
+        """Build the replica-aware dispatch plan: DML channel owners (for
+        growing rows) plus, per live sealed segment, one replica chosen by
+        load.  Segments with no dispatchable replica right now are
+        returned as orphans for the failover path."""
+        coord = self.query_coord
+        chosen: dict[str, set[int]] = {}
+        for n, st in coord.nodes.items():
+            if self._alive(n) and any(
+                ch.startswith(f"dml/{collection}/") for ch in st.channels
+            ):
+                chosen.setdefault(n, set())
+        orphans: list[int] = []
+        for sid in sorted(coord.placement_for(collection)):
+            pick = self._pick_replica(collection, sid, chosen=chosen)
+            if pick is None:
+                orphans.append(sid)
+            else:
+                chosen.setdefault(pick, set()).add(sid)
+        return chosen, orphans
+
+    def _pump(self) -> None:
+        """Advance coordination-message delivery while waiting on a
+        placement change (failover reassignment, slow segment load)."""
+        if self.pump_fn is not None:
+            self.pump_fn()
+        else:
+            for qn in list(self.query_nodes.values()):
+                if qn.alive:
+                    qn.step()
+
+    def _recover_orphans(
+        self, collection: str, sids
+    ) -> "list[tuple[str, frozenset[int]]]":
+        """Re-plan segments that currently have no dispatchable replica:
+        report observed-dead holders to the control loop, then reconcile
+        and pump until a surviving replica has each copy loaded."""
+        coord = self.query_coord
+        missing = set(sids)
+        for sid in sorted(missing):
+            for n in list(coord.replica_sets.get((collection, sid), ())):
+                if not self._alive(n) and n in coord.nodes:
+                    coord.on_node_down(n)
+        out: dict[str, set[int]] = {}
+        for _ in range(self._FAILOVER_ROUNDS):
+            for sid in sorted(missing):
+                pick = self._pick_replica(collection, sid, chosen=out)
+                if pick is not None:
+                    out.setdefault(pick, set()).add(sid)
+            missing -= {s for units in out.values() for s in units}
+            if not missing:
+                break
+            coord.reconciler.reconcile()
+            self._pump()
+        if missing:
+            raise RuntimeError(
+                f"no live replica for segments {sorted(missing)} "
+                f"of '{collection}'"
+            )
+        return [(n, frozenset(s)) for n, s in sorted(out.items())]
+
+    def _replan_stale(
+        self, collection: str, covered: set[int], pending
+    ) -> "list[tuple[str, frozenset[int]]]":
+        """After a stale-plan signal: dispatch every currently-live sealed
+        segment that is neither answered nor still pending (the rewrites a
+        compaction swapped in mid-request)."""
+        pending_sids = {s for _n, ss in pending for s in (ss or ())}
+        out: dict[str, set[int]] = {}
+        orphans: list[int] = []
+        for sid in sorted(self.query_coord.placement_for(collection)):
+            if sid in covered or sid in pending_sids:
+                continue
+            pick = self._pick_replica(collection, sid, chosen=out)
+            if pick is None:
+                orphans.append(sid)
+            else:
+                out.setdefault(pick, set()).add(sid)
+        units = [(n, frozenset(s)) for n, s in sorted(out.items())]
+        if orphans:
+            units.extend(self._recover_orphans(collection, orphans))
+        return units
+
+    def _channel_dispatches(
+        self, collection: str, done_ids: set[str], pending
+    ) -> "list[tuple[str, frozenset[int]]]":
+        """Channel owners not yet part of the plan (a failover re-homed the
+        dead node's DML channels) join with an empty sealed-unit set so
+        their replayed growing rows are scanned."""
+        pending_ids = {n for n, _ in pending}
+        out = []
+        for n, st in self.query_coord.nodes.items():
+            if not self._alive(n) or n in done_ids or n in pending_ids:
+                continue
+            if any(ch.startswith(f"dml/{collection}/") for ch in st.channels):
+                out.append((n, frozenset()))
+        return out
+
+    def _hedge(self, info: CollectionInfo, node: QueryNode, sids, dispatch):
+        """Straggler mitigation: re-dispatch each timed-out sealed unit to
+        a *different* live replica of the same segment.  Units with no
+        alternative copy — and the straggler's growing rows, which exist
+        nowhere else — fall back to a blocking dispatch on the original
+        node (scoped to just those, so the hedged work is not repeated)."""
+        extra: dict[str, set[int]] = {}
+        uncovered: set[int] = set()
+        for sid in sids or ():
+            alt = self._pick_replica(
+                info.name, sid, exclude={node.node_id}, chosen=extra
+            )
+            if alt is None:
+                uncovered.add(sid)
+            else:
+                extra.setdefault(alt, set()).add(sid)
+        has_growing = any(
+            c == info.name and gs.segment.num_rows
+            for (c, _sid), gs in node.growing.items()
+        )
+        res = None
+        if uncovered or has_growing:
+            res = dispatch(node, frozenset(uncovered))
+        return res, [(n, frozenset(s)) for n, s in sorted(extra.items())]
 
     @staticmethod
     def _check_range_bounds(metric: Metric, request: SearchRequest) -> None:

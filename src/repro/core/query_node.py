@@ -37,6 +37,13 @@ from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombston
 TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
 
 
+class StalePlanError(Exception):
+    """The dispatch plan references segments this node can no longer serve
+    at the request timestamp — a compaction swap or placement change landed
+    between the proxy's planning and this scan.  The proxy catches this and
+    re-plans from fresh placement (never a node failure)."""
+
+
 def _seg_column(seg: Segment, column: str) -> np.ndarray | None:
     """A segment's stored column for one vector field (None if absent)."""
     if column == PRIMARY_VECTOR_COLUMN:
@@ -160,6 +167,7 @@ class QueryNode:
         self._pending_prunes: list[dict] = []
         self.alive = True
         self.search_count = 0
+        self.inflight = 0  # concurrent search_request count (dispatch load)
         self.inject_delay_s = 0.0  # straggler fault injection (tests/benches)
 
     # --------------------------------------------------------- subscriptions
@@ -500,6 +508,7 @@ class QueryNode:
         metric: Metric | None = None,
         doomed=_DOOMED_UNSET,
         partitions: "tuple[str, ...] | None" = None,
+        segments: "tuple[int, ...] | None" = None,
     ) -> SearchPlan:
         """Gather every candidate (segment, visibility, filter) unit for a
         request pinned at ``ts`` and group it by execution class.
@@ -512,12 +521,17 @@ class QueryNode:
         ``doomed`` lets multi-field requests share one materialized
         delta-delete set across sub-requests.  ``partitions`` prunes the
         plan to segments tagged with one of the named partitions BEFORE
-        any distance work happens (None = no pruning).
+        any distance work happens (None = no pruning).  ``segments``
+        scopes the *live* sealed scan to a replica-dispatch plan unit
+        (None = everything the node holds); retired MVCC versions are
+        exempt — they only exist on the nodes that served the pre-swap
+        epoch, so pinned queries must always reach them.
         """
         plan = SearchPlan()
         if doomed is QueryNode._DOOMED_UNSET:
             doomed = self._request_doomed_pks(collection, ts)
         prune = set(partitions) if partitions is not None else None
+        scope = set(segments) if segments is not None else None
         unit_cols = metric is Metric.COSINE
 
         def brute_column(seg: Segment) -> np.ndarray | None:
@@ -527,11 +541,25 @@ class QueryNode:
             return seg.unit_column(column) if unit_cols else raw
 
         # ---- sealed segments: indexed or brute ----
+        served: set[int] = set()
         for (coll, sid), handle in self.sealed.items():
             if coll != collection:
                 continue
+            if scope is not None and sid in scope:
+                # A scoped live handle serves its unit even when it does
+                # not cover ``ts`` (a rewrite pinned after this query: the
+                # exempt retired sources carry the rows).  A scoped retired
+                # handle only serves queries pinned before its swap.
+                if handle.retired_at_ts is None or handle.covers_ts(ts):
+                    served.add(sid)
             if not handle.covers_ts(ts):
                 continue  # wrong segment-map epoch for this MVCC timestamp
+            if (
+                scope is not None
+                and handle.retired_at_ts is None
+                and sid not in scope
+            ):
+                continue  # another replica owns this plan unit
             seg = handle.segment
             if prune is not None and seg.partition not in prune:
                 continue  # partition pruning: skip before any scan work
@@ -554,6 +582,12 @@ class QueryNode:
                 plan.brute_sealed.append(
                     ScanUnit(sid, seg.pks(), mask, vectors=vectors)
                 )
+        if scope is not None and scope - served:
+            raise StalePlanError(
+                f"{self.node_id}: scoped segments {sorted(scope - served)} "
+                f"of '{collection}' are not serveable at ts={ts} "
+                "(placement changed between plan and scan)"
+            )
 
         # ---- growing segments: temp slice indexes + brute tail ----
         for (coll, sid), gs in self.growing.items():
@@ -662,6 +696,15 @@ class QueryNode:
 
             _t.sleep(self.inject_delay_s)
         self.search_count += 1
+        self.inflight += 1
+        try:
+            return self._search_request(request)
+        finally:
+            self.inflight -= 1
+
+    def _search_request(
+        self, request: NodeSearchRequest
+    ) -> "list[tuple[np.ndarray, np.ndarray]]":
         from ..kernels import ops
 
         metric = request.metric
@@ -678,7 +721,7 @@ class QueryNode:
             plan = self.plan_search(
                 request.collection, ts, request.filter_masks,
                 column=a.field, metric=metric, doomed=doomed,
-                partitions=request.partitions,
+                partitions=request.partitions, segments=request.segments,
             )
             pool_s, pool_p = self._execute_plan(plan, queries, request.k, metric)
             if not pool_s:

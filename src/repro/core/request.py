@@ -313,6 +313,12 @@ class NodeSearchRequest:
     # None = no pruning; otherwise only segments tagged with one of these
     # partitions enter the plan.
     partitions: tuple[str, ...] | None = None
+    # Replica-aware dispatch scope: None = every segment the node holds
+    # (legacy full fan-out); a tuple = scan only these live sealed segments
+    # (() = growing/channel data only).  Retired MVCC versions are exempt
+    # from the scope — they are node-local epoch baggage that pinned
+    # queries must still reach regardless of where replicas moved.
+    segments: tuple[int, ...] | None = None
 
     @classmethod
     def from_request(
@@ -323,6 +329,7 @@ class NodeSearchRequest:
         metric: Metric,
         guarantee: GuaranteeTs,
         filter_masks: dict[int, np.ndarray] | None = None,
+        segments: tuple[int, ...] | None = None,
     ) -> "NodeSearchRequest":
         anns = [
             AnnsQuery(
@@ -338,4 +345,102 @@ class NodeSearchRequest:
             anns=anns,
             filter_masks=filter_masks,
             partitions=request.partition_names or None,
+            segments=segments,
         )
+
+
+# ---------------------------------------------------------------------------
+# Typed cluster-admin surface (read-only snapshots)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NodeStatus:
+    """One query node as the control loop sees it.
+
+    ``status`` is the HealthMonitor's observation: ``healthy`` /
+    ``suspect`` (missed more than half a heartbeat TTL) / ``dead`` (lease
+    expired) / ``draining`` (graceful scale-down in progress).  ``load``
+    is the replica count used by least-loaded placement decisions.
+    """
+
+    node_id: str
+    status: str
+    load: int
+    segments: tuple[tuple[str, int], ...]
+    channels: tuple[str, ...]
+    searches: int = 0
+
+
+@dataclass(frozen=True)
+class SegmentPlacement:
+    """One sealed segment's committed replica group.  ``replicas[0]`` is
+    the primary; ``visible_from_ts`` is the MVCC epoch pin that rides
+    along on every reassignment; ``under_replicated`` records graceful
+    degradation when the cluster is smaller than the replication factor."""
+
+    collection: str
+    segment_id: int
+    replicas: tuple[str, ...]
+    under_replicated: bool
+    visible_from_ts: int
+
+
+@dataclass(frozen=True)
+class ClusterState:
+    """Frozen point-in-time snapshot of the serving tier, returned by
+    ``ManuSystem.cluster_state()`` — node health, per-node load, the
+    segment -> replica-set placement map, and the under-replication count
+    the reconciler is working to drive to zero."""
+
+    nodes: tuple[NodeStatus, ...]
+    placement: tuple[SegmentPlacement, ...]
+    under_replicated: int
+    replication_factor: int
+
+    def node(self, node_id: str) -> NodeStatus:
+        for n in self.nodes:
+            if n.node_id == node_id:
+                return n
+        raise KeyError(f"unknown query node '{node_id}'")
+
+    def replicas_of(self, collection: str, segment_id: int) -> tuple[str, ...]:
+        for p in self.placement:
+            if p.collection == collection and p.segment_id == segment_id:
+                return p.replicas
+        return ()
+
+    @property
+    def live_node_ids(self) -> tuple[str, ...]:
+        return tuple(n.node_id for n in self.nodes if n.status != "dead")
+
+
+@dataclass(frozen=True)
+class IndexDescription:
+    """Declared index of one vector field."""
+
+    field: str
+    kind: str
+    params: dict
+    metric: Metric
+
+
+@dataclass(frozen=True)
+class DescribeCollection:
+    """Frozen schema + placement description of one collection, returned
+    by ``ManuCollection.describe()``."""
+
+    name: str
+    fields: tuple
+    partitions: tuple[str, ...]
+    indexes: tuple[IndexDescription, ...]
+    num_entities: int
+    num_shards: int
+    metric: Metric
+    replication_factor: int
+
+    def index_on(self, field: str) -> IndexDescription | None:
+        for ix in self.indexes:
+            if ix.field == field:
+                return ix
+        return None
