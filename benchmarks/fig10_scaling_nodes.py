@@ -32,7 +32,9 @@ NQ = 16 if SMOKE else 32
 SEAL = 1_000 if SMOKE else 1_500
 
 
-def qps_with_nodes(n_nodes: int, replication_factor: int = 1) -> tuple[float, float]:
+def qps_with_nodes(
+    n_nodes: int, replication_factor: int = 1
+) -> tuple[float, float, "object | None"]:
     rng = np.random.default_rng(0)
     system = ManuSystem(
         ManuConfig(
@@ -59,25 +61,37 @@ def qps_with_nodes(n_nodes: int, replication_factor: int = 1) -> tuple[float, fl
             node.search("c", q, 10, coll.info.metric, g)
         per_node.append((time.perf_counter() - t0) / 3)
     slowest = max(per_node)
-    return NQ / slowest, slowest
+    # Cluster-wide per-search latency distribution from the registry (the
+    # per-node scan histograms aggregate every warmup + timed search).
+    hist = None
+    for h in system.metrics().histograms:
+        if h.name.startswith("query_node_search_latency_us"):
+            hist = h if hist is None or h.p99 > hist.p99 else hist
+    return NQ / slowest, slowest, hist
 
 
 def main() -> list[tuple[str, float, str]]:
     rows = []
     base_qps = None
     for n_nodes in (1, 2, 4, 8):
-        qps, slowest = qps_with_nodes(n_nodes)
+        qps, slowest, hist = qps_with_nodes(n_nodes)
         base_qps = base_qps or qps
+        tail = (
+            f";p50={hist.p50:.0f}us;p99={hist.p99:.0f}us" if hist is not None else ""
+        )
         rows.append((
             f"fig10-nodes{n_nodes}", slowest / NQ * 1e6,
-            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x",
+            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x{tail}",
         ))
     # replicated serving: rf=2 at 1/2/4 nodes (failover capacity cost)
     for n_nodes in (1, 2, 4):
-        qps, slowest = qps_with_nodes(n_nodes, replication_factor=2)
+        qps, slowest, hist = qps_with_nodes(n_nodes, replication_factor=2)
+        tail = (
+            f";p50={hist.p50:.0f}us;p99={hist.p99:.0f}us" if hist is not None else ""
+        )
         rows.append((
             f"fig10-nodes{n_nodes}-rf2", slowest / NQ * 1e6,
-            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x;replication=2",
+            f"qps={qps:.0f};speedup={qps/base_qps:.2f}x;replication=2{tail}",
         ))
     return rows
 

@@ -102,6 +102,15 @@ def main() -> list[tuple[str, float, str]]:
             f"wrong={wrong};reassigned={int(reassigned)};healed={int(healed)}",
         )
     )
+    # Serving-latency distribution across the whole run (failover blip
+    # included), from the system's own metrics histograms.
+    h = system.metrics().histogram("proxy_search_latency_us")
+    if h is not None:
+        rows.append((
+            "fig9-latency-dist", h.p50,
+            f"p50={h.p50:.0f}us;p95={h.p95:.0f}us;p99={h.p99:.0f}us;"
+            f"count={h.count}",
+        ))
     assert wrong == 0, f"failover produced {wrong} wrong answers"
     assert reassigned, "cluster_state still lists the dead node"
     return rows

@@ -363,6 +363,49 @@ def ivf_rows(rng) -> list[tuple[str, float, str]]:
     return rows
 
 
+def telemetry_overhead_rows(rng) -> list[tuple[str, float, str]]:
+    """Registry-on vs registry-off cost of the QueryNode scan path's
+    instrumentation (one ``observe`` + one labelled ``inc`` per scan,
+    exactly what ``_execute_plan`` records).  The derived field carries
+    the relative overhead; the CI smoke gate holds it at <= 3%."""
+    from repro.core.telemetry import MetricsRegistry
+
+    if SMOKE:
+        n, dim, nlist, nprobe, nq, k = 20_000, 64, 64, 8, 16, 10
+    else:
+        n, dim, nlist, nprobe, nq, k = 100_000, 128, 256, 16, 32, 10
+    from .common import queries_from, sift_like
+
+    x = sift_like(n, dim, n_clusters=nlist)
+    q = queries_from(x, nq)
+    idx, _, _ = _make_ivf_flat(x, nlist, nprobe, rng)
+    reg = MetricsRegistry()
+
+    def bare():
+        return idx.search(q, k)
+
+    def instrumented():
+        import time as _t
+
+        t0 = _t.perf_counter()
+        out = idx.search(q, k)
+        reg.observe("query_node_scan_us", (_t.perf_counter() - t0) * 1e6,
+                    labels={"class": "indexed"})
+        reg.inc("query_node_rows_scanned_total", n,
+                labels={"class": "indexed"})
+        return out
+
+    t_off = timeit_us(bare, iters=3, best_of=3)
+    t_on = timeit_us(instrumented, iters=3, best_of=3)
+    overhead = (t_on - t_off) / max(t_off, 1e-9) * 100.0
+    shape = f"nq={nq},{n}x{dim},nlist={nlist},nprobe={nprobe}"
+    return [(
+        "kern-telemetry-overhead",
+        t_on,
+        f"{shape};bare_us={t_off:.1f};overhead={overhead:.2f}%",
+    )]
+
+
 def main() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     rows = []
@@ -400,6 +443,7 @@ def main() -> list[tuple[str, float, str]]:
     rows += ingest_rows(rng)
     rows += upsert_rows(rng)
     rows += ivf_rows(rng)
+    rows += telemetry_overhead_rows(rng)
     return rows
 
 

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import json
 import os
+import socket
+import subprocess
 import sys
 import time
 import traceback
@@ -39,11 +41,43 @@ MODULES = [
 ]
 
 
+def run_metadata() -> dict:
+    """Environment fingerprint stamped on every results file so a perf
+    diff across runs can tell code changes from environment drift."""
+    meta: dict = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "hostname": socket.gethostname(),
+        "python": sys.version.split()[0],
+    }
+    try:
+        meta["git_commit"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        meta["git_commit"] = None
+    try:
+        import numpy as _np
+
+        meta["numpy"] = _np.__version__
+    except Exception:
+        meta["numpy"] = None
+    try:
+        import jax as _jax
+
+        meta["jax"] = _jax.__version__
+    except Exception:
+        meta["jax"] = None
+    return meta
+
+
 def write_results(all_rows: "list[tuple[str, float, str]]", path: str) -> None:
     """Persist the benchmark trajectory: one entry per emitted row."""
     payload = {
         "schema": "repro-bench/v1",
         "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+        "meta": run_metadata(),
         "rows": [
             {"name": name, "value": round(us, 3), "units": "us_per_call",
              "derived": derived}

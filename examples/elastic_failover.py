@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ManuConfig, ManuSystem
+from repro.core import ManuConfig, ManuSystem, SearchRequest
 
 
 def main() -> None:
@@ -84,6 +84,37 @@ def main() -> None:
     assert same and reassigned
     print("placement after:  "
           f"{[(p.segment_id, p.replicas) for p in cs.placement]}")
+
+    print("\n== traced failover: the span tree of a crash mid-request ==")
+    while len(live_nodes()) < 2:  # the crash needs a surviving replica
+        system.add_query_node()
+    system.run_until_idle()  # survivors finish loading healed replicas
+    event_mark = system.clock.now_ms()
+    victim2_id = next(p.replicas[0] for p in system.cluster_state().placement
+                      if p.replicas)
+    victim2 = system.query_nodes[victim2_id]
+
+    def dying2(request):
+        victim2.alive = False
+        raise RuntimeError("injected crash mid-request")
+
+    victim2.search_request = dying2
+    print(f"crashing {victim2_id} mid-request, trace=True ...")
+    traced = coll.search(
+        SearchRequest.single(q, field="vector", k=10, staleness_ms=0.0,
+                             trace=True)
+    )
+    assert (np.sort(before.pks, 1) == np.sort(traced.pks, 1)).all()
+    print(traced.trace.format())
+
+    print("\n== control-plane event log of the failover ==")
+    for e in system.events(since_ts=event_mark):
+        print(f"  {e.ts_ms:>9.0f} {e.kind:<22} {e.source:<13} {e.detail}")
+
+    print("\n== serving latency from the metrics registry ==")
+    h = system.metrics().histogram("proxy_search_latency_us")
+    print(f"  searches={h.count} p50={h.p50:.0f}us p95={h.p95:.0f}us "
+          f"p99={h.p99:.0f}us")
 
 
 if __name__ == "__main__":

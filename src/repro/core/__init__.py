@@ -10,8 +10,10 @@ from .request import (
     ClusterState,
     DeleteRequest,
     DescribeCollection,
+    HistogramRow,
     IndexDescription,
     InsertRequest,
+    MetricsSnapshot,
     MutationRequest,
     MutationResult,
     NodeStatus,
@@ -21,6 +23,15 @@ from .request import (
     UpsertRequest,
 )
 from .segment import DEFAULT_PARTITION
+from .telemetry import (
+    Event,
+    EventLog,
+    Histogram,
+    MetricsRegistry,
+    RequestTrace,
+    Span,
+    TraceContext,
+)
 from .timestamp import TSO, Clock, ManualClock
 
 __all__ = [
@@ -46,10 +57,19 @@ __all__ = [
     "NodeStatus",
     "SegmentPlacement",
     "DescribeCollection",
+    "HistogramRow",
     "IndexDescription",
+    "MetricsSnapshot",
     "ManuCollection",
     "ManuConfig",
     "ManuSystem",
+    "Event",
+    "EventLog",
+    "Histogram",
+    "MetricsRegistry",
+    "RequestTrace",
+    "Span",
+    "TraceContext",
     "TSO",
     "Clock",
     "ManualClock",

@@ -37,6 +37,7 @@ from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .meta_store import MetaStore, SegmentMap
 from .object_store import ObjectStore
 from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombstones
+from .telemetry import EventLog, MetricsRegistry
 from .timestamp import TSO
 
 DEFAULT_DELETE_RATIO = 0.2
@@ -87,6 +88,7 @@ class CompactionCoordinator:
         delete_ratio: float = DEFAULT_DELETE_RATIO,
         small_fraction: float = DEFAULT_SMALL_FRACTION,
         retention_ms: float = 0.0,
+        events: EventLog | None = None,
     ):
         self.broker = broker
         self.meta = meta
@@ -96,6 +98,7 @@ class CompactionCoordinator:
         self.delete_ratio = delete_ratio
         self.small_fraction = small_fraction
         self.retention_ms = retention_ms
+        self.events = events
         self.sub = Subscription(broker, COORD_CHANNEL)
         self._dml_subs: dict[str, Subscription] = {}
         # collection -> pk -> delete ts (ts list for repeated deletes) —
@@ -192,6 +195,13 @@ class CompactionCoordinator:
             self.tombstones[coll] = pruned
         self.meta.delete(f"compaction_claim/{coll}/{p['task_id']}")
         self.compactions_completed += 1
+        if self.events is not None:
+            self.events.emit(
+                "compaction_done", "compaction_coord",
+                collection=coll, task_id=p["task_id"], sources=sources,
+                targets=[t["segment_id"] for t in targets],
+                rows_purged=p.get("rows_purged", 0),
+            )
         return True
 
     def lag(self) -> int:
@@ -335,6 +345,13 @@ class CompactionCoordinator:
             COORD_CHANNEL,
             LogEntry(ts=compact_ts, type=EntryType.COORD, payload=payload),
         )
+        if self.events is not None:
+            self.events.emit(
+                "compaction_task", "compaction_coord",
+                collection=collection, task_id=task_id, shard=shard,
+                partition=partition, sources=list(sources),
+                live_rows=live_rows,
+            )
         return payload
 
     # ------------------------------------------------------------ retention
@@ -374,12 +391,14 @@ class CompactionNode:
         store: ObjectStore,
         meta: MetaStore,
         tso: TSO,
+        metrics: MetricsRegistry | None = None,
     ):
         self.node_id = node_id
         self.broker = broker
         self.store = store
         self.meta = meta
         self.tso = tso
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.sub = Subscription(broker, COORD_CHANNEL)
         self.alive = True
         self.compactions_completed = 0
@@ -413,6 +432,9 @@ class CompactionNode:
             raise
 
     def _rewrite(self, task: dict) -> bool:
+        import time as _t
+
+        t0 = _t.perf_counter()
         coll = task["collection"]
         sources = list(task["sources"])
         # Sorted pks + aligned effective delete ts (coordinator-materialized):
@@ -491,6 +513,11 @@ class CompactionNode:
         )
         self.compactions_completed += 1
         self.rows_purged += rows_in - n_live
+        self.metrics.observe(
+            "compaction_rewrite_us", (_t.perf_counter() - t0) * 1e6
+        )
+        self.metrics.inc("compactions_total")
+        self.metrics.inc("compaction_rows_purged_total", rows_in - n_live)
         self.broker.publish(
             COORD_CHANNEL,
             LogEntry(
@@ -531,12 +558,20 @@ class GCReaper:
     """
 
     def __init__(
-        self, broker: LogBroker, store: ObjectStore, meta: MetaStore, tso: TSO
+        self,
+        broker: LogBroker,
+        store: ObjectStore,
+        meta: MetaStore,
+        tso: TSO,
+        metrics: MetricsRegistry | None = None,
+        events: EventLog | None = None,
     ):
         self.broker = broker
         self.store = store
         self.meta = meta
         self.tso = tso
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.events = events
         self.segments_reclaimed = 0
         self.bytes_reclaimed = 0
 
@@ -586,4 +621,17 @@ class GCReaper:
             report["segments"].append((coll, sid))
         self.segments_reclaimed += len(report["segments"])
         self.bytes_reclaimed += report["bytes"]
+        if report["segments"] or report["protected"]:
+            self.metrics.inc(
+                "gc_segments_reclaimed_total", len(report["segments"])
+            )
+            self.metrics.inc("gc_bytes_reclaimed_total", report["bytes"])
+            if self.events is not None:
+                self.events.emit(
+                    "gc_reap", "gc_reaper",
+                    horizon_ts=horizon_ts,
+                    segments=[sid for _c, sid in report["segments"]],
+                    objects=report["objects"], bytes=report["bytes"],
+                    protected=report["protected"],
+                )
         return report

@@ -27,6 +27,7 @@ from .log import (
 )
 from .meta_store import MetaStore, SegmentMap
 from .segment import DEFAULT_PARTITION
+from .telemetry import EventLog
 from .timestamp import TSO, Clock
 
 DEFAULT_SEAL_ROWS = 8_192
@@ -375,10 +376,17 @@ class IndexCoordinator:
     """Per-vector-field index specs: ``index_spec/{collection}/{field}``
     in the meta store, one build task per (segment, field)."""
 
-    def __init__(self, broker: LogBroker, meta: MetaStore, tso: TSO):
+    def __init__(
+        self,
+        broker: LogBroker,
+        meta: MetaStore,
+        tso: TSO,
+        events: EventLog | None = None,
+    ):
         self.broker = broker
         self.meta = meta
         self.tso = tso
+        self.events = events
         self.sub = Subscription(broker, COORD_CHANNEL)
         # (collection, segment_id, field) -> task / index_built payload
         self.pending_tasks: dict[tuple[str, int, str], dict] = {}
@@ -446,6 +454,13 @@ class IndexCoordinator:
                         COORD_CHANNEL,
                         LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
                     )
+                    if self.events is not None:
+                        self.events.emit(
+                            "index_task", "index_coord",
+                            collection=p["collection"],
+                            segment_id=p["segment_id"],
+                            field=field, index_kind=spec["kind"],
+                        )
                     progress = True
             elif p.get("msg") == "index_built":
                 field = p.get("field", "vector")
@@ -456,6 +471,14 @@ class IndexCoordinator:
                     f"index/{p['collection']}/{p['segment_id']}/{field}",
                     {"kind": p["index_kind"], "key": p["index_key"]},
                 )
+                if self.events is not None:
+                    self.events.emit(
+                        "index_built", "index_coord",
+                        collection=p["collection"],
+                        segment_id=p["segment_id"],
+                        field=field, index_kind=p["index_kind"],
+                        built_by=p.get("built_by"),
+                    )
                 progress = True
             elif p.get("msg") == "segment_compacted":
                 # The rewrite produced fresh segments: index them, and forget
@@ -546,12 +569,14 @@ class QueryCoordinator:
         data_coord: DataCoordinator,
         replication_factor: int = 1,
         heartbeat_ttl_ms: float | None = None,
+        events: EventLog | None = None,
     ):
         self.broker = broker
         self.meta = meta
         self.tso = tso
         self.data_coord = data_coord
         self.clock = data_coord.clock
+        self.events = events
         self.sub = Subscription(broker, COORD_CHANNEL)
         self.nodes: dict[str, QueryNodeState] = {}
         # (collection, segment_id) -> ordered replica group (node ids);
@@ -580,6 +605,8 @@ class QueryCoordinator:
         self.nodes[node_id] = QueryNodeState(
             node_id, lease, last_beat_ms=self.clock.now_ms()
         )
+        if self.events is not None:
+            self.events.emit("node_join", "query_coord", node=node_id)
         return lease
 
     def heartbeat(self, node_id: str) -> None:
@@ -603,6 +630,11 @@ class QueryCoordinator:
         st = self.nodes.get(node_id)
         if st:
             st.draining = True
+            if self.events is not None:
+                self.events.emit(
+                    "drain_start", "query_coord",
+                    node=node_id, replicas=len(st.segments),
+                )
 
     def live_nodes(self) -> list[str]:
         alive = set(self.meta.scan("querynode/"))
@@ -617,6 +649,8 @@ class QueryCoordinator:
         st = self.nodes.get(node_id)
         if st is not None:
             self.meta.revoke_lease(st.lease_id)
+        if self.events is not None:
+            self.events.emit("node_down_reported", "query_coord", node=node_id)
         self.reconciler.reconcile()
 
     # ------------------------------------------------------------ placement
@@ -690,6 +724,11 @@ class QueryCoordinator:
                     "under_replicated": len(new_nodes) < desired,
                 }
                 if not self.meta.cas(mkey, rev, record):
+                    if self.events is not None:
+                        self.events.emit(
+                            "placement_cas_retry", "query_coord",
+                            collection=collection, segment_id=segment_id,
+                        )
                     continue  # lost the race: recompute from the winner
                 self._apply_committed(key, new_nodes)
                 return new_nodes
@@ -860,6 +899,13 @@ class QueryCoordinator:
                 "compact_ts": p["compact_ts"],
             }
         )
+        if self.events is not None:
+            self.events.emit(
+                "segment_hot_swap", "query_coord",
+                collection=coll, sources=sources,
+                targets=[t["segment_id"] for t in p["segments"]],
+                compact_ts=p["compact_ts"],
+            )
         for sid in sources:
             skey = (coll, sid)
             owners = self.replica_sets.pop(skey, [])
@@ -943,6 +989,12 @@ class QueryCoordinator:
             dead = [n for n in self.nodes if n not in live]
             for node_id in dead:
                 st = self.nodes.pop(node_id)
+                if self.events is not None:
+                    self.events.emit(
+                        "node_dead", "query_coord",
+                        node=node_id, replicas=len(st.segments),
+                        channels=sorted(st.channels),
+                    )
                 for key in sorted(st.segments):
                     coll, sid = key
                     desired = self.replication_for(coll)
@@ -1037,6 +1089,7 @@ class HealthMonitor:
 
     def __init__(self, coord: QueryCoordinator):
         self.coord = coord
+        self._last: dict[str, str] = {}
 
     def observe(self) -> dict[str, str]:
         """Status per registered node: ``healthy`` / ``suspect`` (more than
@@ -1056,6 +1109,15 @@ class HealthMonitor:
                 out[node_id] = "suspect"
             else:
                 out[node_id] = "healthy"
+        if c.events is not None:
+            for node_id, status in out.items():
+                if self._last.get(node_id, "healthy") != status:
+                    c.events.emit(
+                        "node_status_change", "health_monitor",
+                        node=node_id, status=status,
+                        was=self._last.get(node_id, "healthy"),
+                    )
+        self._last = dict(out)
         return out
 
 
@@ -1091,6 +1153,15 @@ class StateReconciler:
             for key, info in c.meta.scan("collection/").items():
                 c.assign_channels(key.split("/", 1)[1], info["num_shards"])
             report["moved"] = c.rebalance()
+            if c.events is not None and (
+                report["dead"] or report["healed"] or report["drained"]
+                or report["moved"]
+            ):
+                c.events.emit(
+                    "reconcile", "reconciler",
+                    dead=list(report["dead"]), healed=report["healed"],
+                    drained=report["drained"], moved=report["moved"],
+                )
             return report
 
     def heal(self) -> int:
@@ -1146,4 +1217,10 @@ class StateReconciler:
                 new = c.update_placement(coll, sid, shed_one)
                 if node_id not in new:
                     shed += 1
+                    if c.events is not None:
+                        c.events.emit(
+                            "drain_step", "reconciler",
+                            node=node_id, collection=coll, segment_id=sid,
+                            moved_to=[n for n in new if n not in (node_id,)],
+                        )
         return shed

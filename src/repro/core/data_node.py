@@ -15,6 +15,7 @@ from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .binlog import write_segment_binlog
 from .object_store import ObjectStore
 from .segment import DEFAULT_PARTITION, Segment
+from .telemetry import MetricsRegistry
 from .timestamp import TSO
 
 
@@ -26,12 +27,14 @@ class DataNode:
         store: ObjectStore,
         tso: TSO,
         data_coord,
+        metrics: MetricsRegistry | None = None,
     ):
         self.node_id = node_id
         self.broker = broker
         self.store = store
         self.tso = tso
         self.data_coord = data_coord
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.subscriptions: dict[str, Subscription] = {}
         # (collection, segment_id) -> growing Segment
         self.growing: dict[tuple[str, int], Segment] = {}
@@ -93,14 +96,22 @@ class DataNode:
 
     def _flush_sealed(self) -> bool:
         """Seal + flush segments the data coordinator marked."""
+        import time as _t
+
         progress = False
         for key in list(self.growing):
             coll, sid = key
             if not self.data_coord.should_seal(coll, sid):
                 continue
             seg = self.growing.pop(key)
+            t0 = _t.perf_counter()
             seg.seal()
             keys = write_segment_binlog(self.store, seg)
+            self.metrics.observe(
+                "data_node_seal_flush_us", (_t.perf_counter() - t0) * 1e6
+            )
+            self.metrics.inc("data_node_segments_sealed_total")
+            self.metrics.inc("data_node_rows_flushed_total", seg.num_rows)
             ts = self.tso.next()
             self.broker.publish(
                 COORD_CHANNEL,

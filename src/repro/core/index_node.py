@@ -16,6 +16,7 @@ from .collection import Metric
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .meta_store import MetaStore
 from .object_store import ObjectStore
+from .telemetry import MetricsRegistry
 from .timestamp import TSO
 
 
@@ -27,12 +28,14 @@ class IndexNode:
         store: ObjectStore,
         meta: MetaStore,
         tso: TSO,
+        metrics: MetricsRegistry | None = None,
     ):
         self.node_id = node_id
         self.broker = broker
         self.store = store
         self.meta = meta
         self.tso = tso
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.sub = Subscription(broker, COORD_CHANNEL)
         self.alive = True
         self.builds_completed = 0
@@ -64,6 +67,9 @@ class IndexNode:
         if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
             return False
 
+        import time as _t
+
+        t0 = _t.perf_counter()
         vectors = read_binlog_column(self.store, coll, sid, column)
         spec = IndexSpec(
             kind=kind,
@@ -76,6 +82,11 @@ class IndexNode:
         key = index_key(coll, sid, field, kind)
         self.store.put(key, index.save())
         self.builds_completed += 1
+        self.metrics.observe(
+            "index_build_us", (_t.perf_counter() - t0) * 1e6,
+            labels={"kind": kind},
+        )
+        self.metrics.inc("index_builds_total", labels={"kind": kind})
 
         self.broker.publish(
             COORD_CHANNEL,

@@ -32,6 +32,7 @@ from .request import (
     MutationResult,
     UpsertRequest,
 )
+from .telemetry import MetricsRegistry
 from .timestamp import TSO, Clock
 
 
@@ -46,6 +47,7 @@ class Logger:
         data_coord,  # DataCoordinator (duck-typed to avoid import cycle)
         clock: Clock,
         tick_interval_ms: float = 50.0,
+        metrics: MetricsRegistry | None = None,
     ):
         self.logger_id = logger_id
         self.broker = broker
@@ -53,22 +55,55 @@ class Logger:
         self.data_coord = data_coord
         self.clock = clock
         self.tick_interval_ms = tick_interval_ms
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._last_tick_ms: dict[str, float] = {}
         self.alive = True
 
     # ----------------------------------------------------------- mutations
-    def mutate(self, info: CollectionInfo, request: MutationRequest) -> MutationResult:
-        """Validate, assign one LSN, split by shard, publish to the WAL."""
+    def mutate(
+        self,
+        info: CollectionInfo,
+        request: MutationRequest,
+        trace: tuple | None = None,
+    ) -> MutationResult:
+        """Validate, assign one LSN, split by shard, publish to the WAL.
+
+        ``trace`` is the optional ``(TraceContext, parent Span)`` pair from
+        a traced ``Proxy.mutate``: the WAL append gets a child span with
+        the touched shard count and rows written.
+        """
         if not self.alive:
             raise RuntimeError(f"logger {self.logger_id} is down")
+        import time as _t
+
+        t0 = _t.perf_counter()
         if isinstance(request, UpsertRequest):
-            return self._write_rows(info, request.rows, request.partition, upsert=True)
-        if isinstance(request, InsertRequest):
-            return self._write_rows(info, request.rows, request.partition, upsert=False)
-        if isinstance(request, DeleteRequest):
+            res = self._write_rows(info, request.rows, request.partition, upsert=True)
+        elif isinstance(request, InsertRequest):
+            res = self._write_rows(info, request.rows, request.partition, upsert=False)
+        elif isinstance(request, DeleteRequest):
             request.validate(info.schema)
-            return self._delete(info, request.pks)
-        raise TypeError(f"unknown mutation request {type(request).__name__}")
+            res = self._delete(info, request.pks)
+        else:
+            raise TypeError(f"unknown mutation request {type(request).__name__}")
+        elapsed_us = (_t.perf_counter() - t0) * 1e6
+        self.metrics.observe("wal_append_latency_us", elapsed_us)
+        self.metrics.inc("logger_rows_written_total", res.ack_rows)
+        self.metrics.inc(
+            "logger_mutations_total", labels={"op": res.op}
+        )
+        if trace is not None:
+            ctx, parent = trace
+            span = ctx.span(
+                "wal_append", parent=parent, node_id=self.logger_id,
+                detail=(
+                    f"op={res.op};shards={sorted(res.shard_lsns)};"
+                    f"lsn={res.watermark_ts}"
+                ),
+            )
+            span.duration_us = elapsed_us
+            span.rows_scanned = res.ack_rows
+        return res
 
     def _write_rows(
         self,

@@ -57,8 +57,10 @@ from .request import (
     ClusterState,
     DeleteRequest,
     DescribeCollection,
+    HistogramRow,
     IndexDescription,
     InsertRequest,
+    MetricsSnapshot,
     MutationRequest,
     MutationResult,
     NodeStatus,
@@ -69,6 +71,7 @@ from .request import (
     vector_column_of,
 )
 from .segment import DEFAULT_PARTITION
+from .telemetry import Event, EventLog, MetricsRegistry
 from .time_travel import RestoredCollection, TimeTravel
 from .timestamp import INFINITE_STALENESS, TSO, Clock, ManualClock
 
@@ -357,26 +360,37 @@ class ManuSystem:
         self.meta = MetaStore(self.clock)
         self.store = store or MemoryObjectStore()
 
+        # One metrics registry and one bounded control-plane event log per
+        # system; every component records into the shared registry, the
+        # control loops (coordinators, reconciler, GC) emit typed events.
+        self.telemetry = MetricsRegistry()
+        self.event_log = EventLog(self.clock)
+
         self.root_coord = RootCoordinator(self.broker, self.meta, self.tso)
         self.data_coord = DataCoordinator(self.broker, self.meta, self.tso, self.clock)
-        self.index_coord = IndexCoordinator(self.broker, self.meta, self.tso)
+        self.index_coord = IndexCoordinator(
+            self.broker, self.meta, self.tso, events=self.event_log
+        )
         self.query_coord = QueryCoordinator(
             self.broker, self.meta, self.tso, self.data_coord,
             replication_factor=self.config.replication_factor,
             heartbeat_ttl_ms=self.config.heartbeat_ttl_ms,
+            events=self.event_log,
         )
 
         self.loggers = [
             Logger(f"logger-{i}", self.broker, self.tso, self.data_coord, self.clock,
-                   self.config.tick_interval_ms)
+                   self.config.tick_interval_ms, metrics=self.telemetry)
             for i in range(self.config.num_loggers)
         ]
         self.data_nodes = [
-            DataNode(f"dn-{i}", self.broker, self.store, self.tso, self.data_coord)
+            DataNode(f"dn-{i}", self.broker, self.store, self.tso, self.data_coord,
+                     metrics=self.telemetry)
             for i in range(self.config.num_data_nodes)
         ]
         self.index_nodes = [
-            IndexNode(f"in-{i}", self.broker, self.store, self.meta, self.tso)
+            IndexNode(f"in-{i}", self.broker, self.store, self.meta, self.tso,
+                      metrics=self.telemetry)
             for i in range(self.config.num_index_nodes)
         ]
         self.compaction_coord = CompactionCoordinator(
@@ -384,18 +398,22 @@ class ManuSystem:
             delete_ratio=self.config.compaction_delete_ratio,
             small_fraction=self.config.compaction_small_fraction,
             retention_ms=self.config.gc_retention_ms,
+            events=self.event_log,
         )
         self.compaction_nodes = [
-            CompactionNode(f"cn-{i}", self.broker, self.store, self.meta, self.tso)
+            CompactionNode(f"cn-{i}", self.broker, self.store, self.meta, self.tso,
+                           metrics=self.telemetry)
             for i in range(self.config.num_compaction_nodes)
         ]
-        self.gc_reaper = GCReaper(self.broker, self.store, self.meta, self.tso)
+        self.gc_reaper = GCReaper(self.broker, self.store, self.meta, self.tso,
+                                  metrics=self.telemetry, events=self.event_log)
         self.query_nodes: dict[str, QueryNode] = {}
         for i in range(self.config.num_query_nodes):
             self._new_query_node()
 
         self.proxy = Proxy(
-            "proxy-0", self.meta, self.tso, self.loggers, self.query_coord, self.query_nodes
+            "proxy-0", self.meta, self.tso, self.loggers, self.query_coord,
+            self.query_nodes, metrics=self.telemetry,
         )
         self.batcher = BatchingProxy(self.proxy)
         self.time_travel = TimeTravel(self.broker, self.store)
@@ -416,7 +434,8 @@ class ManuSystem:
             i += 1
         node_id = f"qn-{i}"
         qn = QueryNode(node_id, self.broker, self.store, self.tso,
-                       slice_rows=self.config.slice_rows)
+                       slice_rows=self.config.slice_rows,
+                       metrics=self.telemetry)
         self.query_nodes[node_id] = qn
         self.query_coord.register_node(node_id)
         return qn
@@ -654,11 +673,18 @@ class ManuSystem:
         rounds = 0
         while self.pump() and rounds < max_rounds:
             rounds += 1
+        if rounds:
+            self.event_log.emit(
+                "run_until_idle", "system",
+                rounds=rounds, truncated=rounds >= max_rounds,
+            )
         return rounds
 
     def wait_idle(self, timeout_s: float = 30.0) -> None:
         deadline = time.time() + timeout_s
+        polls = 0
         while time.time() < deadline:
+            polls += 1
             stats = self.broker.stats()
             lag = 0
             for qn in self.query_nodes.values():
@@ -672,8 +698,14 @@ class ManuSystem:
                 and not self.index_coord.pending_tasks
                 and not self.compaction_coord.pending
             ):
+                self.event_log.emit(
+                    "wait_idle", "system", polls=polls, drained=True,
+                )
                 return
             time.sleep(0.005)
+        self.event_log.emit(
+            "wait_idle", "system", polls=polls, drained=False,
+        )
 
     # --------------------------------------------------- compaction & GC
     def compact(self, name: str) -> dict:
@@ -867,6 +899,33 @@ class ManuSystem:
         self.proxy.pump_fn = None
 
     # ------------------------------------------------------------ metrics
+    def metrics(self) -> MetricsSnapshot:
+        """Typed, JSON-serializable snapshot of the shared metrics registry:
+        every counter and gauge series, plus a :class:`HistogramRow` per
+        latency histogram with p50/p95/p99 estimated from the log buckets."""
+        counters, gauges, hists = self.telemetry.snapshot_rows()
+        return MetricsSnapshot(
+            ts_ms=self.clock.now_ms(),
+            counters=counters,
+            gauges=gauges,
+            histograms=tuple(
+                HistogramRow(name=k, count=total, mean=mean,
+                             p50=p50, p95=p95, p99=p99)
+                for (k, total, mean, p50, p95, p99) in hists
+            ),
+        )
+
+    def events(self, since_ts: float | None = None,
+               kind: str | None = None) -> list[Event]:
+        """Control-plane event log: typed events from the coordinators,
+        reconciler, compaction, and GC.  ``since_ts`` filters on the
+        emission timestamp (ms, inclusive); ``kind`` on the event kind."""
+        return self.event_log.query(since_ts=since_ts, kind=kind)
+
+    def export_metrics(self) -> str:
+        """Prometheus text-format exposition of the metrics registry."""
+        return self.telemetry.export()
+
     def cluster_state(self) -> ClusterState:
         """Typed frozen snapshot of the serving tier: node health (as the
         ``HealthMonitor`` observes it), per-node load, the committed
@@ -883,6 +942,16 @@ class ManuSystem:
                 channels=tuple(sorted(st.channels)),
                 searches=(
                     self.query_nodes[n].search_count
+                    if n in self.query_nodes
+                    else 0
+                ),
+                searches_primary=(
+                    self.query_nodes[n].searches_primary
+                    if n in self.query_nodes
+                    else 0
+                ),
+                searches_hedged=(
+                    self.query_nodes[n].searches_hedged
                     if n in self.query_nodes
                     else 0
                 ),
@@ -954,4 +1023,6 @@ class ManuSystem:
             ),
             "rows_purged": sum(cn.rows_purged for cn in self.compaction_nodes),
             "gc_bytes_reclaimed": self.gc_reaper.bytes_reclaimed,
+            "metrics": self.metrics().to_dict(),
+            "events": len(self.event_log),
         }

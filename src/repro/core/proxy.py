@@ -44,6 +44,7 @@ from .request import (
     vector_column_of,
 )
 from .segment import DEFAULT_PARTITION
+from .telemetry import MetricsRegistry, TraceContext
 from .timestamp import TSO, INFINITE_STALENESS
 
 
@@ -56,6 +57,8 @@ class SearchResult:
     # Output-field hydration: field name -> [nq, k] (or [nq, k, dim] for
     # vector fields) aligned with ``pks``; empty slots carry NaN/0 fills.
     fields: dict[str, np.ndarray] | None = None
+    # Span tree (telemetry.RequestTrace) when SearchRequest(trace=True).
+    trace: object | None = None
 
 
 class Proxy:
@@ -67,6 +70,7 @@ class Proxy:
         loggers: list[Logger],
         query_coord: QueryCoordinator,
         query_nodes: dict[str, QueryNode],
+        metrics: MetricsRegistry | None = None,
     ):
         self.proxy_id = proxy_id
         self.meta = meta
@@ -74,6 +78,7 @@ class Proxy:
         self.loggers = loggers
         self.query_coord = query_coord
         self.query_nodes = query_nodes
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         # How to advance message delivery while waiting on a placement
         # change mid-request (failover / slow load).  None = step the live
         # query nodes directly (cooperative default); the threaded runtime
@@ -138,6 +143,10 @@ class Proxy:
         the hash ring (the logger owning the batch's first shard handles
         the request; batches span shards and each shard gets its own WAL
         record)."""
+        trace_ctx = (
+            TraceContext("mutation") if getattr(request, "trace", False) else None
+        )
+        t0 = time.perf_counter()
         self._verify(info.name)
         request.validate(info.schema)
         shard0 = 0
@@ -150,7 +159,22 @@ class Proxy:
                     shard0 = shard_of_pk(first.tolist()[0], info.num_shards)
         elif isinstance(request, DeleteRequest) and len(request.pks):
             shard0 = shard_of_pk(request.pks.tolist()[0], info.num_shards)
-        return self._logger_for(shard0).mutate(info, request)
+        logger = self._logger_for(shard0)
+        if trace_ctx is not None:
+            span = trace_ctx.span(
+                "logger_dispatch", node_id=logger.logger_id,
+                detail=f"op={request.op};shard0={shard0}",
+            )
+            with trace_ctx.timed(span):
+                res = logger.mutate(info, request, trace=(trace_ctx, span))
+        else:
+            res = logger.mutate(info, request)
+        elapsed_us = (time.perf_counter() - t0) * 1e6
+        self.metrics.inc("proxy_mutations_total", labels={"op": request.op})
+        self.metrics.observe("proxy_mutation_latency_us", elapsed_us)
+        if trace_ctx is not None:
+            res.trace = trace_ctx.finish(elapsed_us)
+        return res
 
     # ------------------------------------------------------ legacy facades
     def insert(self, info: CollectionInfo, rows: dict[str, np.ndarray]) -> tuple[int, int]:
@@ -226,14 +250,31 @@ class Proxy:
                 )
         metric = info.metric
         n_fields = len(request.anns)
+        trace_ctx = TraceContext("search") if request.trace else None
         t0 = time.perf_counter()
 
-        def dispatch(node: QueryNode, sids: "frozenset[int] | None"):
+        def dispatch(
+            node: QueryNode, sids: "frozenset[int] | None", hedged: bool = False
+        ):
+            node_trace = None
+            if trace_ctx is not None:
+                span = trace_ctx.span(
+                    "hedge_dispatch" if hedged else "dispatch",
+                    node_id=node.node_id,
+                    segment_ids=sorted(sids) if sids is not None else (),
+                    detail="" if sids is not None else "full-fanout",
+                )
+                node_trace = (trace_ctx, span)
             node_req = NodeSearchRequest.from_request(
                 info.schema, info.name, request, metric, guarantee,
                 filter_masks=self._filters(node, info, active_filter),
                 segments=tuple(sorted(sids)) if sids is not None else None,
+                trace=node_trace,
+                hedged=hedged,
             )
+            if node_trace is not None:
+                with trace_ctx.timed(node_trace[1]):
+                    return node.search_request(node_req)
             return node.search_request(node_req)
 
         # Replica-aware plan: (node_id, sealed plan units) per dispatch;
@@ -250,8 +291,10 @@ class Proxy:
         ]
         done_ids: set[str] = set()
         covered: set[int] = set()  # sealed units already answered
+        hedged_units: set[tuple[str, frozenset]] = set()
         while pending:
             node_id, sids = pending.pop(0)
+            is_hedge = (node_id, sids) in hedged_units
             node = self.query_nodes.get(node_id)
             res = None
             failed = node is None or not node.alive
@@ -261,19 +304,34 @@ class Proxy:
                 try:
                     if hedge_timeout_s is not None:
                         res = _run_with_timeout(
-                            lambda: dispatch(node, sids), hedge_timeout_s
+                            lambda: dispatch(node, sids, is_hedge),
+                            hedge_timeout_s,
                         )
                         if res is None:  # straggler: hedge to other replicas
+                            self.metrics.inc("proxy_hedges_total")
+                            if trace_ctx is not None:
+                                trace_ctx.span(
+                                    "hedge", node_id=node_id,
+                                    segment_ids=sorted(sids or ()),
+                                    detail="timeout",
+                                )
                             res, extra = self._hedge(info, node, sids, dispatch)
+                            hedged_units.update(extra)
                             pending.extend(extra)
                     else:
-                        res = dispatch(node, sids)
+                        res = dispatch(node, sids, is_hedge)
                 except StalePlanError:
                     # A compaction swap landed between planning and scan:
                     # the scoped segments were retired and their rewrites
                     # are live.  Re-plan the uncovered remainder from
                     # fresh placement (pk-dedup at merge absorbs overlap
                     # with units already scanned).
+                    self.metrics.inc("proxy_stale_replans_total")
+                    if trace_ctx is not None:
+                        trace_ctx.span(
+                            "stale_replan", node_id=node_id,
+                            segment_ids=sorted(sids or ()),
+                        )
                     pending.extend(
                         self._replan_stale(info.name, covered, pending)
                     )
@@ -289,6 +347,13 @@ class Proxy:
                 # re-dispatch the failed units to surviving replicas; the
                 # dead node's growing rows replay onto the takeover channel
                 # owner, which joins the plan below.
+                self.metrics.inc("proxy_failovers_total")
+                if trace_ctx is not None:
+                    trace_ctx.span(
+                        "failover_replan", node_id=node_id,
+                        segment_ids=sorted(sids or ()),
+                        detail="node-dead-mid-request",
+                    )
                 if node_id in self.query_coord.nodes:
                     self.query_coord.on_node_down(node_id)
                 if sids:
@@ -310,6 +375,10 @@ class Proxy:
         kk = request.k
         metric_str = "l2" if metric is Metric.L2 else "ip"
         fill = np.inf if metric is Metric.L2 else -np.inf
+        merge_span = None
+        if trace_ctx is not None:
+            merge_span = trace_ctx.span("merge_topk", node_id=self.proxy_id)
+            merge_t0 = trace_ctx.perf_counter()
         merged: list[tuple[np.ndarray, np.ndarray]] = []
         for f in range(n_fields):
             if not partials[f]:
@@ -351,12 +420,30 @@ class Proxy:
             )
         else:
             out_s, out_p = merged[0]
+        if merge_span is not None:
+            merge_span.duration_us = (trace_ctx.perf_counter() - merge_t0) * 1e6
         fields = None
         if request.output_fields:
-            fields = self._hydrate(
-                target_nodes, info, out_p, request.output_fields, guarantee.query_ts
-            )
-        return SearchResult(out_s, out_p, guarantee.query_ts, waited_ms, fields)
+            hydrate_span = None
+            if trace_ctx is not None:
+                hydrate_span = trace_ctx.span("fetch_fields", node_id=self.proxy_id)
+            if hydrate_span is not None:
+                with trace_ctx.timed(hydrate_span):
+                    fields = self._hydrate(
+                        target_nodes, info, out_p, request.output_fields,
+                        guarantee.query_ts, trace=(trace_ctx, hydrate_span),
+                    )
+            else:
+                fields = self._hydrate(
+                    target_nodes, info, out_p, request.output_fields,
+                    guarantee.query_ts,
+                )
+        self.metrics.inc("proxy_searches_total")
+        self.metrics.observe("proxy_search_latency_us", waited_ms * 1e3)
+        trace = trace_ctx.finish(waited_ms * 1e3) if trace_ctx is not None else None
+        return SearchResult(
+            out_s, out_p, guarantee.query_ts, waited_ms, fields, trace
+        )
 
     # ------------------------------------------------- replica-aware dispatch
     _FAILOVER_ROUNDS = 200  # pump iterations before giving up on a unit
@@ -366,11 +453,14 @@ class Proxy:
         return qn is not None and qn.alive
 
     def _node_load(self, node_id: str) -> tuple[int, int]:
-        """(inflight requests, held replicas): the least-loaded key."""
+        """(primary inflight requests, held replicas): the least-loaded
+        key.  Hedged duplicates are deliberately excluded — counting them
+        would double-book a straggler's work onto the replica that bailed
+        it out and skew subsequent picks away from it."""
         qn = self.query_nodes.get(node_id)
         st = self.query_coord.nodes.get(node_id)
         return (
-            qn.inflight if qn is not None else 0,
+            qn.inflight_primary if qn is not None else 0,
             len(st.segments) if st is not None else 0,
         )
 
@@ -555,6 +645,7 @@ class Proxy:
         pks: np.ndarray,
         output_fields: "tuple[str, ...]",
         ts: int,
+        trace: tuple | None = None,
     ) -> dict[str, np.ndarray]:
         """Gather ``output_fields`` columns for the result pks from the
         nodes' segment copies (binlog columns / growing rows)."""
@@ -571,7 +662,16 @@ class Proxy:
             if not node.alive:
                 continue
             try:
-                got = node.fetch_fields(info.name, pks, columns, ts)
+                if trace is not None:
+                    ctx, parent = trace
+                    nspan = ctx.span(
+                        "fetch_fields_node", parent=parent, node_id=node.node_id,
+                        detail=",".join(columns),
+                    )
+                    with ctx.timed(nspan):
+                        got = node.fetch_fields(info.name, pks, columns, ts)
+                else:
+                    got = node.fetch_fields(info.name, pks, columns, ts)
             except RuntimeError:
                 continue
             for c, (fpks, vals) in got.items():

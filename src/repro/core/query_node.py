@@ -33,6 +33,7 @@ from .log import EntryType, LogBroker, LogEntry, Subscription
 from .object_store import ObjectStore
 from .request import PRIMARY_VECTOR_COLUMN, AnnsQuery, NodeSearchRequest
 from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombstones
+from .telemetry import MetricsRegistry
 
 TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
 
@@ -142,12 +143,14 @@ class QueryNode:
         store: ObjectStore,
         tso=None,
         slice_rows: int = TEMP_INDEX_SLICE_ROWS,
+        metrics: MetricsRegistry | None = None,
     ):
         self.node_id = node_id
         self.broker = broker
         self.store = store
         self.tso = tso
         self.slice_rows = slice_rows
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.subscriptions: dict[str, Subscription] = {}
         self.coord_sub = Subscription(broker, "coord") if broker.has_channel("coord") else None
         self.sealed: dict[tuple[str, int], SealedHandle] = {}
@@ -167,7 +170,13 @@ class QueryNode:
         self._pending_prunes: list[dict] = []
         self.alive = True
         self.search_count = 0
-        self.inflight = 0  # concurrent search_request count (dispatch load)
+        # Hedge-aware accounting: hedged duplicates are booked separately so
+        # least-loaded replica picks (and the admin API) see primary load
+        # only — a straggler's bail-out copy is not organic demand.
+        self.searches_primary = 0
+        self.searches_hedged = 0
+        self.inflight = 0  # concurrent search_request count (any kind)
+        self.inflight_primary = 0  # dispatch-load key used by the picker
         self.inject_delay_s = 0.0  # straggler fault injection (tests/benches)
 
     # --------------------------------------------------------- subscriptions
@@ -629,22 +638,55 @@ class QueryNode:
         return plan
 
     def _execute_plan(
-        self, plan: SearchPlan, queries: np.ndarray, k: int, metric: Metric
+        self,
+        plan: SearchPlan,
+        queries: np.ndarray,
+        k: int,
+        metric: Metric,
+        trace: tuple | None = None,
     ) -> tuple["list[np.ndarray]", "list[np.ndarray]"]:
-        """Run a plan's units and return per-unit top-k candidate pools."""
+        """Run a plan's units and return per-unit top-k candidate pools.
+
+        ``trace`` is the optional ``(TraceContext, parent Span)`` pair: one
+        child span per execution-class dispatch, carrying the segment ids
+        and live-row count it actually scanned.
+        """
+        import time as _t
+
         from ..kernels import ops
 
         metric_str = "l2" if metric is Metric.L2 else "ip"
         pool_s: list[np.ndarray] = []
         pool_p: list[np.ndarray] = []
+
+        def record_class(cls: str, units, t0: float) -> None:
+            elapsed_us = (_t.perf_counter() - t0) * 1e6
+            rows = int(sum(int(u.mask.sum()) for u in units))
+            self.metrics.observe(
+                "query_node_scan_us", elapsed_us, labels={"class": cls}
+            )
+            self.metrics.inc(
+                "query_node_rows_scanned_total", rows, labels={"class": cls}
+            )
+            if trace is not None:
+                ctx, parent = trace
+                span = ctx.span(
+                    f"scan_{cls}", parent=parent, node_id=self.node_id,
+                    segment_ids=sorted({u.segment_id for u in units}),
+                )
+                span.duration_us = elapsed_us
+                span.rows_scanned = rows
+
         # Index-backed units group by spec: all co-located segments sharing
         # an index configuration execute as ONE batched candidate-pool
         # dispatch (IVF runs its vectorized probe-gather-scan across the
         # group; other kinds fall back to per-index search inside).
+        indexed_ids = {id(u) for u in plan.indexed}
         index_groups: dict = {}
         for unit in plan.indexed + plan.growing_slice:
             index_groups.setdefault(unit.index.batch_spec(), []).append(unit)
         for units in index_groups.values():
+            t0 = _t.perf_counter()
             s, i, splits = type(units[0].index).search_batched(
                 [u.index for u in units],
                 queries,
@@ -655,15 +697,21 @@ class QueryNode:
                 blk = slice(splits[j], splits[j + 1])
                 pool_s.append(s[:, blk])
                 pool_p.append(_map_pks(i[:, blk], unit.pks))
+            cls = "indexed" if id(units[0]) in indexed_ids else "growing_slice"
+            record_class(cls, units, t0)
         # Brute classes run as one fused scan per class: a single shared
         # distance contraction, per-segment top-k extracted from it.
         # Cosine scans normalize both sides: the planner handed us the
         # segments' cached unit columns, only the queries normalize here
         # (indexes normalize at build and take raw queries).
         q_brute = normalize_if_cosine(metric, np.asarray(queries, np.float32))
-        for units in (plan.brute_sealed, plan.brute_tail):
+        for cls, units in (
+            ("brute_sealed", plan.brute_sealed),
+            ("brute_tail", plan.brute_tail),
+        ):
             if not units:
                 continue
+            t0 = _t.perf_counter()
             s, i = ops.topk_scan_segmented(
                 q_brute,
                 [u.vectors for u in units],
@@ -675,6 +723,7 @@ class QueryNode:
                 blk = slice(j * k, (j + 1) * k)
                 pool_s.append(s[:, blk])
                 pool_p.append(_map_pks(i[:, blk], unit.pks))
+            record_class(cls, units, t0)
         return pool_s, pool_p
 
     def search_request(
@@ -691,16 +740,37 @@ class QueryNode:
         """
         if not self.alive:
             raise RuntimeError(f"query node {self.node_id} is down")
-        if self.inject_delay_s > 0:
-            import time as _t
+        import time as _t
 
+        if self.inject_delay_s > 0:
             _t.sleep(self.inject_delay_s)
         self.search_count += 1
+        if request.hedged:
+            self.searches_hedged += 1
+        else:
+            self.searches_primary += 1
+            self.inflight_primary += 1
         self.inflight += 1
+        t0 = _t.perf_counter()
         try:
             return self._search_request(request)
         finally:
             self.inflight -= 1
+            if not request.hedged:
+                self.inflight_primary -= 1
+            self.metrics.observe(
+                "query_node_search_latency_us",
+                (_t.perf_counter() - t0) * 1e6,
+                labels={"node": self.node_id},
+            )
+            self.metrics.set_gauge(
+                "node_searches_primary", self.searches_primary,
+                labels={"node": self.node_id},
+            )
+            self.metrics.set_gauge(
+                "node_searches_hedged", self.searches_hedged,
+                labels={"node": self.node_id},
+            )
 
     def _search_request(
         self, request: NodeSearchRequest
@@ -714,28 +784,61 @@ class QueryNode:
         # Materialize the delta-delete set ONCE for the whole request; every
         # sub-request's plan probes the same sorted array.
         doomed = self._request_doomed_pks(request.collection, ts)
+        trace = request.trace  # (TraceContext, parent Span) | None
         results: list[tuple[np.ndarray, np.ndarray]] = []
         for a in request.anns:
             queries = a.queries
             nq = len(queries)
-            plan = self.plan_search(
-                request.collection, ts, request.filter_masks,
-                column=a.field, metric=metric, doomed=doomed,
-                partitions=request.partitions, segments=request.segments,
+            if trace is not None:
+                ctx, parent = trace
+                pspan = ctx.span(
+                    "plan_search", parent=parent, node_id=self.node_id,
+                    detail=f"column={a.field}",
+                )
+                with ctx.timed(pspan):
+                    plan = self.plan_search(
+                        request.collection, ts, request.filter_masks,
+                        column=a.field, metric=metric, doomed=doomed,
+                        partitions=request.partitions,
+                        segments=request.segments,
+                    )
+                pspan.segment_ids = tuple(
+                    sorted({u.segment_id for u in plan.units()})
+                )
+            else:
+                plan = self.plan_search(
+                    request.collection, ts, request.filter_masks,
+                    column=a.field, metric=metric, doomed=doomed,
+                    partitions=request.partitions, segments=request.segments,
+                )
+            pool_s, pool_p = self._execute_plan(
+                plan, queries, request.k, metric, trace=trace
             )
-            pool_s, pool_p = self._execute_plan(plan, queries, request.k, metric)
             if not pool_s:
                 out = (
                     np.full((nq, request.k), fill, np.float32),
                     np.full((nq, request.k), -1, np.int64),
                 )
             else:
-                out = ops.merge_topk(
-                    np.concatenate(pool_s, axis=1),
-                    np.concatenate(pool_p, axis=1),
-                    request.k,
-                    metric=metric_str,
-                )
+                if trace is not None:
+                    ctx, parent = trace
+                    mspan = ctx.span(
+                        "node_merge_topk", parent=parent, node_id=self.node_id
+                    )
+                    with ctx.timed(mspan):
+                        out = ops.merge_topk(
+                            np.concatenate(pool_s, axis=1),
+                            np.concatenate(pool_p, axis=1),
+                            request.k,
+                            metric=metric_str,
+                        )
+                else:
+                    out = ops.merge_topk(
+                        np.concatenate(pool_s, axis=1),
+                        np.concatenate(pool_p, axis=1),
+                        request.k,
+                        metric=metric_str,
+                    )
             results.append(out)
         return results
 

@@ -72,6 +72,9 @@ class MutationResult:
     watermark_ts: int
     row_count: int
     ack_rows: int
+    # Span tree for this mutation when requested via ``trace=True`` on
+    # the mutate call (see core.telemetry.RequestTrace); None otherwise.
+    trace: object | None = None
 
     def session_request(
         self, queries, field: str | None = None, **kw
@@ -101,6 +104,7 @@ class InsertRequest(MutationRequest):
 
     rows: dict[str, np.ndarray]
     partition: str = DEFAULT_PARTITION
+    trace: bool = False  # attach a RequestTrace to the MutationResult
     op = "insert"
 
     def validate(self, schema: Schema) -> None:
@@ -114,6 +118,7 @@ class DeleteRequest(MutationRequest):
     """Delete by primary key (global: pks are partition-independent)."""
 
     pks: np.ndarray
+    trace: bool = False  # attach a RequestTrace to the MutationResult
     op = "delete"
 
     def __post_init__(self):
@@ -137,6 +142,7 @@ class UpsertRequest(MutationRequest):
 
     rows: dict[str, np.ndarray]
     partition: str = DEFAULT_PARTITION
+    trace: bool = False  # attach a RequestTrace to the MutationResult
     op = "upsert"
 
     def validate(self, schema: Schema) -> None:
@@ -224,6 +230,10 @@ class SearchRequest:
     partition_names: tuple[str, ...] = ()
     time_travel_ts: int | None = None
     ranker: Ranker = dc_field(default_factory=Ranker)
+    # Per-request tracing: when True the proxy allocates a TraceContext
+    # and attaches the finished span tree as ``SearchResult.trace``.
+    # Off by default — the disabled cost is one branch per call site.
+    trace: bool = False
 
     def __post_init__(self):
         if isinstance(self.anns, AnnsQuery):
@@ -319,6 +329,12 @@ class NodeSearchRequest:
     # from the scope — they are node-local epoch baggage that pinned
     # queries must still reach regardless of where replicas moved.
     segments: tuple[int, ...] | None = None
+    # Trace propagation: (TraceContext, parent Span) when the request is
+    # traced; the node hangs plan/scan/reduce child spans off the parent.
+    trace: tuple | None = None
+    # True for hedge re-dispatches — the node books the search under
+    # ``searches_hedged`` so least-loaded picks see primary load only.
+    hedged: bool = False
 
     @classmethod
     def from_request(
@@ -330,6 +346,8 @@ class NodeSearchRequest:
         guarantee: GuaranteeTs,
         filter_masks: dict[int, np.ndarray] | None = None,
         segments: tuple[int, ...] | None = None,
+        trace: tuple | None = None,
+        hedged: bool = False,
     ) -> "NodeSearchRequest":
         anns = [
             AnnsQuery(
@@ -346,6 +364,8 @@ class NodeSearchRequest:
             filter_masks=filter_masks,
             partitions=request.partition_names or None,
             segments=segments,
+            trace=trace,
+            hedged=hedged,
         )
 
 
@@ -370,6 +390,10 @@ class NodeStatus:
     segments: tuple[tuple[str, int], ...]
     channels: tuple[str, ...]
     searches: int = 0
+    # Hedge accounting split: primaries drive the load picker; hedges are
+    # duplicated work and must not inflate a node's apparent traffic.
+    searches_primary: int = 0
+    searches_hedged: int = 0
 
 
 @dataclass(frozen=True)
@@ -413,6 +437,66 @@ class ClusterState:
     @property
     def live_node_ids(self) -> tuple[str, ...]:
         return tuple(n.node_id for n in self.nodes if n.status != "dead")
+
+
+@dataclass(frozen=True)
+class HistogramRow:
+    """One histogram series in a :class:`MetricsSnapshot` — count, mean,
+    and the interpolated p50/p95/p99 estimates from the log buckets."""
+
+    name: str
+    count: int
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "count": int(self.count),
+            "mean": float(self.mean),
+            "p50": float(self.p50),
+            "p95": float(self.p95),
+            "p99": float(self.p99),
+        }
+
+
+@dataclass(frozen=True)
+class MetricsSnapshot:
+    """Frozen point-in-time read-out of the telemetry registry, returned
+    by ``ManuSystem.metrics()`` — the metrics twin of ``ClusterState``.
+
+    ``counters``/``gauges`` map fully-labelled series keys (Prometheus
+    ``name{label="v"}`` form) to values; ``histograms`` carry typed
+    percentile rows.  Everything is plain Python, so the snapshot JSON
+    round-trips via ``to_dict()``.
+    """
+
+    ts_ms: float
+    counters: dict
+    gauges: dict
+    histograms: tuple[HistogramRow, ...]
+
+    def counter(self, key: str, default: float = 0.0) -> float:
+        return self.counters.get(key, default)
+
+    def gauge(self, key: str, default: float = 0.0) -> float:
+        return self.gauges.get(key, default)
+
+    def histogram(self, key: str) -> HistogramRow | None:
+        for h in self.histograms:
+            if h.name == key:
+                return h
+        return None
+
+    def to_dict(self) -> dict:
+        return {
+            "ts_ms": float(self.ts_ms),
+            "counters": {k: float(v) for k, v in self.counters.items()},
+            "gauges": {k: float(v) for k, v in self.gauges.items()},
+            "histograms": [h.to_dict() for h in self.histograms],
+        }
 
 
 @dataclass(frozen=True)

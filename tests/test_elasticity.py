@@ -8,7 +8,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import ManuConfig, ManuSystem
+from repro.core import ManuConfig, ManuSystem, SearchRequest
 
 
 def ingest(coll, rng, n, dim, batches=4):
@@ -285,6 +285,123 @@ def test_hedge_goes_to_different_replica(rng):
     straggler.inject_delay_s = 0.0
     np.testing.assert_array_equal(sorted_rows(oracle)[0], sorted_rows(res)[0])
     assert elapsed < 1.5  # did not block on the straggler's full delay
+
+
+# ------------------------------------------------- traced chaos coverage
+
+
+def _executed_dispatch_leaves(trace):
+    """(node, frozenset(segments)) of every dispatch in the span tree that
+    actually executed (has a plan_search child), asserting along the way
+    that each dispatch's segment scope == its plan's scoped segments ==
+    the union of its scan spans' segments."""
+    leaves = set()
+    for span in trace.walk():
+        if span.name not in ("dispatch", "hedge_dispatch"):
+            continue
+        plans = [c for c in span.children if c.name == "plan_search"]
+        if not plans:
+            continue  # dispatch died (or is still in flight): no scan ran
+        plan_segs = set()
+        for p in plans:
+            plan_segs |= set(p.segment_ids)
+        scan_segs = set()
+        for c in span.children:
+            if c.name.startswith("scan_"):
+                scan_segs |= set(c.segment_ids)
+        assert plan_segs == set(span.segment_ids)
+        assert scan_segs == plan_segs
+        leaves.add((span.node_id, frozenset(span.segment_ids)))
+    return leaves
+
+
+def test_traced_chaos_search_span_tree_covers_every_scan(rng):
+    """Kill a node mid-search, then hedge a straggler, both with tracing
+    on: the span tree's (segment, node) leaves must equal exactly the
+    scans that actually ran — including the failover re-plan's dispatches
+    and the hedge that won — and every span's segment-id set must equal
+    its plan's scoped segments."""
+    dim = 8
+    system = ManuSystem(
+        ManuConfig(
+            num_query_nodes=3, replication_factor=2, seal_rows=200,
+            num_shards=2,
+        )
+    )
+    coll = system.create_collection("c", dim=dim)
+    ingest(coll, rng, 900, dim, batches=3)
+    coll.flush()
+    q = rng.standard_normal((3, dim)).astype(np.float32)
+    oracle = coll.search(q, limit=10, staleness_ms=0.0)
+
+    # Ground truth: record every (node, scoped segment set) scan that
+    # actually completes on any node.
+    scanned: list[tuple[str, frozenset]] = []
+    for node_id, qn in system.query_nodes.items():
+        def wrapped(request, orig=qn.search_request, node_id=node_id):
+            out = orig(request)
+            assert request.segments is not None  # replica-scoped dispatch
+            scanned.append((node_id, frozenset(request.segments)))
+            return out
+
+        qn.search_request = wrapped
+
+    # --- phase 1: node dies between planning and scan (failover re-plan)
+    victim_id = next(
+        n for n, st in system.query_coord.nodes.items() if st.segments
+    )
+    victim = system.query_nodes[victim_id]
+
+    def dying(request):
+        victim.alive = False
+        raise RuntimeError("injected crash mid-request")
+
+    victim.search_request = dying
+    res = coll.search(
+        SearchRequest.single(q, field="vector", k=10, staleness_ms=0.0,
+                             trace=True)
+    )
+    np.testing.assert_array_equal(sorted_rows(oracle)[0], sorted_rows(res)[0])
+    trace = res.trace
+    assert trace is not None and trace.kind == "search"
+    assert trace.spans_named("failover_replan"), "no failover re-plan span"
+    assert not trace.spans_named("hedge")
+    assert _executed_dispatch_leaves(trace) == set(scanned)
+    # the dead node's dispatch is in the tree but has no scan children
+    dead_dispatches = [
+        s for s in trace.walk()
+        if s.name == "dispatch" and s.node_id == victim_id
+    ]
+    assert dead_dispatches and all(not s.children for s in dead_dispatches)
+
+    # --- phase 2: a straggling survivor forces a hedge that wins
+    system.run_until_idle()  # survivors finish loading healed replicas
+    scanned.clear()
+    straggler_id = next(
+        n for n, st in system.query_coord.nodes.items()
+        if st.segments and n != victim_id
+    )
+    straggler = system.query_nodes[straggler_id]
+    straggler.inject_delay_s = 0.4
+    res2 = coll.search(
+        SearchRequest.single(q, field="vector", k=10, staleness_ms=0.0,
+                             trace=True),
+        hedge_timeout_s=0.05,
+    )
+    straggler.inject_delay_s = 0.0
+    np.testing.assert_array_equal(sorted_rows(oracle)[0], sorted_rows(res2)[0])
+    trace2 = res2.trace
+    assert trace2.spans_named("hedge"), "no hedge span despite straggler"
+    # let the abandoned straggler thread finish so its late scan lands in
+    # both the span tree and the ground truth before comparing
+    time.sleep(0.6)
+    hedge_wins = [
+        s for s in trace2.walk()
+        if s.name == "hedge_dispatch"
+        and any(c.name == "plan_search" for c in s.children)
+    ]
+    assert hedge_wins, "the hedged re-dispatch never executed"
+    assert _executed_dispatch_leaves(trace2) == set(scanned)
 
 
 # ------------------------------------------------------ cluster-admin API
