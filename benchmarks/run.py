@@ -23,6 +23,7 @@ from . import (
     fig13_index_build,
     fig_compaction,
     fig_ingest,
+    fig_recovery,
     kernels_micro,
 )
 from .common import emit
@@ -37,6 +38,7 @@ MODULES = [
     ("fig13", fig13_index_build),
     ("fig_compaction", fig_compaction),
     ("fig_ingest", fig_ingest),
+    ("fig_recovery", fig_recovery),
     ("kernels", kernels_micro),
 ]
 

@@ -42,6 +42,23 @@ class FieldSchema:
         if self.is_primary and self.dtype not in (FieldType.INT, FieldType.STRING):
             raise ValueError("primary key must be int or string")
 
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "dtype": self.dtype.value,
+            "dim": self.dim,
+            "is_primary": self.is_primary,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "FieldSchema":
+        return FieldSchema(
+            d["name"],
+            FieldType(d["dtype"]),
+            dim=int(d.get("dim", 0)),
+            is_primary=bool(d.get("is_primary", False)),
+        )
+
 
 @dataclass(frozen=True)
 class Schema:
@@ -77,6 +94,15 @@ class Schema:
             for f in self.fields
             if not f.is_primary and f.dtype is not FieldType.VECTOR
         ]
+
+    def to_dict(self) -> dict:
+        """Durable form, so a restarted system can reconstruct collections
+        purely from the meta store."""
+        return {"fields": [f.to_dict() for f in self.fields]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Schema":
+        return Schema(tuple(FieldSchema.from_dict(f) for f in d["fields"]))
 
     @staticmethod
     def simple(dim: int, metric: Metric = Metric.L2, extra: list[FieldSchema] | None = None) -> "Schema":

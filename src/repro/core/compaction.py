@@ -113,6 +113,9 @@ class CompactionCoordinator:
         self._next_task = 1
         self.segment_map = SegmentMap(meta)
         self.compactions_completed = 0
+        # LSN-keyed dedup: highest applied position per channel (at-least-
+        # once broker; duplicate delivery is an injectable fault).
+        self._applied_pos: dict[str, int] = {}
 
     # ------------------------------------------------------------------ log
     def _refresh_dml_subs(self) -> None:
@@ -124,7 +127,11 @@ class CompactionCoordinator:
         progress = False
         self._refresh_dml_subs()
         for sub in self._dml_subs.values():
+            watermark = self._applied_pos.get(sub.channel, -1)
             for entry in sub.poll():
+                if entry.position <= watermark:
+                    continue  # duplicate delivery: already applied this LSN
+                watermark = entry.position
                 if entry.type in (EntryType.DELETE, EntryType.UPSERT):
                     # an upsert's delete half is a tombstone like any other
                     # (row-ts aware: it only kills versions older than it)
@@ -133,7 +140,12 @@ class CompactionCoordinator:
                     for pk in np.asarray(p["pk"]).tolist():
                         add_tombstone(dd, pk, entry.ts)
                     progress = True
+            self._applied_pos[sub.channel] = watermark
+        watermark = self._applied_pos.get(COORD_CHANNEL, -1)
         for entry in self.sub.poll():
+            if entry.position <= watermark:
+                continue
+            watermark = entry.position
             if entry.type is not EntryType.COORD:
                 continue
             p = entry.payload
@@ -145,6 +157,8 @@ class CompactionCoordinator:
                     "partition": p.get("partition", DEFAULT_PARTITION),
                 }
                 progress = True
+            elif msg == "compaction_task":
+                progress |= self._on_task_replayed(p)
             elif msg == "segment_compacted":
                 progress |= self._on_compacted(p)
             elif msg == "partition_dropped":
@@ -152,19 +166,68 @@ class CompactionCoordinator:
                     self.sealed.pop((p["collection"], sid), None)
                     self._seg_cols.pop((p["collection"], sid), None)
                 progress = True
+        self._applied_pos[COORD_CHANNEL] = watermark
         return progress
+
+    # ------------------------------------------------------------- recovery
+    def _claim_key(self, coll: str, task_id: str) -> str:
+        return f"compaction_claim/{coll}/{task_id}"
+
+    def _is_done(self, coll: str, task_id: str) -> bool:
+        claim = self.meta.get(self._claim_key(coll, task_id))
+        return bool(claim and claim.get("done"))
+
+    def _on_task_replayed(self, p: dict) -> bool:
+        """A ``compaction_task`` read back from the coord channel.
+
+        The publishing coordinator already holds it in ``pending``; a
+        *restarted* coordinator (fresh subscription from position 0) rebuilds
+        its in-flight task table from exactly these entries — the log is the
+        durable task queue.  Completed tasks (done-marker on the claim) stay
+        out of ``pending`` so their late ``segment_compacted`` replays take
+        the idempotent view-only path.  The task-id sequence also resumes
+        past every replayed id so new tasks never collide with old claims.
+        """
+        task_id = p["task_id"]
+        try:
+            seq = int(task_id.rsplit("-", 1)[1])
+            self._next_task = max(self._next_task, seq + 1)
+        except (IndexError, ValueError):
+            pass
+        if task_id in self.pending or self._is_done(p["collection"], task_id):
+            return False
+        self.pending[task_id] = dict(p)
+        return True
+
+    def clear_stale_claims(self, owner: str | None = None) -> int:
+        """Release not-done claims (optionally only ``owner``'s) so pending
+        tasks wedged behind a crashed node's claim become takeable again."""
+        cleared = 0
+        for key, claim in list(self.meta.scan("compaction_claim/").items()):
+            if claim.get("done"):
+                continue
+            if owner is not None and claim.get("owner") != owner:
+                continue
+            task_id = key.rsplit("/", 1)[1]
+            if task_id in self.pending:
+                self.meta.delete(key)
+                cleared += 1
+        return cleared
 
     def _on_compacted(self, p: dict) -> bool:
         task = self.pending.pop(p["task_id"], None)
         if task is None:
-            return False  # duplicate announcement / replay
+            if self._is_done(p["collection"], p["task_id"]):
+                # Replay/duplicate of a completed task: the durable writes
+                # (retired_segment, segment map, data-coord meta) already
+                # happened; refresh the in-memory view only.
+                self._apply_compacted_view(p)
+            return False
         coll = p["collection"]
         targets = list(p["segments"])  # [{"segment_id", "num_rows"}, ...]
         sources = list(p["sources"])
         partition = p.get("partition", DEFAULT_PARTITION)
         for sid in sources:
-            self.sealed.pop((coll, sid), None)
-            self._seg_cols.pop((coll, sid), None)
             self.meta.put(
                 f"retired_segment/{coll}/{sid}",
                 {
@@ -172,28 +235,24 @@ class CompactionCoordinator:
                     "compacted_into": [t["segment_id"] for t in targets],
                 },
             )
-        for t in targets:
-            self.sealed[(coll, t["segment_id"])] = {
-                "rows": t["num_rows"],
-                "shard": p["shard"],
-                "partition": partition,
-            }
+        self._apply_compacted_view(p)
         self.segment_map.apply(
             coll,
             add=[t["segment_id"] for t in targets],
             remove=sources,
             ts=p["compact_ts"],
         )
-        self.data_coord.on_compacted(coll, sources, targets, partition)
-        # Folded tombstones left the live data entirely (their pks existed
-        # only in the rewritten sources), so the coordinator's own view can
-        # drop them — same unbounded-growth fix as the query nodes'.
-        pruned = prune_folded(
-            self.tombstones.get(coll) or {}, p["folded_pks"], p["compact_ts"]
+        self.data_coord.on_compacted(
+            coll, sources, targets, partition,
+            shard=p.get("shard", 0), compact_ts=p["compact_ts"],
         )
-        if pruned is not None:
-            self.tombstones[coll] = pruned
-        self.meta.delete(f"compaction_claim/{coll}/{p['task_id']}")
+        # Done-marker instead of deleting the claim: a restarted coordinator
+        # or node replaying the coord channel can tell "completed" apart from
+        # "never ran", so completed tasks are never re-executed.
+        self.meta.put(
+            self._claim_key(coll, p["task_id"]),
+            {"owner": p.get("built_by"), "done": True},
+        )
         self.compactions_completed += 1
         if self.events is not None:
             self.events.emit(
@@ -203,6 +262,29 @@ class CompactionCoordinator:
                 rows_purged=p.get("rows_purged", 0),
             )
         return True
+
+    def _apply_compacted_view(self, p: dict) -> None:
+        """In-memory effects of a completed compaction (idempotent): swap
+        sources for targets in the sealed table and prune folded tombstones
+        (folded pks existed only in the rewritten sources, so the
+        coordinator's view can drop them — same unbounded-growth fix as the
+        query nodes')."""
+        coll = p["collection"]
+        partition = p.get("partition", DEFAULT_PARTITION)
+        for sid in p["sources"]:
+            self.sealed.pop((coll, sid), None)
+            self._seg_cols.pop((coll, sid), None)
+        for t in p["segments"]:
+            self.sealed[(coll, t["segment_id"])] = {
+                "rows": t["num_rows"],
+                "shard": p["shard"],
+                "partition": partition,
+            }
+        pruned = prune_folded(
+            self.tombstones.get(coll) or {}, p["folded_pks"], p["compact_ts"]
+        )
+        if pruned is not None:
+            self.tombstones[coll] = pruned
 
     def lag(self) -> int:
         """Unconsumed log entries across this coordinator's subscriptions."""
@@ -403,12 +485,20 @@ class CompactionNode:
         self.alive = True
         self.compactions_completed = 0
         self.rows_purged = 0
+        self._applied_pos = -1  # LSN-keyed dedup over the coord channel
+        self._retry: list[dict] = []  # tasks whose claim CAS lost spuriously
 
     def step(self) -> bool:
         if not self.alive:
             return False
         progress = False
+        retries, self._retry = self._retry, []
+        for task in retries:
+            progress |= self._try_compact(task)
         for entry in self.sub.poll():
+            if entry.position <= self._applied_pos:
+                continue  # duplicate delivery: already saw this LSN
+            self._applied_pos = entry.position
             if entry.type is not EntryType.COORD:
                 continue
             p = entry.payload
@@ -422,12 +512,19 @@ class CompactionNode:
         claim_key = f"compaction_claim/{coll}/{task['task_id']}"
         # CAS claim: only one compaction node executes a given task.
         if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
+            if self.meta.get(claim_key) is None:
+                # Lost the CAS yet nobody holds the claim — a conflict storm
+                # (injected or a genuinely vanished rival).  Requeue locally:
+                # the task must not wedge behind a race that nobody won.
+                self._retry.append(task)
             return False
         try:
             return self._rewrite(task)
         except Exception:
             # Release the claim so another node (or a retry) can take the
-            # task instead of wedging it behind a dead claim.
+            # task instead of wedging it behind a dead claim.  (A simulated
+            # Crash is a BaseException: it leaks the claim, as a real kill
+            # would — the coordinator's clear_stale_claims handles that.)
             self.meta.delete(claim_key)
             raise
 

@@ -37,16 +37,28 @@ class IdAllocator:
     """Typed auto-ID allocator (paper §3.2: the root coordinator assigns
     entity IDs).  Hands out dense per-collection int64 ranges and tracks a
     high watermark across *explicit* user keys too, so the write path can
-    cheaply reject deletes of never-allocated pks (the no-match no-op)."""
+    cheaply reject deletes of never-allocated pks (the no-match no-op).
 
-    def __init__(self) -> None:
+    The watermark is checkpointed to the meta store (``id_alloc/{coll}``)
+    so a restarted system never re-issues an id and no-match rejection
+    stays sound across crashes."""
+
+    def __init__(self, meta: "MetaStore | None" = None) -> None:
         self._next: dict[str, int] = {}
+        self.meta = meta
+
+    def _persist(self, collection: str) -> None:
+        if self.meta is not None:
+            self.meta.put(
+                f"id_alloc/{collection}", {"next": self._next[collection]}
+            )
 
     def allocate(self, collection: str, n: int) -> "np.ndarray":
         import numpy as np
 
         start = self._next.get(collection, 0)
         self._next[collection] = start + n
+        self._persist(collection)
         return np.arange(start, start + n, dtype=np.int64)
 
     def note_explicit(self, collection: str, pks) -> None:
@@ -55,9 +67,11 @@ class IdAllocator:
 
         pks = np.asarray(pks)
         if pks.size and pks.dtype.kind in "iu":
-            self._next[collection] = max(
-                self._next.get(collection, 0), int(pks.max()) + 1
-            )
+            cur = self._next.get(collection, 0)
+            new = max(cur, int(pks.max()) + 1)
+            if new != cur:
+                self._next[collection] = new
+                self._persist(collection)
 
     def high(self, collection: str) -> int:
         """Exclusive upper bound of every pk ever seen for the collection."""
@@ -65,6 +79,16 @@ class IdAllocator:
 
     def forget(self, collection: str) -> None:
         self._next.pop(collection, None)
+        if self.meta is not None:
+            self.meta.delete(f"id_alloc/{collection}")
+
+    def recover(self) -> None:
+        """Reload watermarks from the meta-store checkpoints."""
+        if self.meta is None:
+            return
+        for key, rec in self.meta.scan("id_alloc/").items():
+            coll = key.split("/", 1)[1]
+            self._next[coll] = max(self._next.get(coll, 0), int(rec.get("next", 0)))
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +136,9 @@ class RootCoordinator:
                 "seal_rows": seal_rows,
                 "dim": info.schema.vector_fields()[0].dim,
                 "replication_factor": replication_factor,
+                # full schema so a restarted system can reconstruct the
+                # CollectionInfo without any in-memory survivor
+                "schema": schema.to_dict(),
             },
         )
         # Every collection starts with the implicit default partition.
@@ -205,7 +232,7 @@ class DataCoordinator:
         self.tso = tso
         self.clock = clock
         self._next_segment = 1
-        self.id_alloc = IdAllocator()
+        self.id_alloc = IdAllocator(meta)
         # (collection, shard, partition) -> current growing allocation;
         # partitions are a placement surface, so each gets its own growing
         # segment per shard and sealed segments never mix partitions.
@@ -218,6 +245,14 @@ class DataCoordinator:
     # ------------------------------------------------------------ allocation
     def allocate_pks(self, collection: str, n: int):
         return self.id_alloc.allocate(collection, n)
+
+    def _alloc_sid(self) -> int:
+        """Allocate a segment id; the sequence is checkpointed to the meta
+        store so a restarted coordinator never reuses one."""
+        sid = self._next_segment
+        self._next_segment += 1
+        self.meta.put("segment_seq", {"next": self._next_segment})
+        return sid
 
     def seal_rows_for(self, collection: str) -> int:
         info = self.meta.get(f"collection/{collection}") or {}
@@ -233,15 +268,13 @@ class DataCoordinator:
         key = (collection, shard, partition)
         alloc = self._growing.get(key)
         if alloc is None:
-            alloc = SegmentAlloc(self._next_segment)
-            self._next_segment += 1
+            alloc = SegmentAlloc(self._alloc_sid())
             self._growing[key] = alloc
         alloc.rows += n_rows
         alloc.last_alloc_ms = self.clock.now_ms()
         if alloc.rows >= self.seal_rows_for(collection):
             self._to_seal.add((collection, alloc.segment_id))
-            self._growing[key] = SegmentAlloc(self._next_segment)
-            self._next_segment += 1
+            self._growing[key] = SegmentAlloc(self._alloc_sid())
         return alloc.segment_id
 
     # --------------------------------------------------------------- sealing
@@ -254,12 +287,19 @@ class DataCoordinator:
         segment_id: int,
         rows: int,
         partition: str = DEFAULT_PARTITION,
+        shard: int = 0,
     ) -> None:
         self._to_seal.discard((collection, segment_id))
         self._sealed_rows[(collection, segment_id)] = rows
         self.meta.put(
             f"segment/{collection}/{segment_id}",
-            {"rows": rows, "state": "sealed", "partition": partition},
+            {
+                "rows": rows,
+                "state": "sealed",
+                "partition": partition,
+                "shard": shard,
+                "visible_from_ts": 0,
+            },
         )
         self.segment_map.apply(
             collection, add=[segment_id], ts=self.tso.last_issued()
@@ -267,9 +307,7 @@ class DataCoordinator:
 
     def allocate_segment_id(self) -> int:
         """Reserve a fresh segment id (compaction rewrite targets)."""
-        sid = self._next_segment
-        self._next_segment += 1
-        return sid
+        return self._alloc_sid()
 
     def on_compacted(
         self,
@@ -277,6 +315,8 @@ class DataCoordinator:
         sources: list[int],
         targets: list[dict],
         partition: str = DEFAULT_PARTITION,
+        shard: int = 0,
+        compact_ts: int = 0,
     ) -> None:
         """Swap segment identity after a compaction rewrite completed.
 
@@ -285,15 +325,32 @@ class DataCoordinator:
         target_ids = [t["segment_id"] for t in targets]
         for sid in sources:
             self._sealed_rows.pop((collection, sid), None)
+            old = self.meta.get(f"segment/{collection}/{sid}") or {}
             self.meta.put(
                 f"segment/{collection}/{sid}",
-                {"rows": 0, "state": "retired", "compacted_into": target_ids},
+                {
+                    "rows": 0,
+                    "state": "retired",
+                    "compacted_into": target_ids,
+                    "partition": old.get("partition", partition),
+                    "shard": old.get("shard", shard),
+                    # keep the source's MVCC window so a restart can still
+                    # serve reads pinned before the swap
+                    "visible_from_ts": int(old.get("visible_from_ts", 0)),
+                    "retired_at_ts": compact_ts,
+                },
             )
         for t in targets:
             self._sealed_rows[(collection, t["segment_id"])] = t["num_rows"]
             self.meta.put(
                 f"segment/{collection}/{t['segment_id']}",
-                {"rows": t["num_rows"], "state": "sealed", "partition": partition},
+                {
+                    "rows": t["num_rows"],
+                    "state": "sealed",
+                    "partition": partition,
+                    "shard": shard,
+                    "visible_from_ts": compact_ts,
+                },
             )
 
     def flush(self, collection: str) -> list[int]:
@@ -304,8 +361,7 @@ class DataCoordinator:
                 continue
             self._to_seal.add((coll, alloc.segment_id))
             sealed.append(alloc.segment_id)
-            self._growing[(coll, shard, part)] = SegmentAlloc(self._next_segment)
-            self._next_segment += 1
+            self._growing[(coll, shard, part)] = SegmentAlloc(self._alloc_sid())
         return sealed
 
     def seal_idle(self, max_idle_ms: float) -> list[int]:
@@ -316,8 +372,7 @@ class DataCoordinator:
             if alloc.rows > 0 and (now - alloc.last_alloc_ms) >= max_idle_ms:
                 self._to_seal.add((coll, alloc.segment_id))
                 sealed.append(alloc.segment_id)
-                self._growing[(coll, shard, part)] = SegmentAlloc(self._next_segment)
-                self._next_segment += 1
+                self._growing[(coll, shard, part)] = SegmentAlloc(self._alloc_sid())
         return sealed
 
     def sealed_segments(self, collection: str) -> list[int]:
@@ -360,11 +415,86 @@ class DataCoordinator:
 
     def record_sealed_position(self, collection: str, shard: int, pos: int) -> None:
         key = (collection, shard)
-        self._sealed_upto_pos[key] = max(self._sealed_upto_pos.get(key, 0), pos)
+        cur = self.replay_position(collection, shard)
+        new = max(cur, pos)
+        self._sealed_upto_pos[key] = new
+        if new != cur:
+            # durable checkpoint: a restarted system replays from here
+            self.meta.put(f"replay/{collection}/{shard}", {"pos": new})
 
     def replay_position(self, collection: str, shard: int) -> int:
         """WAL position from which a recovering node must replay."""
-        return self._sealed_upto_pos.get((collection, shard), 0)
+        key = (collection, shard)
+        pos = self._sealed_upto_pos.get(key)
+        if pos is None:
+            rec = self.meta.get(f"replay/{collection}/{shard}") or {}
+            pos = int(rec.get("pos", 0))
+            self._sealed_upto_pos[key] = pos
+        return pos
+
+    # -------------------------------------------------------------- recovery
+    def recover_state(self, store=None) -> dict:
+        """Rebuild allocator + sealing state after a full restart.
+
+        Sealed/retired segments come from the ``segment/`` meta records; the
+        growing allocations are reconstructed by replaying the WAL and
+        counting rows of every segment that never reached a binlog — exactly
+        the rows the data nodes themselves rebuild.  ``store`` (optional)
+        lets the scan also skip segments whose binlog survived a crash that
+        lost the ``segment_sealed`` announcement; the system-level
+        reconciliation re-announces those.
+        """
+        self.id_alloc.recover()
+        seq = self.meta.get("segment_seq") or {}
+        self._next_segment = max(self._next_segment, int(seq.get("next", 1)))
+        sealed = 0
+        for key, rec in self.meta.scan("segment/").items():
+            _, coll, sid_s = key.split("/")
+            sid = int(sid_s)
+            self._next_segment = max(self._next_segment, sid + 1)
+            if rec.get("state") == "sealed":
+                self._sealed_rows[(coll, sid)] = int(rec["rows"])
+                sealed += 1
+        counts: dict[tuple[str, int, str], dict[int, int]] = {}
+        for ckey, info in self.meta.scan("collection/").items():
+            coll = ckey.split("/", 1)[1]
+            for shard in range(int(info["num_shards"])):
+                try:
+                    entries = self.broker.read(dml_channel(coll, shard), 0)
+                except KeyError:
+                    continue
+                for e in entries:
+                    if e.type not in (EntryType.INSERT, EntryType.UPSERT):
+                        continue
+                    p = e.payload
+                    sid = p["segment_id"]
+                    if (coll, sid) in self._sealed_rows:
+                        continue
+                    if self.meta.get(f"segment/{coll}/{sid}") is not None:
+                        continue  # retired: durable, not growing
+                    if store is not None and store.exists(f"binlog/{coll}/{sid}/meta"):
+                        continue  # archived; announcement reconciled elsewhere
+                    gkey = (coll, shard, p.get("partition", DEFAULT_PARTITION))
+                    per = counts.setdefault(gkey, {})
+                    per[sid] = per.get(sid, 0) + len(p["pk"])
+        growing = 0
+        for gkey, per_sid in counts.items():
+            coll = gkey[0]
+            sids = sorted(per_sid)
+            # every sid but the newest had a successor allocated pre-crash,
+            # which only happens once the sid was marked for sealing
+            for sid in sids[:-1]:
+                self._to_seal.add((coll, sid))
+            last = sids[-1]
+            alloc = SegmentAlloc(
+                last, rows=per_sid[last], last_alloc_ms=self.clock.now_ms()
+            )
+            if per_sid[last] >= self.seal_rows_for(coll):
+                self._to_seal.add((coll, last))
+                alloc = SegmentAlloc(self._alloc_sid())
+            self._growing[gkey] = alloc
+            growing += 1
+        return {"sealed": sealed, "growing": growing, "to_seal": len(self._to_seal)}
 
 
 # ---------------------------------------------------------------------------
@@ -469,7 +599,11 @@ class IndexCoordinator:
                 self.built[key] = p
                 self.meta.put(
                     f"index/{p['collection']}/{p['segment_id']}/{field}",
-                    {"kind": p["index_kind"], "key": p["index_key"]},
+                    {
+                        "kind": p["index_kind"],
+                        "key": p["index_key"],
+                        "column": p.get("column", field),
+                    },
                 )
                 if self.events is not None:
                     self.events.emit(
@@ -509,6 +643,53 @@ class IndexCoordinator:
                     self.meta.delete(claim)
                 progress = True
         return progress
+
+    # -------------------------------------------------------------- recovery
+    def recover_state(self) -> dict:
+        """Rebuild build-state after a restart: adopt finished builds from
+        the ``index/`` meta records, clear claims whose builder died before
+        finishing, and re-issue tasks for sealed segments missing an index.
+        Fast-forwards past the pre-crash coordination history — its durable
+        effects were just adopted."""
+        adopted = 0
+        for key, rec in self.meta.scan("index/").items():
+            _, coll, sid_s, field = key.split("/")
+            self.built[(coll, int(sid_s), field)] = {
+                "msg": "index_built",
+                "collection": coll,
+                "segment_id": int(sid_s),
+                "field": field,
+                "column": rec.get("column", field),
+                "index_kind": rec["kind"],
+                "index_key": rec["key"],
+            }
+            adopted += 1
+        cleared = 0
+        for claim in list(self.meta.scan("index_claim/")):
+            _, coll, sid_s, field, _kind = claim.split("/")
+            if (coll, int(sid_s), field) not in self.built:
+                # claimed but never finished: the builder died mid-build
+                self.meta.delete(claim)
+                cleared += 1
+        self.sub.seek(self.broker.end_position(COORD_CHANNEL))
+        reissued = 0
+        for key, seg in self.meta.scan("segment/").items():
+            if seg.get("state") != "sealed":
+                continue
+            _, coll, sid_s = key.split("/")
+            sid = int(sid_s)
+            for field, spec in self.index_specs(coll).items():
+                k = (coll, sid, field)
+                if k in self.built or k in self.pending_tasks:
+                    continue
+                task = self._task_of(coll, sid, spec)
+                self.pending_tasks[k] = task
+                self.broker.publish(
+                    COORD_CHANNEL,
+                    LogEntry(ts=self.tso.next(), type=EntryType.COORD, payload=task),
+                )
+                reissued += 1
+        return {"built": adopted, "claims_cleared": cleared, "tasks_reissued": reissued}
 
     def rebuild_segment(
         self, collection: str, segment_id: int, fields: "list[str] | None" = None
@@ -949,6 +1130,82 @@ class QueryCoordinator:
             "index_kind": built["index_kind"],
             "index_key": built["index_key"],
         }
+
+    # -------------------------------------------------------------- recovery
+    def recover_state(self) -> dict:
+        """Adopt committed placement inputs from the meta store after a full
+        restart: MVCC visibility pins (``segment/*.visible_from_ts``) and
+        finished index builds (``index/``).  The coordination-log history is
+        fast-forwarded — its committed effects live in the meta store — and
+        the reconciler then re-places every sealed segment onto whatever
+        nodes are registered now."""
+        with self._mutex:
+            pins = indexes = 0
+            for key, rec in self.meta.scan("segment/").items():
+                _, coll, sid_s = key.split("/")
+                vts = int(rec.get("visible_from_ts", 0) or 0)
+                if vts:
+                    self._visible_from[(coll, int(sid_s))] = vts
+                    pins += 1
+            for key, rec in self.meta.scan("index/").items():
+                _, coll, sid_s, field = key.split("/")
+                skey = (coll, int(sid_s))
+                self._known_indexes.setdefault(skey, {})[field] = {
+                    "msg": "index_built",
+                    "collection": coll,
+                    "segment_id": int(sid_s),
+                    "field": field,
+                    "column": rec.get("column", field),
+                    "index_kind": rec["kind"],
+                    "index_key": rec["key"],
+                }
+                indexes += 1
+            self.sub.seek(self.broker.end_position(COORD_CHANNEL))
+            return {"visible_pins": pins, "indexes": indexes}
+
+    def recover_retired(self, store) -> int:
+        """Reload retired-but-not-GC'd segments so reads pinned before their
+        hot-swap keep answering after a restart.  Each is loaded onto a live
+        node and immediately re-retired, restoring the bounded MVCC window
+        ``[visible_from_ts, retired_at_ts)`` the handle had before the crash."""
+        with self._mutex:
+            count = 0
+            for key, rec in self.meta.scan("retired_segment/").items():
+                _, coll, sid_s = key.split("/")
+                sid = int(sid_s)
+                if self.meta.get(f"collection/{coll}") is None:
+                    continue
+                if not store.exists(f"binlog/{coll}/{sid}/meta"):
+                    continue  # GC already reclaimed it
+                seg = self.meta.get(f"segment/{coll}/{sid}") or {}
+                part = seg.get("partition", DEFAULT_PARTITION)
+                if self.meta.get(f"partition/{coll}/{part}") is None:
+                    continue  # dropped partitions stay dropped
+                node = self._least_loaded()
+                if node is None:
+                    break
+                self._publish(
+                    {
+                        "msg": "load_segment",
+                        "node_id": node,
+                        "collection": coll,
+                        "segment_id": sid,
+                        "visible_from_ts": int(seg.get("visible_from_ts", 0)),
+                    }
+                )
+                for idx in self._known_indexes.get((coll, sid), {}).values():
+                    self._publish(self._load_index_payload(node, idx))
+                self._publish(
+                    {
+                        "msg": "retire_segment",
+                        "node_id": node,
+                        "collection": coll,
+                        "segment_id": sid,
+                        "retired_at_ts": int(rec.get("retired_at_ts", 0)),
+                    }
+                )
+                count += 1
+            return count
 
     # ------------------------------------------------------ channel coverage
     def assign_channels(self, collection: str, num_shards: int) -> None:

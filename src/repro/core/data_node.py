@@ -38,6 +38,15 @@ class DataNode:
         self.subscriptions: dict[str, Subscription] = {}
         # (collection, segment_id) -> growing Segment
         self.growing: dict[tuple[str, int], Segment] = {}
+        # LSN-keyed dedup: highest applied position per channel.  The broker
+        # is at-least-once (duplicate delivery is an injectable fault), so
+        # every subscriber must treat re-delivered entries as no-ops.
+        self._applied_pos: dict[str, int] = {}
+        # (collection, segment_id) -> already archived to binlog?  Replaying
+        # the WAL from position 0 after a crash must skip insert halves whose
+        # segment is durable in the base log (binlog); delete halves always
+        # apply (they tombstone the *growing* segments being rebuilt).
+        self._archived: dict[tuple[str, int], bool] = {}
         self.alive = True
 
     def subscribe(self, channel: str, from_position: int = 0) -> None:
@@ -52,10 +61,25 @@ class DataNode:
             return False
         progress = False
         for sub in list(self.subscriptions.values()):
+            watermark = self._applied_pos.get(sub.channel, -1)
             for entry in sub.poll():
-                progress |= self._consume(entry, sub.position)
+                if entry.position <= watermark:
+                    self.metrics.inc("log_dedup_skipped_total",
+                                     labels={"node": self.node_id})
+                    continue
+                progress |= self._consume(entry, entry.position + 1)
+                watermark = entry.position
+            self._applied_pos[sub.channel] = watermark
         progress |= self._flush_sealed()
         return progress
+
+    def _is_archived(self, coll: str, sid: int) -> bool:
+        key = (coll, sid)
+        hit = self._archived.get(key)
+        if hit is None:
+            hit = self.store.exists(f"binlog/{coll}/{sid}/meta")
+            self._archived[key] = hit
+        return hit
 
     def _consume(self, entry: LogEntry, position: int) -> bool:
         import numpy as np
@@ -70,6 +94,11 @@ class DataNode:
                     if coll == p["collection"]:
                         seg.delete(p["pk"], entry.ts)
             key = (p["collection"], p["segment_id"])
+            if key not in self.growing and self._is_archived(*key):
+                # Crash-recovery replay: this insert is already durable in
+                # the sealed binlog; rebuilding it as growing rows would
+                # double-count.  (The delete half above still applied.)
+                return entry.type is EntryType.UPSERT
             seg = self.growing.get(key)
             if seg is None:
                 dim = p["vector"].shape[1]
@@ -132,7 +161,9 @@ class DataNode:
                     },
                 ),
             )
-            self.data_coord.on_sealed(coll, sid, seg.num_rows, seg.partition)
+            self.data_coord.on_sealed(
+                coll, sid, seg.num_rows, seg.partition, shard=seg.shard
+            )
             progress = True
         return progress
 

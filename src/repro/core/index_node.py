@@ -62,6 +62,10 @@ class IndexNode:
         # column backing it (the first vector field is stored as "vector").
         field = task.get("field", "vector")
         column = task.get("column", field)
+        # Replay safety: a task re-read from the coord channel after a crash
+        # may name a segment GC already reclaimed — nothing to build.
+        if not self.store.exists(f"binlog/{coll}/{sid}/meta"):
+            return False
         claim_key = f"index_claim/{coll}/{sid}/{field}/{kind}"
         # CAS claim: only one index node builds a given task.
         if not self.meta.cas(claim_key, None, {"owner": self.node_id}):
@@ -70,17 +74,24 @@ class IndexNode:
         import time as _t
 
         t0 = _t.perf_counter()
-        vectors = read_binlog_column(self.store, coll, sid, column)
-        spec = IndexSpec(
-            kind=kind,
-            metric=Metric(task.get("metric", "l2")),
-            params=task.get("params") or {},
-            field=field,
-        )
-        index = create_index(spec)
-        index.build(vectors)
-        key = index_key(coll, sid, field, kind)
-        self.store.put(key, index.save())
+        try:
+            vectors = read_binlog_column(self.store, coll, sid, column)
+            spec = IndexSpec(
+                kind=kind,
+                metric=Metric(task.get("metric", "l2")),
+                params=task.get("params") or {},
+                field=field,
+            )
+            index = create_index(spec)
+            index.build(vectors)
+            key = index_key(coll, sid, field, kind)
+            self.store.put(key, index.save())
+        except Exception:
+            # Release the claim so the task stays takeable.  (A simulated
+            # Crash is a BaseException: the claim leaks, as with a real
+            # kill — IndexCoordinator.recover_state clears it.)
+            self.meta.delete(claim_key)
+            raise
         self.builds_completed += 1
         self.metrics.observe(
             "index_build_us", (_t.perf_counter() - t0) * 1e6,

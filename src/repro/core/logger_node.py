@@ -175,6 +175,8 @@ class Logger:
                 ),
             )
             shard_lsns[shard] = lsn
+        if upsert and shard_lsns:
+            self._broadcast_tombstones(info.name, pks, lsn)
         return MutationResult(
             op="upsert" if upsert else "insert",
             pks=pks,
@@ -225,6 +227,7 @@ class Logger:
                 ),
             )
             shard_lsns[shard] = lsn
+        self._broadcast_tombstones(info.name, pks, lsn)
         return MutationResult(
             op="delete",
             pks=pks,
@@ -232,6 +235,31 @@ class Logger:
             watermark_ts=lsn,
             row_count=requested,
             ack_rows=len(pks),
+        )
+
+    def _broadcast_tombstones(
+        self, collection: str, pks: np.ndarray, lsn: int
+    ) -> None:
+        """Mirror the full tombstone set onto the broadcast coord channel.
+
+        Per-shard DELETE entries only reach the query node that owns that
+        shard's DML channel, but sealed-segment placement is not shard-affine
+        (handoffs and restarts move segments across nodes).  The coord mirror
+        — carried at the SAME LSN as the DML halves, and replayed from
+        position 0 by every (re)started query node — guarantees every server
+        of a sealed copy learns about the kills.  Appliers dedup by (pk, ts),
+        so double delivery via both channels is harmless."""
+        self.broker.publish(
+            "coord",
+            LogEntry(
+                ts=lsn,
+                type=EntryType.COORD,
+                payload={
+                    "msg": "tombstones",
+                    "collection": collection,
+                    "pk": pks,
+                },
+            ),
         )
 
     # ------------------------------------------------------ legacy facades

@@ -45,11 +45,25 @@ from .coordinator import (
     RootCoordinator,
 )
 from .data_node import DataNode
+from .faults import (
+    Crash,
+    FaultInjector,
+    FaultyLogBroker,
+    FaultyMetaStore,
+    FaultyObjectStore,
+)
 from .index_node import IndexNode
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, dml_channel
 from .logger_node import Logger
 from .meta_store import MetaStore
 from .object_store import MemoryObjectStore, ObjectStore
+from .retry import (
+    RetryPolicy,
+    RetryingLogBroker,
+    RetryingMetaStore,
+    RetryingObjectStore,
+    default_sleep,
+)
 from .proxy import BatchingProxy, Proxy, SearchResult
 from .query_node import QueryNode
 from .request import (
@@ -102,6 +116,10 @@ class ManuConfig:
     replication_factor: int = 1
     heartbeat_ttl_ms: float = 5_000.0
     reconcile_interval_s: float = 0.25  # threaded-mode watchdog cadence
+    # Typed retry/backoff for object-store, meta-store and log-broker I/O
+    # (None = default policy).  Deterministic: the policy's seed drives the
+    # backoff jitter.
+    retry_policy: "RetryPolicy | None" = None
 
 
 class ManuCollection:
@@ -352,13 +370,15 @@ class ManuCollection:
 
 
 class ManuSystem:
-    def __init__(self, config: ManuConfig | None = None, store: ObjectStore | None = None):
+    def __init__(
+        self,
+        config: ManuConfig | None = None,
+        store: ObjectStore | None = None,
+        injector: FaultInjector | None = None,
+    ):
         self.config = config or ManuConfig()
         self.clock: Clock = ManualClock(1_000_000) if self.config.manual_clock else Clock()
         self.tso = TSO(self.clock)
-        self.broker = LogBroker()
-        self.meta = MetaStore(self.clock)
-        self.store = store or MemoryObjectStore()
 
         # One metrics registry and one bounded control-plane event log per
         # system; every component records into the shared registry, the
@@ -366,6 +386,51 @@ class ManuSystem:
         self.telemetry = MetricsRegistry()
         self.event_log = EventLog(self.clock)
 
+        # Durable substrates, composed as Retrying(Faulty(real)): the fault
+        # plane injects at the infrastructure boundary (S3 / etcd / Kafka
+        # stand-ins), the typed retry plane absorbs exactly the transients it
+        # is specified to absorb.  These three — plus the clock — are the
+        # only things that survive ``restart()``; every Manu *process* is
+        # rebuilt from them.
+        self.injector = injector
+        raw_store: ObjectStore = store or MemoryObjectStore()
+        raw_meta = MetaStore(self.clock)
+        raw_broker = LogBroker()
+        if injector is not None:
+            injector.bind(
+                metrics=self.telemetry, event_log=self.event_log, clock=self.clock
+            )
+            raw_store = FaultyObjectStore(raw_store, injector)
+            raw_meta = FaultyMetaStore(raw_meta, injector)
+            raw_broker = FaultyLogBroker(raw_broker, injector)
+        policy = self.config.retry_policy or RetryPolicy()
+        sleep = default_sleep(self.config.threaded)
+        self.store: ObjectStore = RetryingObjectStore(
+            raw_store, policy,
+            metrics=self.telemetry, event_log=self.event_log, sleep=sleep,
+        )
+        self.meta = RetryingMetaStore(
+            raw_meta, policy,
+            metrics=self.telemetry, event_log=self.event_log, sleep=sleep,
+        )
+        self.broker = RetryingLogBroker(
+            raw_broker, policy,
+            metrics=self.telemetry, event_log=self.event_log, sleep=sleep,
+        )
+
+        self._build_processes()
+        self.collections: dict[str, ManuCollection] = {}
+
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        if self.config.threaded:
+            self.start_threads()
+
+    def _build_processes(self) -> None:
+        """Construct every Manu *process* — coordinators, worker nodes, the
+        proxy — on top of the durable substrates.  Called at boot and again
+        by ``restart()``: processes hold only soft state, reconstructible
+        from the meta store, object store and log backbone."""
         self.root_coord = RootCoordinator(self.broker, self.meta, self.tso)
         self.data_coord = DataCoordinator(self.broker, self.meta, self.tso, self.clock)
         self.index_coord = IndexCoordinator(
@@ -417,13 +482,7 @@ class ManuSystem:
         )
         self.batcher = BatchingProxy(self.proxy)
         self.time_travel = TimeTravel(self.broker, self.store)
-        self.collections: dict[str, ManuCollection] = {}
         self._qn_counter = self.config.num_query_nodes
-
-        self._threads: list[threading.Thread] = []
-        self._stop = threading.Event()
-        if self.config.threaded:
-            self.start_threads()
 
     # ------------------------------------------------------------- topology
     def _new_query_node(self) -> QueryNode:
@@ -477,6 +536,121 @@ class ManuSystem:
         """Simulated crash: no dereg — the lease must expire (failover test)."""
         self.query_nodes[node_id].alive = False
 
+    # ----------------------------------------------- crash/restart (chaos)
+    @staticmethod
+    def _locate(nodes: list, node_id: str) -> int:
+        for i, n in enumerate(nodes):
+            if getattr(n, "node_id", getattr(n, "logger_id", None)) == node_id:
+                return i
+        raise KeyError(f"no such node: {node_id}")
+
+    def _emit_lifecycle(self, what: str, kind: str, node_id: str) -> None:
+        self.telemetry.inc(f"node_{what}_total", labels={"kind": kind})
+        self.event_log.emit(f"node_{what}", "system", node_kind=kind, node=node_id)
+
+    def kill_logger(self, logger_id: str) -> None:
+        self.loggers[self._locate(self.loggers, logger_id)].alive = False
+        self._emit_lifecycle("killed", "logger", logger_id)
+
+    def restart_logger(self, logger_id: str) -> None:
+        """Replace a dead logger with a fresh process.  Loggers hold no
+        recoverable state: PK allocation watermarks are checkpointed in the
+        meta store (``id_alloc/``), so the replacement allocates fresh pks
+        and rejects no-match deletes correctly from its first request."""
+        i = self._locate(self.loggers, logger_id)
+        # replaced in place: the proxy routes over this exact list object
+        self.loggers[i] = Logger(
+            logger_id, self.broker, self.tso, self.data_coord, self.clock,
+            self.config.tick_interval_ms, metrics=self.telemetry,
+        )
+        self._emit_lifecycle("restarted", "logger", logger_id)
+
+    def kill_data_node(self, node_id: str) -> None:
+        self.data_nodes[self._locate(self.data_nodes, node_id)].alive = False
+        self._emit_lifecycle("killed", "data", node_id)
+
+    def restart_data_node(self, node_id: str) -> None:
+        """Rebuild a data node purely from the log backbone: re-subscribe
+        its DML channels from position 0.  Replay skips the insert halves of
+        segments already archived to binlog and rebuilds the growing ones
+        (delete halves always re-apply).  Afterwards, re-announce any binlog
+        whose ``segment_sealed`` message died with the old process."""
+        i = self._locate(self.data_nodes, node_id)
+        old = self.data_nodes[i]
+        dn = DataNode(node_id, self.broker, self.store, self.tso,
+                      self.data_coord, metrics=self.telemetry)
+        for ch in old.subscriptions:
+            dn.subscribe(ch, 0)
+        self.data_nodes[i] = dn
+        self._emit_lifecycle("restarted", "data", node_id)
+        self.reconcile_sealed()
+        if not self.config.threaded:
+            self.run_until_idle()
+
+    def kill_index_node(self, node_id: str) -> None:
+        self.index_nodes[self._locate(self.index_nodes, node_id)].alive = False
+        self._emit_lifecycle("killed", "index", node_id)
+
+    def restart_index_node(self, node_id: str) -> None:
+        """Fresh index node re-reading the coord channel from 0: finished
+        builds are skipped by their surviving CAS claims; claims the dead
+        process leaked mid-build (no ``index/`` meta behind them) are
+        released so the tasks become takeable again."""
+        i = self._locate(self.index_nodes, node_id)
+        for key, claim in list(self.meta.scan("index_claim/").items()):
+            if (claim or {}).get("owner") != node_id:
+                continue
+            _, coll, sid, field_name, _kind = key.split("/")
+            if self.meta.get(f"index/{coll}/{sid}/{field_name}") is None:
+                self.meta.delete(key)
+        self.index_nodes[i] = IndexNode(
+            node_id, self.broker, self.store, self.meta, self.tso,
+            metrics=self.telemetry,
+        )
+        self._emit_lifecycle("restarted", "index", node_id)
+        if not self.config.threaded:
+            self.run_until_idle()
+
+    def kill_compaction_node(self, node_id: str) -> None:
+        self.compaction_nodes[self._locate(self.compaction_nodes, node_id)].alive = False
+        self._emit_lifecycle("killed", "compaction", node_id)
+
+    def restart_compaction_node(self, node_id: str) -> None:
+        """Fresh compaction node replaying the coord channel (the durable
+        task queue) from 0: done-markers keep finished tasks finished, and
+        clearing the dead owner's stale claims lets it re-execute whatever
+        the crash interrupted — the rewrite is deterministic and its binlog
+        writes are atomic, so re-execution simply overwrites."""
+        i = self._locate(self.compaction_nodes, node_id)
+        self.compaction_coord.clear_stale_claims(owner=node_id)
+        self.compaction_nodes[i] = CompactionNode(
+            node_id, self.broker, self.store, self.meta, self.tso,
+            metrics=self.telemetry,
+        )
+        self._emit_lifecycle("restarted", "compaction", node_id)
+        if not self.config.threaded:
+            self.run_until_idle()
+
+    def restart_query_node(self, node_id: str) -> str:
+        """Crash-restart one query node: expire the dead incarnation's
+        lease and reassign its replicas to survivors, then register a fresh
+        process under the same id and let the reconciler move work back."""
+        self.query_nodes.pop(node_id, None)
+        st = self.query_coord.nodes.get(node_id)
+        if st is not None:
+            self.meta.revoke_lease(st.lease_id)
+            self.query_coord.handle_failures()
+        qn = QueryNode(node_id, self.broker, self.store, self.tso,
+                       slice_rows=self.config.slice_rows,
+                       metrics=self.telemetry)
+        self.query_nodes[node_id] = qn
+        self.query_coord.register_node(node_id)
+        self.query_coord.reconciler.reconcile()
+        self._emit_lifecycle("restarted", "query", node_id)
+        if not self.config.threaded:
+            self.run_until_idle()
+        return node_id
+
     def recover_failures(self) -> list[str]:
         """Expire dead leases and reconcile (the query coordinator's
         watchdog): failed nodes' segments are CAS-reassigned to surviving
@@ -493,6 +667,166 @@ class ManuSystem:
         if not self.config.threaded:
             self.run_until_idle()
         return report["dead"]
+
+    # ------------------------------------------------------ crash recovery
+    def reconcile_sealed(self) -> int:
+        """Re-announce sealed binlogs the metadata plane never learned
+        about: a data node crashing between the binlog flush and its
+        ``segment_sealed`` publish leaves a fully durable segment invisible.
+        The binlog's meta object is written *last*, so its presence proves
+        the flush completed; a segment with binlog meta but no ``segment/``
+        record owes the system a seal announcement.  Pre-allocated targets
+        of still-pending compaction tasks are excluded — those binlogs are
+        half-finished rewrite output that re-execution will overwrite."""
+        from .binlog import read_binlog_meta
+
+        pending_targets = {
+            (t["collection"], sid)
+            for t in self.compaction_coord.pending.values()
+            for sid in t.get("targets", ())
+        }
+        healed = 0
+        for m in self.store.list("binlog/"):
+            parts = m.key.split("/")
+            if len(parts) != 4 or parts[3] != "meta":
+                continue
+            coll, sid = parts[1], int(parts[2])
+            if (coll, sid) in pending_targets:
+                continue
+            if self.meta.get(f"collection/{coll}") is None:
+                continue  # dropped collections stay dropped
+            if self.meta.get(f"segment/{coll}/{sid}") is not None:
+                continue  # already known (sealed or retired)
+            bm = read_binlog_meta(self.store, coll, sid)
+            part = bm.get("partition", DEFAULT_PARTITION)
+            if self.meta.get(f"partition/{coll}/{part}") is None:
+                continue  # dropped partitions stay dropped
+            self.broker.publish(
+                COORD_CHANNEL,
+                LogEntry(
+                    ts=self.tso.next(),
+                    type=EntryType.COORD,
+                    payload={
+                        "msg": "segment_sealed",
+                        "collection": coll,
+                        "segment_id": sid,
+                        "shard": bm.get("shard", 0),
+                        "partition": part,
+                        "num_rows": bm["num_rows"],
+                        "binlog_keys": {},
+                        "checkpoint_pos": bm["checkpoint_pos"],
+                        "min_ts": bm.get("min_ts", 0),
+                        "max_ts": bm.get("max_ts", 0),
+                    },
+                ),
+            )
+            self.data_coord.on_sealed(
+                coll, sid, bm["num_rows"], part, shard=bm.get("shard", 0)
+            )
+            self.telemetry.inc("recovery_seals_reconciled_total")
+            self.event_log.emit(
+                "seal_reconciled", "system", collection=coll, segment_id=sid
+            )
+            healed += 1
+        return healed
+
+    def restart(self) -> dict:
+        """Cold-restart the whole system: every process — coordinators,
+        worker nodes, the proxy — is discarded and rebuilt purely from the
+        durable substrates (meta store, object store, log backbone).  This
+        is the paper's central recovery claim made executable: everything is
+        a log subscriber, so everything recovers by re-reading its durable
+        inputs (§3.3).
+
+        What carries over: the clock, the three substrates, the metrics
+        registry and event log (so recovery counters remain visible).  What
+        is reconstructed: collections (from ``collection/`` meta, schema
+        included), segment lifecycle state (meta + WAL scan), index state,
+        serving placement (soft state, re-placed via the reconciler's CAS
+        path), pending compactions (coord-channel replay + stale-claim
+        release), growing rows (WAL replay on data and query nodes), and
+        pinned time-travel windows (retired segments re-loaded +
+        re-retired).  Session watermarks (``last_write_ts``) do not survive
+        — a restart ends client sessions."""
+        was_threaded = bool(self._threads)
+        if was_threaded:
+            self.stop_threads()
+        # The dead proxy's meta watches must stop firing into it.
+        for cancel in (
+            self.proxy._cancel_watch, self.proxy._cancel_partition_watch,
+        ):
+            try:
+                cancel()
+            except Exception:
+                pass
+        # Fresh TSO floored at the durable log frontier: timestamps stay
+        # strictly increasing across the restart even under a frozen
+        # manual clock.
+        self.tso = TSO(self.clock)
+        frontier = 0
+        for ch in self.broker.channels():
+            end = self.broker.end_position(ch)
+            if end:
+                frontier = max(frontier, self.broker.read(ch, end - 1)[0].ts)
+        self.tso.advance_to(frontier)
+        # Serving placement is soft state.  Stale assignment records would
+        # make the reconciler believe the fresh (same-named) query nodes
+        # already hold their segments and skip the loads; drop them and let
+        # ``heal()`` re-place everything through the normal CAS path.
+        for key in list(self.meta.scan("assignment/")):
+            self.meta.delete(key)
+
+        self._build_processes()
+
+        # Collections come back from the meta store alone.
+        self.collections = {}
+        for key, rec in sorted(self.meta.scan("collection/").items()):
+            name = key.split("/", 1)[1]
+            info = CollectionInfo(
+                name=name,
+                schema=Schema.from_dict(rec["schema"]),
+                num_shards=int(rec["num_shards"]),
+                metric=Metric(rec["metric"]),
+                created_ts=int(rec.get("created_ts", 0)),
+                replication_factor=int(rec.get("replication_factor", 1)),
+            )
+            for f, s in self.index_coord.index_specs(name).items():
+                info.index_specs[f] = {
+                    "kind": s["kind"], "params": dict(s.get("params") or {}),
+                }
+            self.collections[name] = ManuCollection(self, info)
+            # Data nodes re-archive from scratch: replay from position 0,
+            # skipping inserts whose segments are already durable in binlog.
+            for shard in range(info.num_shards):
+                dn = self.data_nodes[shard % len(self.data_nodes)]
+                dn.subscribe(dml_channel(name, shard), 0)
+
+        report: dict = {"tso_frontier": frontier}
+        report["data"] = self.data_coord.recover_state(store=self.store)
+        report["index"] = self.index_coord.recover_state()
+        report["query"] = self.query_coord.recover_state()
+        # The compaction coordinator's durable queue IS the coord channel:
+        # one replaying step rebuilds pending tasks (done-markers keep
+        # finished ones finished); clearing stale claims un-wedges whatever
+        # a dead node held mid-rewrite.
+        self.compaction_coord.step()
+        report["claims_cleared"] = self.compaction_coord.clear_stale_claims()
+        report["seals_reconciled"] = self.reconcile_sealed()
+        self.query_coord.reconciler.reconcile()
+        self.run_until_idle()
+        # Pinned time-travel windows: retired-but-unreclaimed segments are
+        # re-loaded and immediately re-retired so reads pinned before their
+        # hot-swap still see the MVCC window [visible_from, retired_at).
+        report["retired_reloaded"] = self.query_coord.recover_retired(self.store)
+        self.run_until_idle()
+        self.telemetry.inc("system_restarts_total")
+        self.event_log.emit(
+            "system_restarted", "system",
+            **{k: v for k, v in report.items() if isinstance(v, (int, float))},
+        )
+        if was_threaded or self.config.threaded:
+            self.start_threads()
+        return report
 
     # ----------------------------------------------------------------- DDL
     def create_collection(
@@ -655,19 +989,46 @@ class ManuSystem:
                 if qn.alive and node_id in self.query_coord.nodes:
                     self.query_coord.heartbeat(node_id)
             for lg in self.loggers:
-                lg.tick(self.broker.channels("dml/"))
+                if not lg.alive:
+                    continue
+                try:
+                    lg.tick(self.broker.channels("dml/"))
+                except Crash as c:
+                    self._mark_crashed("logger", lg, c)
             for dn in self.data_nodes:
-                progress |= dn.step()
+                progress |= self._crashable_step("data", dn)
             progress |= self.index_coord.step()
             for ix in self.index_nodes:
-                progress |= ix.step()
+                progress |= self._crashable_step("index", ix)
             progress |= self.compaction_coord.step()
             for cn in self.compaction_nodes:
-                progress |= cn.step()
+                progress |= self._crashable_step("compaction", cn)
             progress |= self.query_coord.step()
             for qn in self.query_nodes.values():
-                progress |= qn.step()
+                progress |= self._crashable_step("query", qn)
         return progress
+
+    def _crashable_step(self, kind: str, node) -> bool:
+        """Step one worker node, converting an injected ``Crash`` into that
+        node's death.  Like a real kill -9 the exception runs no cleanup in
+        the node (``Crash`` is a BaseException); whatever it leaked — claims,
+        half-applied batches — is the recovery path's problem.  Coordinator
+        steps are deliberately NOT guarded: a coordinator crash takes the
+        control plane down and the remedy is a full ``restart()``."""
+        try:
+            return bool(node.step())
+        except Crash as c:
+            self._mark_crashed(kind, node, c)
+            return True
+
+    def _mark_crashed(self, kind: str, node, crash: Crash) -> None:
+        node.alive = False
+        node_id = getattr(node, "node_id", getattr(node, "logger_id", "?"))
+        self.telemetry.inc("node_crashes_total", labels={"kind": kind})
+        self.event_log.emit(
+            "node_crashed", "system", node_kind=kind, node=node_id,
+            site=crash.site, key=crash.key,
+        )
 
     def run_until_idle(self, max_rounds: int = 10_000) -> int:
         rounds = 0
@@ -706,6 +1067,38 @@ class ManuSystem:
         self.event_log.emit(
             "wait_idle", "system", polls=polls, drained=False,
         )
+        raise TimeoutError(
+            self._diagnostic_dump(f"wait_idle timed out after {timeout_s}s")
+        )
+
+    def _diagnostic_dump(self, reason: str) -> str:
+        """One-stop timeout diagnosis: which channels still hold entries,
+        which subscribers lag, what work is pending, and the last few
+        control-plane events — so a hung wait points at its culprit instead
+        of just saying 'timed out'."""
+        lines = [reason]
+        stats = self.broker.stats()
+        lines.append(
+            "channel entries: "
+            + str({ch: s["entries"] for ch, s in sorted(stats.items())})
+        )
+        for node_id, qn in sorted(self.query_nodes.items()):
+            lags = {
+                ch: sub.lag()
+                for ch, sub in qn.subscriptions.items()
+                if sub.lag()
+            }
+            if lags or not qn.alive:
+                state = "alive" if qn.alive else "dead"
+                lines.append(f"query node {node_id} [{state}] lag: {lags}")
+        lines.append(
+            f"pending: index_tasks={len(self.index_coord.pending_tasks)}"
+            f" compactions={len(self.compaction_coord.pending)}"
+            f" compaction_lag={self.compaction_coord.lag()}"
+        )
+        for ev in self.event_log.query()[-10:]:
+            lines.append(f"event {ev.kind} src={ev.source} {ev.detail}")
+        return "\n  ".join(lines)
 
     # --------------------------------------------------- compaction & GC
     def compact(self, name: str) -> dict:
@@ -826,9 +1219,12 @@ class ManuSystem:
             if isinstance(self.clock, ManualClock):
                 self.clock.advance(max(self.config.tick_interval_ms, 1))
             for lg in self.loggers:
-                lg.tick(channels)
+                if lg.alive:  # a killed logger emits no ticks
+                    lg.tick(channels)
             self.pump()
-        raise TimeoutError("consistency wait did not converge")
+        raise TimeoutError(
+            self._diagnostic_dump("consistency wait did not converge")
+        )
 
     def _threaded_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:
         channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]

@@ -122,7 +122,12 @@ class FileObjectStore(ObjectStore):
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
         self._lock = threading.RLock()
+        self._tmp_seq = 0
+        self.put_count = 0
+        self.get_count = 0
         self.delete_count = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
         self.bytes_deleted = 0
 
     def _path(self, key: str) -> str:
@@ -134,10 +139,24 @@ class FileObjectStore(ObjectStore):
         path = self._path(key)
         with self._lock:
             os.makedirs(os.path.dirname(path), exist_ok=True)
-            tmp = path + ".tmp"
-            with open(tmp, "wb") as f:
-                f.write(data)
-            os.replace(tmp, path)  # atomic publish, like S3 PUT
+            # Unique tmp name per put: a crash mid-write can only ever strand
+            # a private .tmp file (skipped by list/get), never tear the
+            # published object, and concurrent puts of one key can't collide
+            # on the staging file.  os.replace is the atomic commit point.
+            self._tmp_seq += 1
+            tmp = f"{path}.{os.getpid()}.{self._tmp_seq}.tmp"
+            try:
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, path)  # atomic publish, like S3 PUT
+            except BaseException:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+                raise
+            self.put_count += 1
+            self.bytes_written += len(data)
         return ObjectMeta(key, len(data), _etag(data))
 
     def get(self, key: str) -> bytes:
@@ -145,7 +164,11 @@ class FileObjectStore(ObjectStore):
         if not os.path.isfile(path):
             raise KeyError(f"object not found: {key}")
         with open(path, "rb") as f:
-            return f.read()
+            data = f.read()
+        with self._lock:
+            self.get_count += 1
+            self.bytes_read += len(data)
+        return data
 
     def exists(self, key: str) -> bool:
         return os.path.isfile(self._path(key))

@@ -153,6 +153,10 @@ class QueryNode:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.subscriptions: dict[str, Subscription] = {}
         self.coord_sub = Subscription(broker, "coord") if broker.has_channel("coord") else None
+        # LSN-keyed dedup: highest applied position per channel ("coord"
+        # included).  The broker is at-least-once — duplicate delivery is an
+        # injectable fault — so re-delivered entries must be no-ops.
+        self._applied_pos: dict[str, int] = {}
         self.sealed: dict[tuple[str, int], SealedHandle] = {}
         self.growing: dict[tuple[str, int], GrowingState] = {}
         # Delta deletes for rows living in sealed segments:
@@ -183,9 +187,13 @@ class QueryNode:
     def subscribe(self, channel: str, from_position: int = 0) -> None:
         if channel not in self.subscriptions:
             self.subscriptions[channel] = Subscription(self.broker, channel, from_position)
+            # A (re-)subscription is an intentional replay: accept entries
+            # from its start position even if we consumed further before.
+            self._applied_pos[channel] = from_position - 1
 
     def unsubscribe(self, channel: str) -> None:
         self.subscriptions.pop(channel, None)
+        self._applied_pos.pop(channel, None)
 
     def watermark(self, collection: str) -> int:
         """Min last-time-tick over this node's channels for the collection."""
@@ -202,11 +210,26 @@ class QueryNode:
             return False
         progress = False
         if self.coord_sub is not None:
+            watermark = self._applied_pos.get("coord", -1)
             for entry in self.coord_sub.poll():
+                if entry.position <= watermark:
+                    self.metrics.inc("log_dedup_skipped_total",
+                                     labels={"node": self.node_id})
+                    continue
                 progress |= self._handle_coord(entry)
+                watermark = entry.position
+            self._applied_pos["coord"] = watermark
         for sub in list(self.subscriptions.values()):
+            watermark = self._applied_pos.get(sub.channel, -1)
             for entry in sub.poll():
+                if entry.position <= watermark:
+                    self.metrics.inc("log_dedup_skipped_total",
+                                     labels={"node": self.node_id})
+                    continue
                 progress |= self._consume(entry)
+                watermark = entry.position
+            if sub.channel in self.subscriptions:
+                self._applied_pos[sub.channel] = watermark
         progress |= self._build_slice_indexes()
         return progress
 
@@ -219,6 +242,15 @@ class QueryNode:
             # Another node owns the sealed copy now: hand off our growing rows.
             if p.get("node_id") != self.node_id:
                 self.drop_growing(p["collection"], p["segment_id"])
+            return True
+        if msg == "tombstones":
+            # Broadcast mirror of a delete/upsert-delete-half (same LSN as
+            # the per-shard DML entries): placement is not shard-affine, so
+            # a node can serve a sealed segment of a shard whose DML channel
+            # it does not own — this is how it still learns about the kills.
+            # add_tombstone/Segment.delete dedup (pk, ts), so nodes that DO
+            # own the channel apply the pair of deliveries idempotently.
+            self._apply_delete(p["collection"], p["pk"], entry.ts)
             return True
         if msg == "tombstones_folded":
             # Broadcast: a compaction folded these tombstones into a rewritten

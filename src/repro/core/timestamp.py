@@ -134,6 +134,17 @@ class TSO:
     def next_batch(self, n: int) -> list[int]:
         return [self.next() for _ in range(n)]
 
+    def advance_to(self, ts: int) -> None:
+        """Floor the oracle at ``ts``: every subsequently issued timestamp is
+        strictly greater.  Crash recovery seeds a fresh TSO from the largest
+        timestamp found in the durable log so ordering survives a restart
+        even under a frozen manual clock."""
+        with self._lock:
+            p, l = physical_of(ts), logical_of(ts)
+            if (p, l) > (self._last_physical, self._last_logical):
+                self._last_physical = p
+                self._last_logical = l
+
     def last_issued(self) -> int:
         with self._lock:
             return pack(self._last_physical, self._last_logical)

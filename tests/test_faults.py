@@ -1,0 +1,338 @@
+"""Fault-injection plane + typed retry/backoff (``core/faults.py``,
+``core/retry.py``): seeded determinism, step/op addressing, the
+retryable-vs-fatal taxonomy, backoff shape, duplicate delivery, CAS
+conflict storms, and the atomic ``FileObjectStore.put`` (torn-write
+regression)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ManuConfig, ManuSystem
+from repro.core.faults import (
+    Crash,
+    FaultInjector,
+    FaultyLogBroker,
+    FaultyMetaStore,
+    FaultyObjectStore,
+)
+from repro.core.log import LogBroker, LogEntry, EntryType, Subscription
+from repro.core.meta_store import MetaStore
+from repro.core.object_store import FileObjectStore, MemoryObjectStore
+from repro.core.retry import (
+    RetryExhaustedError,
+    RetryingMetaStore,
+    RetryingObjectStore,
+    RetryPolicy,
+    TransientStoreError,
+)
+from repro.core.telemetry import EventLog, MetricsRegistry
+from repro.core.timestamp import ManualClock
+
+
+# ------------------------------------------------------------- injector
+
+
+def _drive(injector, n=200):
+    """Fixed call pattern; returns the op indices where faults fired."""
+    fired = []
+    for i in range(n):
+        site = ("object_store.put", "meta.get", "log.read")[i % 3]
+        if injector.check(site, f"key-{i}") is not None:
+            fired.append(injector.ops)
+    return fired
+
+
+def _seeded(seed):
+    inj = FaultInjector(seed=seed)
+    inj.transient("", 0.2)
+    return inj
+
+
+def test_injector_same_seed_same_faults():
+    a = _drive(_seeded(42))
+    b = _drive(_seeded(42))
+    c = _drive(_seeded(43))
+    assert a == b
+    assert a != c
+    assert a  # at 20% over 200 ops something fired
+
+
+def test_injector_step_and_op_addressing():
+    inj = FaultInjector()
+    inj.crash_at("object_store.put", 3)  # 3rd matching call
+    assert inj.check("object_store.put", "a") is None
+    assert inj.check("object_store.get", "b") is None  # other site: no count
+    assert inj.check("object_store.put", "b") is None
+    rule = inj.check("object_store.put", "c")
+    assert rule is not None and rule.kind == "crash"
+    # max_fires=1: never again
+    assert inj.check("object_store.put", "d") is None
+
+    inj2 = FaultInjector()
+    inj2.crash_at_op(5)  # 5th faultable op anywhere
+    for i in range(4):
+        assert inj2.check(f"site-{i}", "k") is None
+    assert inj2.check("anything", "k").kind == "crash"
+
+
+def test_injector_burst_cap_lets_retries_converge():
+    inj = FaultInjector()
+    inj.transient("object_store.put", prob=1.0, burst=2)
+    assert inj.check("object_store.put", "k") is not None
+    assert inj.check("object_store.put", "k") is not None
+    assert inj.check("object_store.put", "k") is None  # 3rd in a row suppressed
+    assert inj.check("object_store.put", "k") is not None  # streak reset
+
+
+def test_injector_disarm_and_telemetry():
+    metrics, events = MetricsRegistry(), EventLog(ManualClock())
+    inj = FaultInjector(metrics=metrics, event_log=events)
+    inj.transient("meta.put", prob=1.0, burst=100)
+    assert inj.check("meta.put", "x") is not None
+    inj.disarm()
+    assert inj.check("meta.put", "x") is None
+    inj.arm()
+    assert inj.check("meta.put", "x") is not None
+    assert metrics.counter_value(
+        "faults_injected_total", labels={"site": "meta.put", "kind": "transient"}
+    ) == 2
+    kinds = [e.kind for e in events.query(kind="fault_injected")]
+    assert len(kinds) == 2
+
+
+# ------------------------------------------------------- retry + wrappers
+
+
+def test_retrying_store_absorbs_transients():
+    metrics = MetricsRegistry()
+    inj = FaultInjector(seed=1, metrics=metrics)
+    inj.transient("object_store.put", prob=1.0, burst=2)  # fail, fail, succeed
+    store = RetryingObjectStore(
+        FaultyObjectStore(MemoryObjectStore(), inj),
+        RetryPolicy(max_attempts=6), metrics=metrics,
+    )
+    meta = store.put("k", b"v")
+    assert meta.size == 1
+    assert store.get("k") == b"v"
+    assert metrics.counter_value(
+        "retry_recovered_total", labels={"site": "object_store.put"}
+    ) >= 1
+    assert metrics.counter_value(
+        "retry_attempts_total", labels={"site": "object_store.put"}
+    ) >= 2
+
+
+def test_retry_budget_exhaustion_is_typed_and_logged():
+    metrics, events = MetricsRegistry(), EventLog(ManualClock())
+    inj = FaultInjector(seed=1)
+    inj.transient("object_store.get", prob=1.0, burst=100)  # never recovers
+    store = RetryingObjectStore(
+        FaultyObjectStore(MemoryObjectStore(), inj),
+        RetryPolicy(max_attempts=3),
+        metrics=metrics, event_log=events,
+    )
+    with pytest.raises(RetryExhaustedError) as ei:
+        store.get("missing")
+    assert ei.value.site == "object_store.get"
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, TransientStoreError)
+    assert metrics.counter_value(
+        "retry_exhausted_total", labels={"site": "object_store.get"}
+    ) == 1
+    assert events.query(kind="retry_exhausted")
+
+
+def test_fatal_errors_propagate_unretried():
+    metrics = MetricsRegistry()
+    store = RetryingObjectStore(MemoryObjectStore(), metrics=metrics)
+    with pytest.raises(KeyError):
+        store.get("nope")  # semantic error, not infrastructure
+    assert metrics.counter_value(
+        "retry_attempts_total", labels={"site": "object_store.get"}
+    ) == 0
+
+
+def test_crash_is_never_absorbed_by_retry():
+    inj = FaultInjector()
+    inj.crash_at("object_store.put", 1)
+    store = RetryingObjectStore(FaultyObjectStore(MemoryObjectStore(), inj))
+    with pytest.raises(Crash):
+        store.put("k", b"v")
+
+
+def test_retry_policy_backoff_shape():
+    import random
+
+    policy = RetryPolicy(base_delay_ms=2.0, multiplier=2.0,
+                         max_delay_ms=10.0, jitter=0.5)
+    rng = random.Random(0)
+    for attempt, nominal in ((1, 2.0), (2, 4.0), (3, 8.0), (4, 10.0), (5, 10.0)):
+        d = policy.delay_ms(attempt, rng)
+        assert nominal * 0.5 <= d <= nominal * 1.5, (attempt, d)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+
+
+def test_cas_conflict_storm_converges():
+    clock = ManualClock()
+    inj = FaultInjector(seed=3)
+    inj.cas_conflicts(prob=1.0, burst=2)  # every CAS loses twice, then wins
+    meta = RetryingMetaStore(FaultyMetaStore(MetaStore(clock), inj))
+    wins, rounds = 0, 0
+    while wins < 3 and rounds < 50:  # a typical coordinator CAS loop
+        rounds += 1
+        rev = meta.get_rev("key")
+        if meta.cas("key", rev, {"v": wins}):
+            wins += 1
+    assert wins == 3
+    assert rounds > 3  # conflicts actually made the loop spin
+    assert meta.get("key") == {"v": 2}
+
+
+def test_duplicate_delivery_rewinds_reads():
+    inj = FaultInjector()
+    inj.duplicates(prob=1.0, rewind=2, max_fires=1)
+    broker = FaultyLogBroker(LogBroker(), inj)
+    broker.create_channel("ch")
+    for i in range(5):
+        broker.publish("ch", LogEntry(ts=i + 1, type=EntryType.TIME_TICK, payload={}))
+    sub = Subscription(broker, "ch")
+    first = sub.poll()  # duplicate rule fires: from_position=0, no rewind room
+    assert [e.ts for e in first] == [1, 2, 3, 4, 5]
+    broker.publish("ch", LogEntry(ts=6, type=EntryType.TIME_TICK, payload={}))
+    inj.duplicates(prob=1.0, rewind=2, max_fires=1)
+    again = sub.poll()  # re-delivers entries 4,5 plus the new 6
+    assert [e.ts for e in again] == [4, 5, 6]
+    # cursor still lands past the end; no livelock
+    assert sub.lag() == 0
+
+
+# ------------------------------------- satellite 1: atomic FileObjectStore
+
+
+def test_file_store_torn_write_regression(tmp_path):
+    """A crash mid-``put`` must never tear or half-publish an object: the
+    write goes to a private ``.tmp`` staged file and ``os.replace`` is the
+    atomic commit point."""
+    store = FileObjectStore(str(tmp_path))
+    store.put("seg/1/meta", b"old")
+
+    real_replace = os.replace
+    calls = {"n": 0}
+
+    def dying_replace(src, dst):
+        calls["n"] += 1
+        raise Crash("object_store.put", 1, "seg/1/meta")
+
+    os.replace = dying_replace
+    try:
+        with pytest.raises(Crash):
+            store.put("seg/1/meta", b"NEW-BUT-NEVER-COMMITTED")
+    finally:
+        os.replace = real_replace
+    assert calls["n"] == 1
+    # the published object is intact, the stranded tmp is invisible
+    assert store.get("seg/1/meta") == b"old"
+    assert [m.key for m in store.list("seg/")] == ["seg/1/meta"]
+    # and a later put of the same key succeeds cleanly
+    store.put("seg/1/meta", b"new")
+    assert store.get("seg/1/meta") == b"new"
+    leftovers = [f for f in os.listdir(tmp_path / "seg" / "1") if ".tmp" in f]
+    assert leftovers == []
+
+
+def test_file_store_interrupted_write_leaves_no_partial(tmp_path, monkeypatch):
+    """Die inside the data write itself (before the commit point): no
+    object appears at all and the staging file is cleaned up."""
+    import builtins
+
+    store = FileObjectStore(str(tmp_path))
+    real_open = builtins.open
+
+    class HalfThenDie:
+        def __init__(self, f):
+            self.f = f
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            self.f.close()
+            return False
+
+        def write(self, data):
+            self.f.write(data[: len(data) // 2])  # torn write...
+            raise Crash("object_store.put", 1, "a/b")  # ...then the kill
+
+    def exploding_open(path, mode="r", *a, **kw):
+        f = real_open(path, mode, *a, **kw)
+        if str(path).endswith(".tmp") and "w" in mode:
+            return HalfThenDie(f)
+        return f
+
+    monkeypatch.setattr(builtins, "open", exploding_open)
+    with pytest.raises(Crash):
+        store.put("a/b", b"0123456789")
+    monkeypatch.undo()
+    assert not store.exists("a/b")
+    assert list(store.list("")) == []
+
+
+# ------------------------------------------------- end-to-end with faults
+
+
+def test_system_absorbs_transient_store_faults(rng):
+    """10% transient faults at every object-store op: the retry plane keeps
+    the whole ingest -> seal -> index -> search pipeline correct."""
+    inj = FaultInjector(seed=11)
+    inj.transient("object_store.put", prob=0.1)
+    inj.transient("object_store.get", prob=0.1)
+    faulty = ManuSystem(
+        ManuConfig(num_query_nodes=2, seal_rows=100, num_shards=2),
+        injector=inj,
+    )
+    oracle = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=100, num_shards=2))
+    vecs = rng.standard_normal((300, 8)).astype(np.float32)
+    q = vecs[:5]
+    for system in (faulty, oracle):
+        coll = system.create_collection("c", dim=8)
+        coll.insert({"vector": vecs})
+        coll.flush()
+        coll.create_index("vector", kind="flat")
+    got = faulty.collections["c"].search(q, limit=10, staleness_ms=0.0)
+    want = oracle.collections["c"].search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(got.pks, want.pks)
+    counters = faulty.metrics().to_dict()["counters"]
+    assert any(k.startswith("faults_injected_total") for k in counters)
+    assert any(k.startswith("retry_recovered_total") for k in counters)
+
+
+def test_system_dedups_duplicate_log_delivery(rng):
+    """An at-least-once broker (duplicate re-delivery on every read chance)
+    must not double-apply rows or tombstones anywhere."""
+    inj = FaultInjector(seed=5)
+    inj.duplicates(prob=0.2, rewind=3)
+    faulty = ManuSystem(
+        ManuConfig(num_query_nodes=2, seal_rows=100, num_shards=2),
+        injector=inj,
+    )
+    oracle = ManuSystem(ManuConfig(num_query_nodes=2, seal_rows=100, num_shards=2))
+    vecs = rng.standard_normal((250, 8)).astype(np.float32)
+    q = vecs[:4]
+    for system in (faulty, oracle):
+        coll = system.create_collection("c", dim=8)
+        coll.insert({"vector": vecs})
+        coll.delete(np.arange(0, 50))
+        coll.flush()
+    # duplicate delivery must not double-apply rows (tombstones don't
+    # shrink segment rows until compaction, so 250 == exactly-once)
+    assert faulty.collections["c"].num_entities() == 250
+    assert oracle.collections["c"].num_entities() == 250
+    got = faulty.collections["c"].search(q, limit=10, staleness_ms=0.0)
+    want = oracle.collections["c"].search(q, limit=10, staleness_ms=0.0)
+    np.testing.assert_array_equal(got.pks, want.pks)
+    assert not ({int(p) for p in got.pks.ravel() if p >= 0} & set(range(50)))

@@ -1,0 +1,431 @@
+"""Crash-restart recovery from the log backbone (tentpole of the
+robustness PR): per-node-class kill/restart, lost-seal reconciliation,
+whole-system ``ManuSystem.restart()`` verified bit-for-bit against an
+uncrashed oracle (including on ``FileObjectStore``), crash-at-every-step
+compaction hot-swap, and the seeded chaos acceptance run."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ManuConfig, ManuSystem
+from repro.core.faults import Crash, FaultInjector
+from repro.core.object_store import FileObjectStore
+
+
+CFG = dict(num_query_nodes=2, seal_rows=100, slice_rows=64, num_shards=2)
+#: CI's chaos-matrix job sweeps this; the default matches the local run.
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "1234"))
+
+
+@pytest.fixture
+def system():
+    return ManuSystem(ManuConfig(**CFG))
+
+
+def ingest(coll, rng, n, dim=8, batch=100):
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    for lo in range(0, n, batch):
+        coll.insert({"vector": vecs[lo : lo + batch]})
+    return vecs
+
+
+def live_pks(res):
+    return {int(pk) for pk in res.pks.ravel().tolist() if pk >= 0}
+
+
+# ------------------------------------------------- per-node-class restart
+
+
+def test_logger_kill_restart(system, rng):
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 150)
+    system.kill_logger("logger-0")
+    # surviving logger keeps taking writes (proxy routes around the corpse)
+    ingest(coll, rng, 50)
+    system.restart_logger("logger-0")
+    ingest(coll, rng, 50)
+    coll.flush()
+    assert coll.num_entities() == 250
+    # PK allocation continued from the meta-store watermark: all unique
+    assert system.meta.get("id_alloc/c")["next"] >= 250
+    events = [e.kind for e in system.events()]
+    assert "node_killed" in events and "node_restarted" in events
+
+
+def test_data_node_kill_restart_replays_wal(system, rng):
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 250)  # 2 sealed (archived) + growing tail
+    coll.flush()
+    ingest(coll, rng, 50)  # growing rows the dead node loses
+    system.kill_data_node("dn-0")
+    system.restart_data_node("dn-0")
+    coll.flush()  # replayed growing rows seal + archive normally
+    assert coll.num_entities() == 300
+    q = vecs[:4]
+    res = coll.search(q, limit=5, staleness_ms=0.0)
+    assert np.array_equal(res.pks[:, 0], np.arange(4))
+
+
+def test_data_node_crash_between_flush_and_seal_announce(rng):
+    """The narrow window the log backbone must close: binlog fully durable,
+    ``segment_sealed`` never published.  ``reconcile_sealed`` detects the
+    orphan binlog (meta object present, no ``segment/`` record) and
+    re-announces it."""
+    inj = FaultInjector(seed=0)
+    system = ManuSystem(ManuConfig(**CFG), injector=inj)
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 250)
+    sealed_before = len(system.data_coord.sealed_segments("c"))
+    # next coord-channel publish is the data node's segment_sealed: the
+    # binlog write (object-store puts) has already landed when it fires
+    inj.crash_at("log.publish", 1, match="coord")
+    system.data_coord.flush("c")
+    system.run_until_idle()
+    inj.disarm()
+    dead = [dn.node_id for dn in system.data_nodes if not dn.alive]
+    assert dead == ["dn-0"]
+    # the orphan: durable binlog, invisible to the metadata plane
+    orphans = [
+        m.key for m in system.store.list("binlog/c/")
+        if m.key.endswith("/meta")
+    ]
+    assert len(orphans) > len(system.data_coord.sealed_segments("c"))
+    system.restart_data_node("dn-0")  # runs reconcile_sealed
+    system.run_until_idle()
+    assert len(system.data_coord.sealed_segments("c")) > sealed_before
+    assert system.telemetry.counter_value("recovery_seals_reconciled_total") >= 1
+    assert [e for e in system.events(kind="seal_reconciled")]
+    assert coll.num_entities() == 250
+    res = coll.search(vecs[:3], limit=5, staleness_ms=0.0)
+    assert np.array_equal(res.pks[:, 0], np.arange(3))
+
+
+def test_index_node_crash_leaks_claim_restart_clears_it(rng):
+    """Crash mid-build leaks the CAS claim (kill -9 runs no cleanup);
+    restart releases claims with no ``index/`` meta behind them so the
+    build re-runs."""
+    inj = FaultInjector(seed=0)
+    system = ManuSystem(ManuConfig(**CFG), injector=inj)
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 250)
+    coll.flush()
+    # first index-file put dies -> claim leaked, no index meta
+    inj.crash_at("object_store.put", 1, match="index/")
+    coll.create_index("vector", kind="ivf_flat", params={"nlist": 4})
+    inj.disarm()
+    assert not system.index_nodes[0].alive
+    leaked = {
+        k: v for k, v in system.meta.scan("index_claim/").items()
+        if v.get("owner") == "in-0"
+    }
+    assert leaked
+    system.restart_index_node("in-0")
+    system.run_until_idle()
+    # every sealed segment ended up indexed
+    sealed = system.data_coord.sealed_segments("c")
+    built = {k for k in system.meta.scan("index/c/")}
+    assert len(built) == len(sealed)
+
+
+def test_compaction_node_crash_restart_reexecutes(rng):
+    inj = FaultInjector(seed=0)
+    system = ManuSystem(ManuConfig(**CFG), injector=inj)
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 400)
+    coll.flush()
+    coll.delete(np.arange(0, 160))
+    before = coll.search(vecs[160:163], limit=8, staleness_ms=0.0)
+    # die on the first rewritten-binlog put: task claimed, nothing swapped
+    inj.crash_at("object_store.put", 1, match="binlog/")
+    coll.compact()
+    inj.disarm()
+    assert not system.compaction_nodes[0].alive
+    assert system.compaction_coord.pending  # task survives the crash
+    system.restart_compaction_node("cn-0")
+    system.run_until_idle()
+    assert not system.compaction_coord.pending
+    after = coll.search(vecs[160:163], limit=8, staleness_ms=0.0)
+    np.testing.assert_array_equal(
+        np.sort(before.pks, 1), np.sort(after.pks, 1)
+    )
+    assert not set(range(160)) & live_pks(after)
+
+
+def test_query_node_crash_restart(system, rng):
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 300)
+    coll.flush()
+    before = coll.search(vecs[:4], limit=5, staleness_ms=0.0)
+    system.kill_query_node("qn-0")
+    system.restart_query_node("qn-0")
+    after = coll.search(vecs[:4], limit=5, staleness_ms=0.0)
+    np.testing.assert_array_equal(before.pks, after.pks)
+    # the fresh incarnation serves again (reconciler rebalanced onto it)
+    assert system.query_nodes["qn-0"].alive
+
+
+# ------------------------------------------------- whole-system restart
+
+
+def _workload(system, rng):
+    """Two collections, partitions, deletes, an index — returns probes."""
+    a = system.create_collection("a", dim=8)
+    b = system.create_collection("b", dim=4)
+    a.create_partition("hot")
+    va = rng.standard_normal((260, 8)).astype(np.float32)
+    a.insert({"vector": va[:200]})
+    a.insert({"vector": va[200:]}, partition="hot")
+    vb = ingest(b, rng, 150, dim=4)
+    a.delete(np.arange(0, 40))
+    a.flush()
+    b.flush()
+    a.create_index("vector", kind="ivf_flat", params={"nlist": 4})
+    return a, b, va, vb
+
+
+def _probe(system, va, vb):
+    a, b = system.collections["a"], system.collections["b"]
+    return (
+        a.search(va[40:45], limit=8, staleness_ms=0.0).pks,
+        a.search(va[200:203], limit=8, staleness_ms=0.0,
+                 partition_names=("hot",)).pks,
+        b.search(vb[:5], limit=8, staleness_ms=0.0).pks,
+    )
+
+
+def test_full_restart_bit_for_bit_vs_oracle(rng):
+    subject = ManuSystem(ManuConfig(**CFG))
+    oracle = ManuSystem(ManuConfig(**CFG))
+    seeds = rng.integers(0, 2**31, 2)
+    _, _, va_s, vb_s = _workload(subject, np.random.default_rng(seeds[0]))
+    _, _, va_o, vb_o = _workload(oracle, np.random.default_rng(seeds[0]))
+
+    report = subject.restart()
+    assert report["data"]["sealed"] >= 2
+    assert subject.telemetry.counter_value("system_restarts_total") == 1
+    assert [e for e in subject.events(kind="system_restarted")]
+
+    for got, want in zip(_probe(subject, va_s, vb_s), _probe(oracle, va_o, vb_o)):
+        np.testing.assert_array_equal(got, want)
+
+    # the restarted system is fully live: writes, flushes, searches
+    rng2 = np.random.default_rng(seeds[1])
+    extra = rng2.standard_normal((30, 8)).astype(np.float32)
+    a2 = subject.collections["a"]
+    a2.insert({"vector": extra})
+    a2.flush()
+    assert a2.num_entities() == 290
+    # schema/partitions/index specs all came back from meta
+    desc = a2.describe()
+    assert set(desc.partitions) == {"_default", "hot"}
+    assert desc.indexes and desc.indexes[0].kind == "ivf_flat"
+
+
+def test_full_restart_on_file_object_store(tmp_path, rng):
+    """The acceptance bar: restart against a directory-backed store — the
+    adaptability story's 'object KV is the local FS' — recovers every
+    collection bit-for-bit."""
+    subject = ManuSystem(ManuConfig(**CFG), store=FileObjectStore(str(tmp_path)))
+    oracle = ManuSystem(ManuConfig(**CFG))
+    _, _, va_s, vb_s = _workload(subject, np.random.default_rng(123))
+    _, _, va_o, vb_o = _workload(oracle, np.random.default_rng(123))
+    before = _probe(subject, va_s, vb_s)
+    subject.restart()
+    after = _probe(subject, va_s, vb_s)
+    want = _probe(oracle, va_o, vb_o)
+    for got_b, got_a, w in zip(before, after, want):
+        np.testing.assert_array_equal(got_b, got_a)
+        np.testing.assert_array_equal(got_a, w)
+    # growing (unflushed) rows also survive via WAL replay
+    a = subject.collections["a"]
+    tail = np.random.default_rng(9).standard_normal((20, 8)).astype(np.float32)
+    a.insert({"vector": tail})
+    subject.restart()
+    assert subject.collections["a"].num_entities() == 280
+
+
+def test_restart_preserves_pinned_time_travel_reads(rng):
+    """Reads pinned before a compaction hot-swap still see the old MVCC
+    window after a full restart (retired segments re-loaded + re-retired)."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll = system.create_collection("c", dim=8)
+    vecs = ingest(coll, rng, 400)
+    coll.flush()
+    pinned = coll.search(vecs[:4], limit=8, staleness_ms=0.0)
+    assert set(range(4)) <= live_pks(pinned)
+    coll.delete(np.arange(0, 160))
+    coll.compact()
+    system.restart()
+    coll = system.collections["c"]
+    replay = coll.search(vecs[:4], limit=8, time_travel_ts=pinned.query_ts)
+    np.testing.assert_array_equal(
+        np.sort(replay.pks, 1), np.sort(pinned.pks, 1)
+    )
+    now = coll.search(vecs[:4], limit=8, staleness_ms=0.0)
+    assert not set(range(160)) & live_pks(now)
+
+
+def test_wait_timeout_raises_diagnostic_dump(system, rng):
+    coll = system.create_collection("c", dim=8)
+    ingest(coll, rng, 50)
+    system.compaction_coord.pending["wedge"] = {
+        "collection": "c", "targets": [], "sources": [],
+    }
+    with pytest.raises(TimeoutError) as ei:
+        system.wait_idle(timeout_s=0.05)
+    msg = str(ei.value)
+    assert "wait_idle timed out" in msg
+    assert "channel entries" in msg
+    assert "compactions=1" in msg
+    assert "event " in msg  # last events included
+    del system.compaction_coord.pending["wedge"]
+
+
+# -------------------------------------- crash-at-every-step compaction
+
+
+def _compaction_scenario(injector=None):
+    # single query node: with one shard, the channel owner is the only node
+    # guaranteed to see tombstones, so placement must stay on it
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=1, seal_rows=60, slice_rows=32,
+                   num_shards=1, num_loggers=1),
+        injector=injector,
+    )
+    coll = system.create_collection("c", dim=4)
+    rng = np.random.default_rng(7)
+    vecs = rng.standard_normal((240, 4)).astype(np.float32)
+    for lo in range(0, 240, 60):
+        coll.insert({"vector": vecs[lo : lo + 60]})
+    coll.flush()
+    coll.delete(np.arange(0, 96))
+    q = vecs[100:103]
+    pin = coll.search(q, limit=8, staleness_ms=0.0)
+    return system, coll, q, pin
+
+
+def _recover(system, injector):
+    """Post-crash recovery: restart whatever died; a coordinator-path crash
+    (Crash escaped ``compact()``) needs the full restart."""
+    injector.disarm()
+    for lg in system.loggers:
+        if not lg.alive:
+            system.restart_logger(lg.logger_id)
+    for dn in system.data_nodes:
+        if not dn.alive:
+            system.restart_data_node(dn.node_id)
+    for ix in system.index_nodes:
+        if not ix.alive:
+            system.restart_index_node(ix.node_id)
+    for cn in system.compaction_nodes:
+        if not cn.alive:
+            system.restart_compaction_node(cn.node_id)
+    for qn_id, qn in list(system.query_nodes.items()):
+        if not qn.alive:
+            system.restart_query_node(qn_id)
+
+
+def test_compaction_crash_at_every_step():
+    """Kill the system at EVERY faultable operation inside the compaction
+    window (object-store, meta-store and log-broker calls alike), recover,
+    and require both the post-compaction state and reads pinned before the
+    swap to match a never-crashed oracle exactly."""
+    # oracle + op-window enumeration in one run
+    probe_inj = FaultInjector(seed=0)
+    oracle, ocoll, q, opin = _compaction_scenario(probe_inj)
+    window_start = probe_inj.ops
+    ocoll.compact()
+    window_len = probe_inj.ops - window_start
+    oracle_post = ocoll.search(q, limit=8, staleness_ms=0.0)
+    oracle_pin_replay = ocoll.search(q, limit=8, time_travel_ts=opin.query_ts)
+    np.testing.assert_array_equal(
+        np.sort(oracle_pin_replay.pks, 1), np.sort(opin.pks, 1)
+    )
+    assert window_len > 20
+
+    for op in range(window_start + 1, window_start + window_len + 1):
+        inj = FaultInjector(seed=0)
+        inj.crash_at_op(op)
+        system, coll, q2, pin = _compaction_scenario(inj)
+        np.testing.assert_array_equal(pin.pks, opin.pks)
+        coordinator_died = False
+        try:
+            coll.compact()
+        except Crash:
+            coordinator_died = True
+        _recover(system, inj)
+        if coordinator_died:
+            system.restart()
+            coll = system.collections["c"]
+        coll.compact()  # drive the interrupted cycle to completion
+        post = coll.search(q2, limit=8, staleness_ms=0.0)
+        np.testing.assert_array_equal(
+            np.sort(post.pks, 1), np.sort(oracle_post.pks, 1),
+            err_msg=f"post-compaction divergence at crash op {op}",
+        )
+        replay = coll.search(q2, limit=8, time_travel_ts=pin.query_ts)
+        np.testing.assert_array_equal(
+            np.sort(replay.pks, 1), np.sort(opin.pks, 1),
+            err_msg=f"pinned-read divergence at crash op {op}",
+        )
+
+
+# ------------------------------------------------------ chaos acceptance
+
+
+def test_chaos_seeded_kill_every_class_zero_wrong_answers():
+    """The PR's acceptance scenario: a seeded chaos run that kills one node
+    of every class mid-workload while 10% transient store faults and
+    duplicate log delivery fire, and completes with zero wrong search
+    answers versus an uncrashed, fault-free oracle."""
+    inj = FaultInjector(seed=CHAOS_SEED)
+    inj.transient("object_store.put", prob=0.1)
+    inj.transient("object_store.get", prob=0.1)
+    inj.duplicates(prob=0.05, rewind=2)
+    chaos = ManuSystem(ManuConfig(**CFG), injector=inj)
+    oracle = ManuSystem(ManuConfig(**CFG))
+
+    wl = np.random.default_rng(99)
+    vecs = wl.standard_normal((600, 8)).astype(np.float32)
+    queries = wl.standard_normal((5, 8)).astype(np.float32)
+    wrong = 0
+
+    def do(phase, system):
+        coll = (
+            system.create_collection("c", dim=8)
+            if phase == 0 else system.collections["c"]
+        )
+        lo = phase * 120
+        coll.insert({"vector": vecs[lo : lo + 120]})
+        if phase == 2:
+            coll.delete(np.arange(0, 60))
+        if phase == 3:
+            coll.flush()
+            coll.create_index("vector", kind="flat")
+        return coll.search(queries, limit=10, staleness_ms=0.0).pks
+
+    kills = {
+        1: ("kill_logger", "restart_logger", "logger-0"),
+        2: ("kill_data_node", "restart_data_node", "dn-0"),
+        3: ("kill_query_node", "restart_query_node", "qn-1"),
+        4: ("kill_index_node", "restart_index_node", "in-0"),
+    }
+    for phase in range(5):
+        if phase in kills:
+            kill, restart, node = kills[phase]
+            getattr(chaos, kill)(node)
+            getattr(chaos, restart)(node)
+        got = do(phase, chaos)
+        want = do(phase, oracle)
+        wrong += int(not np.array_equal(got, want))
+    assert wrong == 0
+
+    counters = chaos.metrics().to_dict()["counters"]
+    assert any(k.startswith("faults_injected_total") for k in counters)
+    assert any(k.startswith("retry_recovered_total") for k in counters)
+    assert any(k.startswith("node_killed_total") for k in counters)
+    assert any(k.startswith("node_restarted_total") for k in counters)
+    kinds = {e.kind for e in chaos.events()}
+    assert {"fault_injected", "node_killed", "node_restarted"} <= kinds
