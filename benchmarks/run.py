@@ -22,6 +22,7 @@ from . import (
     fig12_grace_time,
     fig13_index_build,
     fig_compaction,
+    fig_filtered,
     fig_ingest,
     fig_recovery,
     kernels_micro,
@@ -37,6 +38,7 @@ MODULES = [
     ("fig12", fig12_grace_time),
     ("fig13", fig13_index_build),
     ("fig_compaction", fig_compaction),
+    ("fig_filtered", fig_filtered),
     ("fig_ingest", fig_ingest),
     ("fig_recovery", fig_recovery),
     ("kernels", kernels_micro),

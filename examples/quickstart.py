@@ -93,6 +93,28 @@ def main() -> None:
     print(f"price<50 within radius {radius:.1f}:", live,
           "prices:", np.round(cheap_near.fields["price"][0][:len(live)], 1))
 
+    # ---- selectivity-adaptive filtered search ---------------------------
+    # Every sealed segment carries attribute-index satellites (built at
+    # seal, persisted next to the binlog).  The planner estimates each
+    # filter's selectivity per segment and picks a strategy: pre-filter
+    # (bitmap-masked scan), post-filter (inflated-k scan, then cut), or
+    # brute (gather the few surviving rows).  ``filter_strategy`` forces
+    # one globally — "price < 25" is tight, so adaptive chooses brute and
+    # matches the forced-brute answer exactly; pre/post run the IVF index
+    # (approximate at nprobe < nlist) and may differ.
+    by_strategy = {}
+    for strategy in (None, "pre", "post", "brute"):
+        by_strategy[strategy] = coll.search(SearchRequest.single(
+            tq, k=5, staleness_ms=0.0, filter="price < 25",
+            filter_strategy=strategy,
+        ))
+    assert np.array_equal(by_strategy[None].pks, by_strategy["brute"].pks)
+    chosen = {k.split('"')[1]: int(v)
+              for k, v in manu.metrics().counters.items()
+              if k.startswith("filter_strategy_total")}
+    print("price<25 top-5 :", by_strategy[None].pks[0],
+          "strategy picks:", chosen)
+
     # ---- deletes, MVCC, time travel ------------------------------------
     victims = strong.pks[0][:2]
     coll.delete(victims)

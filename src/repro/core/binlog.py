@@ -10,6 +10,7 @@ Object layout in the store:
     binlog/<collection>/<segment_id>/meta                 (segment header)
     binlog/<collection>/<segment_id>/col/<field>          (one object per column)
     index/<collection>/<segment_id>/<field>/<index_kind>  (built index files)
+    attr/<collection>/<segment_id>/<field>                (attribute-index satellites)
 """
 
 from __future__ import annotations
@@ -33,6 +34,10 @@ def _meta_key(collection: str, segment_id: int) -> str:
 
 def index_key(collection: str, segment_id: int, field: str, kind: str) -> str:
     return f"index/{collection}/{segment_id}/{field}/{kind}"
+
+
+def attr_key(collection: str, segment_id: int, field: str) -> str:
+    return f"attr/{collection}/{segment_id}/{field}"
 
 
 def _dump_array(arr: np.ndarray) -> bytes:
@@ -111,6 +116,61 @@ def load_segment(
     seg.checkpoint_pos = meta["checkpoint_pos"]
     seg.seal()
     return seg
+
+
+# -- attribute-index satellites ---------------------------------------------
+# Built from scalar columns (pk + 1-D extras) at seal/compaction and persisted
+# next to the binlog; 2-D extras are vector columns and carry no attr index.
+
+
+def _write_attr_satellites(
+    store: ObjectStore, collection: str, segment_id: int, columns: dict[str, np.ndarray]
+) -> dict[str, str]:
+    from ..index.attribute import build_attribute_index  # local: avoid cycle
+
+    keys: dict[str, str] = {}
+    for field, arr in columns.items():
+        arr = np.asarray(arr)
+        if arr.ndim != 1:
+            continue
+        key = attr_key(collection, segment_id, field)
+        store.put(key, build_attribute_index(arr).save())
+        keys[field] = key
+    return keys
+
+
+def write_attr_satellites(store: ObjectStore, seg: Segment) -> dict[str, str]:
+    """Build + persist attribute indexes for a sealed segment's scalar columns."""
+    columns: dict[str, np.ndarray] = {"pk": seg.pks()}
+    for f in seg.extra_fields:
+        columns[f] = seg.extra(f)
+    return _write_attr_satellites(store, seg.collection, seg.segment_id, columns)
+
+
+def rebuild_attr_satellites(
+    store: ObjectStore, collection: str, segment_id: int
+) -> dict[str, str]:
+    """(Re)build attr satellites straight from binlog columns (recovery path)."""
+    meta = read_binlog_meta(store, collection, segment_id)
+    columns = {"pk": read_binlog_column(store, collection, segment_id, "pk")}
+    for f in meta.get("extra_fields", ()):
+        columns[f] = read_binlog_column(store, collection, segment_id, f)
+    return _write_attr_satellites(store, collection, segment_id, columns)
+
+
+def load_attr_satellites(
+    store: ObjectStore, collection: str, segment_id: int, fields
+) -> dict[str, object]:
+    """Load whichever attr satellites exist for ``fields`` (missing ones are
+    simply absent from the result; callers rebuild locally)."""
+    from ..index.attribute import load_attribute_index  # local: avoid cycle
+
+    out: dict[str, object] = {}
+    for f in fields:
+        key = attr_key(collection, segment_id, f)
+        if store.exists(key):
+            out[f] = load_attribute_index(store.get(key))
+    return out
 
 
 def list_segments(store: ObjectStore, collection: str) -> list[int]:

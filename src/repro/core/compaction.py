@@ -32,7 +32,12 @@ from __future__ import annotations
 import numpy as np
 
 from ..kernels import ops
-from .binlog import read_binlog_column, read_binlog_meta, write_segment_binlog
+from .binlog import (
+    read_binlog_column,
+    read_binlog_meta,
+    write_attr_satellites,
+    write_segment_binlog,
+)
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
 from .meta_store import MetaStore, SegmentMap
 from .object_store import ObjectStore
@@ -245,6 +250,7 @@ class CompactionCoordinator:
         self.data_coord.on_compacted(
             coll, sources, targets, partition,
             shard=p.get("shard", 0), compact_ts=p["compact_ts"],
+            attr_fields=p.get("attr_fields"),
         )
         # Done-marker instead of deleting the claim: a restarted coordinator
         # or node replaying the coord channel can tell "completed" apart from
@@ -585,6 +591,7 @@ class CompactionNode:
         targets = list(task["targets"])
         seal_rows = task["seal_rows"]
         out_segments = []
+        attr_fields: list[str] = []
         for i, target in enumerate(targets):
             lo = i * seal_rows
             hi = (i + 1) * seal_rows if i < len(targets) - 1 else n_live
@@ -603,6 +610,7 @@ class CompactionNode:
             seg.checkpoint_pos = checkpoint_pos
             seg.seal()
             write_segment_binlog(self.store, seg)
+            attr_fields = sorted(write_attr_satellites(self.store, seg))
             out_segments.append({"segment_id": target, "num_rows": seg.num_rows})
 
         folded_pks = (
@@ -635,6 +643,7 @@ class CompactionNode:
                     # prunable — a doomed pk living in another segment must
                     # keep its delta-delete entry
                     "folded_pks": folded_pks,
+                    "attr_fields": attr_fields,
                     "built_by": self.node_id,
                 },
             ),
@@ -696,13 +705,19 @@ class GCReaper:
             if sid in protected_of[coll]:
                 report["protected"] += 1
                 continue
-            for prefix in (f"binlog/{coll}/{sid}/", f"index/{coll}/{sid}/"):
+            for prefix in (
+                f"binlog/{coll}/{sid}/",
+                f"index/{coll}/{sid}/",
+                f"attr/{coll}/{sid}/",
+            ):
                 for m in list(self.store.list(prefix)):
                     if self.store.delete(m.key):
                         report["objects"] += 1
                         report["bytes"] += m.size
             self.meta.delete(key)
             self.meta.delete(f"segment/{coll}/{sid}")
+            for ak in list(self.meta.scan(f"attr_index/{coll}/{sid}/")):
+                self.meta.delete(ak)
             self.broker.publish(
                 COORD_CHANNEL,
                 LogEntry(

@@ -288,6 +288,7 @@ class DataCoordinator:
         rows: int,
         partition: str = DEFAULT_PARTITION,
         shard: int = 0,
+        attr_fields=None,
     ) -> None:
         self._to_seal.discard((collection, segment_id))
         self._sealed_rows[(collection, segment_id)] = rows
@@ -301,9 +302,22 @@ class DataCoordinator:
                 "visible_from_ts": 0,
             },
         )
+        self._record_attr_fields(collection, segment_id, rows, attr_fields)
         self.segment_map.apply(
             collection, add=[segment_id], ts=self.tso.last_issued()
         )
+
+    def _record_attr_fields(
+        self, collection: str, segment_id: int, rows: int, attr_fields
+    ) -> None:
+        """Meta-key the segment's attribute-index satellites (mirrors the
+        per-field vector index records) so GC and recovery can enumerate
+        them without listing the object store."""
+        for f in attr_fields or ():
+            self.meta.put(
+                f"attr_index/{collection}/{segment_id}/{f}",
+                {"field": f, "rows": rows, "state": "ready"},
+            )
 
     def allocate_segment_id(self) -> int:
         """Reserve a fresh segment id (compaction rewrite targets)."""
@@ -317,6 +331,7 @@ class DataCoordinator:
         partition: str = DEFAULT_PARTITION,
         shard: int = 0,
         compact_ts: int = 0,
+        attr_fields=None,
     ) -> None:
         """Swap segment identity after a compaction rewrite completed.
 
@@ -351,6 +366,9 @@ class DataCoordinator:
                     "shard": shard,
                     "visible_from_ts": compact_ts,
                 },
+            )
+            self._record_attr_fields(
+                collection, t["segment_id"], t["num_rows"], attr_fields
             )
 
     def flush(self, collection: str) -> list[int]:

@@ -12,7 +12,7 @@ checkpoint positions.
 from __future__ import annotations
 
 from .log import COORD_CHANNEL, EntryType, LogBroker, LogEntry, Subscription
-from .binlog import write_segment_binlog
+from .binlog import write_attr_satellites, write_segment_binlog
 from .object_store import ObjectStore
 from .segment import DEFAULT_PARTITION, Segment
 from .telemetry import MetricsRegistry
@@ -136,6 +136,11 @@ class DataNode:
             t0 = _t.perf_counter()
             seg.seal()
             keys = write_segment_binlog(self.store, seg)
+            # Attribute-index satellites ride behind the binlog meta (the
+            # flush-complete proof): a crash in this window leaves a sealed
+            # binlog without satellites, which reconcile_sealed rebuilds.
+            attr_keys = write_attr_satellites(self.store, seg)
+            self.metrics.inc("data_node_attr_indexes_built_total", len(attr_keys))
             self.metrics.observe(
                 "data_node_seal_flush_us", (_t.perf_counter() - t0) * 1e6
             )
@@ -155,6 +160,7 @@ class DataNode:
                         "partition": seg.partition,
                         "num_rows": seg.num_rows,
                         "binlog_keys": keys,
+                        "attr_keys": attr_keys,
                         "checkpoint_pos": seg.checkpoint_pos,
                         "min_ts": seg.min_ts(),
                         "max_ts": seg.max_ts(),
@@ -162,7 +168,8 @@ class DataNode:
                 ),
             )
             self.data_coord.on_sealed(
-                coll, sid, seg.num_rows, seg.partition, shard=seg.shard
+                coll, sid, seg.num_rows, seg.partition, shard=seg.shard,
+                attr_fields=sorted(attr_keys),
             )
             progress = True
         return progress

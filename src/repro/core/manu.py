@@ -677,8 +677,13 @@ class ManuSystem:
         the flush completed; a segment with binlog meta but no ``segment/``
         record owes the system a seal announcement.  Pre-allocated targets
         of still-pending compaction tasks are excluded — those binlogs are
-        half-finished rewrite output that re-execution will overwrite."""
-        from .binlog import read_binlog_meta
+        half-finished rewrite output that re-execution will overwrite.
+
+        Attribute-index satellites ride the same window: they are written
+        *after* the binlog meta, so an orphaned seal may have none (or only
+        some) of them.  Reconciliation rebuilds the full satellite set from
+        the binlog columns before re-announcing."""
+        from .binlog import read_binlog_meta, rebuild_attr_satellites
 
         pending_targets = {
             (t["collection"], sid)
@@ -701,6 +706,7 @@ class ManuSystem:
             part = bm.get("partition", DEFAULT_PARTITION)
             if self.meta.get(f"partition/{coll}/{part}") is None:
                 continue  # dropped partitions stay dropped
+            attr_fields = sorted(rebuild_attr_satellites(self.store, coll, sid))
             self.broker.publish(
                 COORD_CHANNEL,
                 LogEntry(
@@ -721,11 +727,49 @@ class ManuSystem:
                 ),
             )
             self.data_coord.on_sealed(
-                coll, sid, bm["num_rows"], part, shard=bm.get("shard", 0)
+                coll, sid, bm["num_rows"], part, shard=bm.get("shard", 0),
+                attr_fields=attr_fields,
             )
             self.telemetry.inc("recovery_seals_reconciled_total")
             self.event_log.emit(
                 "seal_reconciled", "system", collection=coll, segment_id=sid
+            )
+            healed += 1
+        return healed
+
+    def heal_attr_satellites(self) -> int:
+        """Rebuild missing/partial attribute-index satellites for segments
+        the metadata plane already knows.  A crash cannot leave a *stale*
+        satellite (segments are immutable once sealed and satellites are
+        rebuilt wholesale), but it can leave an announced segment from
+        before the attr subsystem existed, or a partially-written satellite
+        set whose meta records never landed.  Returns segments healed."""
+        from .binlog import attr_key, rebuild_attr_satellites
+
+        healed = 0
+        for key, rec in sorted(self.meta.scan("segment/").items()):
+            if rec.get("state") != "sealed":
+                continue
+            _, coll, sid_s = key.split("/")
+            sid = int(sid_s)
+            if not self.store.exists(f"binlog/{coll}/{sid}/meta"):
+                continue
+            recorded = [
+                k.rsplit("/", 1)[1]
+                for k in self.meta.scan(f"attr_index/{coll}/{sid}/")
+            ]
+            intact = recorded and all(
+                self.store.exists(attr_key(coll, sid, f)) for f in recorded
+            )
+            if intact:
+                continue
+            fields = sorted(rebuild_attr_satellites(self.store, coll, sid))
+            self.data_coord._record_attr_fields(
+                coll, sid, int(rec.get("rows", 0)), fields
+            )
+            self.telemetry.inc("recovery_attr_satellites_rebuilt_total")
+            self.event_log.emit(
+                "attr_satellites_healed", "system", collection=coll, segment_id=sid
             )
             healed += 1
         return healed
@@ -812,6 +856,7 @@ class ManuSystem:
         self.compaction_coord.step()
         report["claims_cleared"] = self.compaction_coord.clear_stale_claims()
         report["seals_reconciled"] = self.reconcile_sealed()
+        report["attr_healed"] = self.heal_attr_satellites()
         self.query_coord.reconciler.reconcile()
         self.run_until_idle()
         # Pinned time-travel windows: retired-but-unreclaimed segments are

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
@@ -96,6 +97,10 @@ class Proxy:
         self._cancel_partition_watch = meta.watch("partition/", self._on_partition)
         for key in meta.scan("partition/"):
             self._on_partition(key, True)
+        # Compiled-filter LRU: (collection, expr string) -> FilterExpr.
+        # Filters repeat heavily across requests (dashboards, paginated
+        # clients), so parse+validate once and ship the compiled tree.
+        self._filter_cache: "OrderedDict[tuple[str, str], object]" = OrderedDict()
 
     def _on_meta(self, key: str, value) -> None:
         name = key.split("/", 1)[1]
@@ -223,6 +228,7 @@ class Proxy:
             )
         # Never mutate the caller's request object — it may be reused.
         active_filter = request.filter if request.filter is not None else filter_expr
+        active_fexpr = self._compile_filter(info.name, active_filter)
         self._verify(info.name)
         request.validate(info.schema)
         if request.partition_names:
@@ -267,7 +273,7 @@ class Proxy:
                 node_trace = (trace_ctx, span)
             node_req = NodeSearchRequest.from_request(
                 info.schema, info.name, request, metric, guarantee,
-                filter_masks=self._filters(node, info, active_filter),
+                filter=active_fexpr,
                 segments=tuple(sorted(sids)) if sids is not None else None,
                 trace=node_trace,
                 hedged=hedged,
@@ -702,30 +708,32 @@ class Proxy:
             out[f] = _mask_fill(vals, hit)
         return out
 
-    def _filters(self, node: QueryNode, info: CollectionInfo, filter_expr):
-        """Resolve an attribute filter to per-segment row masks on a node."""
+    _FILTER_CACHE_CAP = 256
+
+    def _compile_filter(self, collection: str, filter_expr):
+        """Compile an attribute filter once per (collection, expr string).
+
+        The LRU holds the parsed+validated :class:`FilterExpr`; repeated
+        requests with the same filter skip the ``ast.parse`` entirely.
+        Already-compiled expressions pass through untouched."""
         if filter_expr is None:
             return None
         from ..index.attribute import FilterExpr
 
-        expr = filter_expr if isinstance(filter_expr, FilterExpr) else FilterExpr(filter_expr)
-        masks: dict[int, np.ndarray] = {}
-        attr_fields = [f.name for f in info.schema.attribute_fields()]
-        for (coll, sid), handle in list(node.sealed.items()):
-            if coll != info.name:
-                continue
-            seg = handle.segment
-            cols = {f: seg.extra(f) for f in attr_fields if f in seg.extra_fields}
-            cols["pk"] = seg.pks()
-            masks[sid] = expr.evaluate(cols, seg.num_rows)
-        for (coll, sid), gs in list(node.growing.items()):
-            if coll != info.name:
-                continue
-            seg = gs.segment
-            cols = {f: seg.extra(f) for f in attr_fields if f in seg.extra_fields}
-            cols["pk"] = seg.pks()
-            masks[sid] = expr.evaluate(cols, seg.num_rows)
-        return masks
+        if isinstance(filter_expr, FilterExpr):
+            return filter_expr
+        key = (collection, str(filter_expr))
+        cached = self._filter_cache.get(key)
+        if cached is not None:
+            self._filter_cache.move_to_end(key)
+            self.metrics.inc("filter_parse_cache_hit_total")
+            return cached
+        expr = FilterExpr(str(filter_expr))
+        self.metrics.inc("filter_parse_cache_miss_total")
+        self._filter_cache[key] = expr
+        while len(self._filter_cache) > self._FILTER_CACHE_CAP:
+            self._filter_cache.popitem(last=False)
+        return expr
 
 
 def _mask_fill(vals: np.ndarray, hit: np.ndarray) -> np.ndarray:

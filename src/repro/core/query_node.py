@@ -37,6 +37,33 @@ from .telemetry import MetricsRegistry
 
 TEMP_INDEX_SLICE_ROWS = 2_048  # scaled-down default of the paper's 10k
 
+# Selectivity-adaptive filtered-search thresholds.  ``n_comb`` is the
+# surviving row count (visible AND matching), ``n_vis`` the visible count.
+# brute (gather survivors, per-unit scan) wins while the survivor set is a
+# small fraction of the segment — its per-row cost is higher (gather copy +
+# unfused dispatch) but it touches only the survivors; the crossover vs the
+# fused masked full scan sits around 1/3, so 0.25 leaves margin.  post
+# (visibility-only scan at inflated k, cut after) is only ever chosen for
+# index-backed units: a loose filter barely inflates k there and the index
+# keeps its recall, while a tight mask fed INTO an ANN index starves its
+# candidate pools.  Everything else pre-filters: bitmap ∧ visibility as the
+# scan's validity mask.
+FILTER_BRUTE_FRAC = 0.25
+FILTER_BRUTE_MIN_ROWS = 64
+FILTER_POST_FRAC = 0.5
+
+
+def choose_filter_strategy(
+    override: str | None, n_vis: int, n_comb: int, k: int, has_index: bool
+) -> str:
+    if override is not None:
+        return override
+    if n_comb <= max(2 * k, FILTER_BRUTE_MIN_ROWS) or n_comb <= FILTER_BRUTE_FRAC * n_vis:
+        return "brute"
+    if has_index and n_comb >= FILTER_POST_FRAC * n_vis:
+        return "post"
+    return "pre"
+
 
 class StalePlanError(Exception):
     """The dispatch plan references segments this node can no longer serve
@@ -52,6 +79,17 @@ def _seg_column(seg: Segment, column: str) -> np.ndarray | None:
     if column in seg.extra_fields:
         return seg.extra(column)
     return None
+
+
+def _scalar_columns(seg: Segment) -> dict[str, np.ndarray]:
+    """The segment's filterable columns (pk + 1-D extras) for row-wise
+    FilterExpr evaluation; vector extras are not filterable."""
+    cols: dict[str, np.ndarray] = {"pk": seg.pks()}
+    for f in seg.extra_fields:
+        arr = np.asarray(seg.extra(f))
+        if arr.ndim == 1:
+            cols[f] = arr
+    return cols
 
 
 @dataclass
@@ -70,6 +108,10 @@ class SealedHandle:
     # segment column name.
     extra_indexes: dict[str, VectorIndex] = field(default_factory=dict)
     extra_index_kinds: dict[str, str] = field(default_factory=dict)
+    # Attribute indexes over scalar columns (pk + 1-D extras), loaded from
+    # the segment's attr satellites (or rebuilt locally when absent); the
+    # filtered-search planner resolves FilterExpr bitmaps through these.
+    attr_indexes: dict[str, object] = field(default_factory=dict)
 
     def covers_ts(self, ts: int) -> bool:
         if ts < self.visible_from_ts:
@@ -103,6 +145,13 @@ class ScanUnit:
     mask: np.ndarray  # visibility & delta-delete & attribute filter
     index: VectorIndex | None = None
     vectors: np.ndarray | None = None
+    # Post-filter strategy state: ``post_mask`` is the attribute-filter
+    # bitmap applied AFTER the scan (``mask`` then carries visibility only)
+    # and ``k_extra`` is this unit's worst-case interloper count — rows
+    # that pass visibility but fail the filter — so scanning top
+    # (k + k_extra) provably contains the filtered top-k.
+    post_mask: np.ndarray | None = None
+    k_extra: int = 0
 
 
 @dataclass
@@ -118,9 +167,23 @@ class SearchPlan:
     brute_sealed: list[ScanUnit] = field(default_factory=list)  # sealed, no index
     growing_slice: list[ScanUnit] = field(default_factory=list)  # temp slice index
     brute_tail: list[ScanUnit] = field(default_factory=list)  # growing tail rows
+    # Filtered-search strategy classes (empty without a filter):
+    # post-filter units scan with visibility-only masks at an inflated k
+    # and cut failing candidates afterwards; brute_filtered units gather
+    # the surviving rows and scan just those, one dispatch per unit.
+    post_indexed: list[ScanUnit] = field(default_factory=list)
+    post_brute: list[ScanUnit] = field(default_factory=list)
+    brute_filtered: list[ScanUnit] = field(default_factory=list)
+    # Per-unit planning report for observability: dicts with segment_id,
+    # strategy, estimated and actual selectivity.
+    filter_info: list = field(default_factory=list)
 
     def units(self) -> "list[ScanUnit]":
-        return self.indexed + self.brute_sealed + self.growing_slice + self.brute_tail
+        return (
+            self.indexed + self.brute_sealed + self.growing_slice
+            + self.brute_tail + self.post_indexed + self.post_brute
+            + self.brute_filtered
+        )
 
 
 def _map_pks(idx: np.ndarray, pks: np.ndarray) -> np.ndarray:
@@ -398,9 +461,45 @@ class QueryNode:
         if key in self.sealed:
             return
         seg = load_segment(self.store, collection, segment_id)
-        self.sealed[key] = SealedHandle(seg, visible_from_ts=visible_from_ts)
+        self.sealed[key] = SealedHandle(
+            seg,
+            visible_from_ts=visible_from_ts,
+            attr_indexes=self._attr_indexes_for(seg),
+        )
         # Hand-off: drop our growing copy of the same segment.
         self.growing.pop(key, None)
+
+    def _attr_indexes_for(self, seg: Segment) -> dict[str, object]:
+        """Attribute indexes for a sealed segment's scalar columns.
+
+        Satellites are loaded from the object store; a missing satellite or
+        one whose row count disagrees with the loaded segment (a stale
+        bitmap must never serve a filtered read) is rebuilt locally from
+        the columns — query nodes never write the store, so the healed
+        copy stays node-local until recovery repairs the satellite.
+        """
+        from ..index.attribute import build_attribute_index
+        from .binlog import load_attr_satellites
+
+        columns: dict[str, np.ndarray] = {"pk": seg.pks()}
+        for f in seg.extra_fields:
+            arr = np.asarray(seg.extra(f))
+            if arr.ndim == 1:
+                columns[f] = arr
+        loaded = load_attr_satellites(
+            self.store, seg.collection, seg.segment_id, columns
+        )
+        out: dict[str, object] = {}
+        for f, col in columns.items():
+            idx = loaded.get(f)
+            if idx is None or idx.n != seg.num_rows:
+                idx = build_attribute_index(col)
+                self.metrics.inc(
+                    "query_node_attr_local_builds_total",
+                    labels={"node": self.node_id},
+                )
+            out[f] = idx
+        return out
 
     def load_index(
         self,
@@ -550,6 +649,9 @@ class QueryNode:
         doomed=_DOOMED_UNSET,
         partitions: "tuple[str, ...] | None" = None,
         segments: "tuple[int, ...] | None" = None,
+        filter=None,
+        filter_strategy: str | None = None,
+        k: int = 10,
     ) -> SearchPlan:
         """Gather every candidate (segment, visibility, filter) unit for a
         request pinned at ``ts`` and group it by execution class.
@@ -567,6 +669,13 @@ class QueryNode:
         (None = everything the node holds); retired MVCC versions are
         exempt — they only exist on the nodes that served the pre-swap
         epoch, so pinned queries must always reach them.
+
+        ``filter`` is the compiled :class:`FilterExpr`: sealed units
+        resolve it through their attribute-index satellites and pick a
+        selectivity-adaptive strategy per (segment, filter) unit —
+        pre-filter / post-filter / brute (``filter_strategy`` forces one;
+        ``k`` feeds the brute threshold and post inflation).  Growing rows
+        have no satellites and always pre-filter via row-wise evaluation.
         """
         plan = SearchPlan()
         if doomed is QueryNode._DOOMED_UNSET:
@@ -612,6 +721,12 @@ class QueryNode:
             if not mask.any():
                 continue
             index = handle.index_for(column)
+            if filter is not None:
+                self._plan_filtered_unit(
+                    plan, sid, seg, handle.attr_indexes, mask, index,
+                    filter, filter_strategy, k, brute_column,
+                )
+                continue
             if index is not None:
                 plan.indexed.append(
                     ScanUnit(sid, seg.pks(), mask, index=index)
@@ -643,6 +758,20 @@ class QueryNode:
             if filter_masks and sid in filter_masks:
                 mask = mask & filter_masks[sid]
             pks = seg.pks()
+            if filter is not None:
+                fmask = np.asarray(
+                    filter.evaluate(_scalar_columns(seg), seg.num_rows), bool
+                )
+                n_vis = int(mask.sum())
+                mask = mask & fmask
+                plan.filter_info.append({
+                    "segment_id": sid, "strategy": "pre",
+                    "est": float(fmask.mean()) if seg.num_rows else 0.0,
+                    "actual": (int(mask.sum()) / n_vis) if n_vis else 0.0,
+                })
+                self.metrics.inc(
+                    "filter_strategy_total", labels={"strategy": "pre"}
+                )
             vectors = brute_column(seg)
             if vectors is None:
                 continue
@@ -668,6 +797,91 @@ class QueryNode:
                     ScanUnit(sid, pks, tail_mask, vectors=vectors)
                 )
         return plan
+
+    def _plan_filtered_unit(
+        self,
+        plan: SearchPlan,
+        sid: int,
+        seg: Segment,
+        attr_indexes: dict,
+        mask: np.ndarray,
+        index: VectorIndex | None,
+        fexpr,
+        override: str | None,
+        k: int,
+        brute_column,
+    ) -> None:
+        """Resolve the filter bitmap for one sealed unit and place it in
+        the strategy class the selectivity estimate calls for."""
+        from ..kernels import ops
+
+        n = seg.num_rows
+        try:
+            fmask = fexpr.bitmap(attr_indexes, n)
+            est = fexpr.estimate_selectivity(attr_indexes, n)
+        except KeyError:
+            # A filter field without a satellite (late-added schema field):
+            # row-wise fallback keeps semantics identical.
+            fmask = np.asarray(fexpr.evaluate(_scalar_columns(seg), n), bool)
+            est = float(fmask.mean()) if n else 0.0
+        n_vis = int(mask.sum())
+        combined = ops.mask_intersect(mask, fmask)
+        n_comb = int(combined.sum())
+        actual = (n_comb / n_vis) if n_vis else 0.0
+        strategy = choose_filter_strategy(
+            override, n_vis, n_comb, k, index is not None
+        )
+        plan.filter_info.append({
+            "segment_id": sid, "strategy": strategy,
+            "est": est, "actual": actual, "rows": n_comb,
+        })
+        self.metrics.inc("filter_strategy_total", labels={"strategy": strategy})
+        self.metrics.set_gauge(
+            "filter_selectivity_est", est,
+            labels={"collection": seg.collection, "segment": str(sid)},
+        )
+        self.metrics.set_gauge(
+            "filter_selectivity_actual", actual,
+            labels={"collection": seg.collection, "segment": str(sid)},
+        )
+        if n_comb == 0:
+            return
+        pks = seg.pks()
+        if strategy == "brute":
+            vectors = brute_column(seg)
+            if vectors is None:
+                return
+            rows = np.nonzero(combined)[0]
+            plan.brute_filtered.append(
+                ScanUnit(
+                    sid, pks[rows], np.ones(len(rows), dtype=bool),
+                    vectors=np.ascontiguousarray(vectors[rows]),
+                )
+            )
+        elif strategy == "post":
+            unit = ScanUnit(
+                sid, pks, mask, post_mask=fmask, k_extra=n_vis - n_comb
+            )
+            if index is not None:
+                unit.index = index
+                plan.post_indexed.append(unit)
+            else:
+                vectors = brute_column(seg)
+                if vectors is None:
+                    return
+                unit.vectors = vectors
+                plan.post_brute.append(unit)
+        else:  # pre
+            unit = ScanUnit(sid, pks, combined)
+            if index is not None:
+                unit.index = index
+                plan.indexed.append(unit)
+            else:
+                vectors = brute_column(seg)
+                if vectors is None:
+                    return
+                unit.vectors = vectors
+                plan.brute_sealed.append(unit)
 
     def _execute_plan(
         self,
@@ -756,6 +970,63 @@ class QueryNode:
                 pool_s.append(s[:, blk])
                 pool_p.append(_map_pks(i[:, blk], unit.pks))
             record_class(cls, units, t0)
+        # Post-filter classes scan with VISIBILITY-only valids at the
+        # inflated class width k' = k + max(k_extra): each unit's k_extra is
+        # its worst-case interloper count (visible rows failing the filter),
+        # so the widened top-k' provably contains the filtered top-k. The
+        # cut zeroes interlopers to (fill, -1); merge_topk drops them.
+        if plan.post_indexed:
+            post_groups: dict = {}
+            for unit in plan.post_indexed:
+                post_groups.setdefault(unit.index.batch_spec(), []).append(unit)
+            for units in post_groups.values():
+                t0 = _t.perf_counter()
+                k_class = k + max(u.k_extra for u in units)
+                s, i, splits = type(units[0].index).search_batched(
+                    [u.index for u in units],
+                    queries,
+                    k_class,
+                    valids=[u.mask for u in units],
+                )
+                for j, unit in enumerate(units):
+                    blk = slice(splits[j], splits[j + 1])
+                    cs, ci = ops.post_filter_cut(
+                        s[:, blk], i[:, blk], unit.post_mask, metric=metric_str
+                    )
+                    pool_s.append(cs)
+                    pool_p.append(_map_pks(ci, unit.pks))
+                record_class("post_indexed", units, t0)
+        if plan.post_brute:
+            units = plan.post_brute
+            t0 = _t.perf_counter()
+            k_class = k + max(u.k_extra for u in units)
+            s, i = ops.topk_scan_segmented(
+                q_brute,
+                [u.vectors for u in units],
+                k_class,
+                metric=metric_str,
+                valids=[u.mask for u in units],
+            )
+            for j, unit in enumerate(units):
+                blk = slice(j * k_class, (j + 1) * k_class)
+                cs, ci = ops.post_filter_cut(
+                    s[:, blk], i[:, blk], unit.post_mask, metric=metric_str
+                )
+                pool_s.append(cs)
+                pool_p.append(_map_pks(ci, unit.pks))
+            record_class("post_brute", units, t0)
+        # Brute-filtered units already gathered their surviving rows: each
+        # scans its own tiny vector block unfused (the gathers are ragged,
+        # so a shared contraction buys nothing at these sizes).
+        if plan.brute_filtered:
+            t0 = _t.perf_counter()
+            for unit in plan.brute_filtered:
+                s, i = ops.topk_scan(
+                    q_brute, unit.vectors, k, metric=metric_str
+                )
+                pool_s.append(s)
+                pool_p.append(_map_pks(i, unit.pks))
+            record_class("brute_filtered", plan.brute_filtered, t0)
         return pool_s, pool_p
 
     def search_request(
@@ -833,15 +1104,33 @@ class QueryNode:
                         column=a.field, metric=metric, doomed=doomed,
                         partitions=request.partitions,
                         segments=request.segments,
+                        filter=request.filter,
+                        filter_strategy=request.filter_strategy,
+                        k=request.k,
                     )
                 pspan.segment_ids = tuple(
                     sorted({u.segment_id for u in plan.units()})
                 )
+                if request.filter is not None and plan.filter_info:
+                    fspan = ctx.span(
+                        "filter_plan", parent=parent, node_id=self.node_id,
+                        detail=",".join(
+                            f"{fi['segment_id']}:{fi['strategy']}"
+                            f"@{fi['actual']:.3f}"
+                            for fi in plan.filter_info
+                        ),
+                    )
+                    fspan.segment_ids = tuple(
+                        fi["segment_id"] for fi in plan.filter_info
+                    )
             else:
                 plan = self.plan_search(
                     request.collection, ts, request.filter_masks,
                     column=a.field, metric=metric, doomed=doomed,
                     partitions=request.partitions, segments=request.segments,
+                    filter=request.filter,
+                    filter_strategy=request.filter_strategy,
+                    k=request.k,
                 )
             pool_s, pool_p = self._execute_plan(
                 plan, queries, request.k, metric, trace=trace

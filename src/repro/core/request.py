@@ -221,6 +221,11 @@ class SearchRequest:
     staleness_ms: float | None = None  # explicit tau overrides ``consistency``
     session_ts: int = 0  # read-your-writes watermark (session consistency)
     filter: object | None = None  # str | FilterExpr over attribute fields
+    # Filtered-search strategy override: None = selectivity-adaptive
+    # planning (the default); "pre" | "post" | "brute" force one strategy
+    # for every (segment, filter) unit — the benchmark / equivalence-test
+    # surface, not something clients normally set.
+    filter_strategy: str | None = None
     radius: float | None = None  # range search outer bound
     range_filter: float | None = None  # range search inner bound
     output_fields: tuple[str, ...] = ()
@@ -250,6 +255,11 @@ class SearchRequest:
             raise ValueError(f"sub-requests disagree on query count: {sorted(nqs)}")
         if self.k < 1:
             raise ValueError("k must be >= 1")
+        if self.filter_strategy not in (None, "pre", "post", "brute"):
+            raise ValueError(
+                f"unknown filter_strategy '{self.filter_strategy}' "
+                "(expected None, 'pre', 'post' or 'brute')"
+            )
 
     # ------------------------------------------------------------- helpers
     @classmethod
@@ -319,6 +329,14 @@ class NodeSearchRequest:
     metric: Metric
     guarantee: GuaranteeTs
     anns: list[AnnsQuery]  # .field holds the segment COLUMN name here
+    # The compiled filter expression (FilterExpr), shipped once per request;
+    # query nodes resolve it locally — sealed segments through their
+    # attribute-index satellites, growing rows by row-wise evaluation.
+    filter: object | None = None
+    # Strategy override from SearchRequest.filter_strategy (None = adaptive).
+    filter_strategy: str | None = None
+    # Legacy proxy-materialized bitmaps (segment_id -> row mask), still
+    # honored when present: ANDed into visibility before planning.
     filter_masks: dict[int, np.ndarray] | None = None
     # None = no pruning; otherwise only segments tagged with one of these
     # partitions enter the plan.
@@ -344,6 +362,7 @@ class NodeSearchRequest:
         request: SearchRequest,
         metric: Metric,
         guarantee: GuaranteeTs,
+        filter=None,
         filter_masks: dict[int, np.ndarray] | None = None,
         segments: tuple[int, ...] | None = None,
         trace: tuple | None = None,
@@ -361,6 +380,8 @@ class NodeSearchRequest:
             metric=metric,
             guarantee=guarantee,
             anns=anns,
+            filter=filter,
+            filter_strategy=request.filter_strategy,
             filter_masks=filter_masks,
             partitions=request.partition_names or None,
             segments=segments,

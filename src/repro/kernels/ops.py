@@ -38,6 +38,8 @@ __all__ = [
     "normalized_similarity",
     "hybrid_fuse",
     "range_cut",
+    "mask_intersect",
+    "post_filter_cut",
     "pq_adc_topk",
     "sq_scale",
     "sq_encode",
@@ -675,6 +677,43 @@ def range_cut(
         if range_filter is not None:
             keep &= s <= range_filter
     return np.where(keep, s, fill), np.where(keep, p, -1)
+
+
+def mask_intersect(*masks) -> np.ndarray | None:
+    """Fold row bitmaps (filter ∩ visibility ∩ ...) into one validity mask.
+
+    ``None`` operands mean all-visible and are skipped; returns ``None``
+    when every operand is ``None``.  Single memory-bound boolean pass —
+    the planner combines attribute-filter bitmaps with MVCC/tombstone
+    masks through this one op so the cost is bookable.
+    """
+    out = None
+    for m in masks:
+        if m is None:
+            continue
+        m = np.asarray(m, bool)
+        out = m.copy() if out is None else (out & m)
+    return out
+
+
+def post_filter_cut(scores, idx, keep, metric: str = "l2") -> tuple[np.ndarray, np.ndarray]:
+    """Cut post-filter candidates whose row fails the filter bitmap.
+
+    ``scores/idx [nq, m]`` are a candidate pool with segment-local row ids
+    (-1 = empty slot); ``keep [n]`` is the filter bitmap over the segment's
+    rows.  Failing slots become (fill, -1) — not compacted; downstream
+    ``merge_topk`` drops them, mirroring ``range_cut``.
+    """
+    s = np.asarray(scores, np.float32)
+    i = np.asarray(idx, np.int64)
+    km = np.asarray(keep, bool)
+    fill = np.float32(np.inf if metric == "l2" else -np.inf)
+    alive = i >= 0
+    ok = np.zeros(i.shape, bool)
+    if km.size and alive.any():
+        ok[alive] = km[i[alive]]
+    dead = alive & ~ok
+    return np.where(dead, fill, s), np.where(dead, -1, i)
 
 
 def pq_adc_topk(luts, codes, k: int, valid=None) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,362 @@
+"""Filtered-search planner equivalence + chaos suite.
+
+Every strategy the planner can pick — pre-filter (bitmap-masked scan),
+post-filter (inflated-k scan then cut), brute (gather the surviving
+rows) — and the adaptive default that chooses among them must return
+the SAME answer: bit-for-bit identical pk/score arrays across
+strategies, and set-identical to a row-wise ``FilterExpr`` oracle
+evaluated over the visible rows.  The fuzz axes mirror production
+reality: all three metrics, deletes and upserts, time travel, partition
+pruning, an in-flight compaction, and a query node dying mid-request.
+
+Collections here carry either no vector index or a flat one, so every
+strategy is exact and any divergence is a planner bug, not an ANN
+quality artifact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FieldSchema,
+    FieldType,
+    ManuConfig,
+    ManuSystem,
+    Metric,
+    SearchRequest,
+)
+from repro.index.attribute import FilterExpr
+
+CFG = dict(num_query_nodes=2, seal_rows=200, slice_rows=64, num_shards=2)
+
+# None = adaptive; the fixed overrides are the planner's three classes.
+STRATEGIES = (None, "pre", "post", "brute")
+
+# Spread across the selectivity spectrum so each fixed strategy is the
+# adaptive pick for at least one expression.
+EXPRS = [
+    "price < 4",                           # tight -> brute
+    "price > 30 and price < 45",           # mid   -> pre
+    "price < 92",                          # loose -> post
+    "label == 'a'",
+    "label != 'b' and price < 55",
+    "not (label == 'c') or price >= 90",
+]
+
+METRICS = [Metric.L2, Metric.IP, Metric.COSINE]
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def _fresh_data(rng, n, dim):
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    price = rng.uniform(0, 100, n).astype(np.float64)
+    label = np.asarray(rng.choice(["a", "b", "c"], n))
+    return vecs, price, label
+
+
+def _make_collection(system, rng, metric=Metric.L2, n=700, dim=8,
+                     index=None, growing=50):
+    # ``growing`` stays below slice_rows per shard (incl. later upserts) so
+    # growing reads take the exact brute-tail path — full slices get a
+    # temporary IVF index that is approximate by design (paper 3.6) and
+    # would fail the bit-for-bit oracle this suite demands.
+    coll = system.create_collection(
+        "c", dim=dim, metric=metric,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)],
+    )
+    if index:
+        coll.create_index("vector", kind=index)
+    vecs, price, label = _fresh_data(rng, n, dim)
+    coll.insert({"vector": vecs, "price": price, "label": label})
+    coll.flush()
+    if growing:
+        gv, gp, gl = _fresh_data(rng, growing, dim)
+        coll.insert({"vector": gv, "price": gp, "label": gl})
+        vecs = np.concatenate([vecs, gv])
+        price = np.concatenate([price, gp])
+        label = np.concatenate([label, gl])
+    return coll, vecs, price, label
+
+
+def _oracle_pks(metric, vecs, q, keep, k):
+    """Row-wise ground truth: pk ranking of the surviving rows."""
+    base = vecs[keep]
+    if metric is Metric.L2:
+        key = (np.sum(q ** 2, 1, keepdims=True) - 2 * q @ base.T
+               + np.sum(base ** 2, 1))
+    else:
+        b = base
+        qq = q
+        if metric is Metric.COSINE:
+            b = b / np.maximum(np.linalg.norm(b, axis=1, keepdims=True), 1e-12)
+            qq = qq / np.maximum(
+                np.linalg.norm(qq, axis=1, keepdims=True), 1e-12)
+        key = -(qq @ b.T)  # descending similarity
+    order = np.argsort(key, axis=1, kind="stable")[:, :k]
+    return keep[order]
+
+
+def _assert_strategies_match(coll, q, k, expr, vecs, cols, live_mask,
+                             metric, time_travel_ts=None,
+                             partition_names=()):
+    """All four strategies agree bit-for-bit and match the row-wise oracle."""
+    fmask = FilterExpr(expr).evaluate(cols, len(live_mask))
+    keep = np.nonzero(live_mask & fmask)[0]
+    want = _oracle_pks(metric, vecs, q, keep, k)
+    outs = {}
+    for strat in STRATEGIES:
+        outs[strat] = coll.search(SearchRequest.single(
+            q, k=k, filter=expr, filter_strategy=strat, staleness_ms=0.0,
+            time_travel_ts=time_travel_ts, partition_names=partition_names,
+        ))
+    for strat in ("pre", "post", "brute"):
+        np.testing.assert_array_equal(
+            outs[None].pks, outs[strat].pks,
+            err_msg=f"adaptive vs {strat} diverged on {expr!r}")
+        np.testing.assert_array_equal(outs[None].scores, outs[strat].scores)
+    res = outs[None]
+    for r in range(len(q)):
+        live = res.pks[r][res.pks[r] >= 0]
+        assert len(set(live.tolist())) == len(live), (expr, "duplicate pks")
+        assert set(live.tolist()) == set(want[r][: len(live)].tolist()), (
+            expr, sorted(live.tolist()), sorted(want[r][: len(live)].tolist()))
+    return res
+
+
+# --------------------------------------------------------------- fuzz core
+
+
+@pytest.mark.parametrize("metric", METRICS, ids=[m.value for m in METRICS])
+@pytest.mark.parametrize("index", [None, "flat"], ids=["noindex", "flat"])
+def test_fuzz_strategies_match_rowwise_oracle(metric, index, rng):
+    """Metrics x (indexed | unindexed) x deletes x upserts x growing rows:
+    pre == post == brute == adaptive == row-wise oracle, bit for bit."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _make_collection(
+        system, rng, metric=metric, index=index)
+    n = len(vecs)
+    live = np.ones(n, bool)
+
+    # deletes: a random slab of sealed + growing pks
+    victims = rng.choice(n, 100, replace=False)
+    coll.delete(victims)
+    live[victims] = False
+
+    # upserts: replace vectors AND attributes of surviving pks in place
+    up = rng.choice(np.nonzero(live)[0], 40, replace=False)
+    uv, upr, ul = _fresh_data(rng, len(up), vecs.shape[1])
+    coll.upsert({"pk": up, "vector": uv, "price": upr, "label": ul})
+    vecs, price, label = vecs.copy(), price.copy(), label.copy()
+    vecs[up], price[up], label[up] = uv, upr, ul
+
+    q = rng.standard_normal((3, vecs.shape[1])).astype(np.float32)
+    cols = {"pk": np.arange(n), "price": price, "label": label}
+    for expr in EXPRS:
+        _assert_strategies_match(
+            coll, q, 10, expr, vecs, cols, live, metric)
+
+
+def test_filtered_time_travel_resurrects_rows(rng):
+    """A filtered search pinned before a delete sees the deleted rows —
+    identically under every strategy."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _make_collection(system, rng, growing=0)
+    n = len(vecs)
+    cols = {"pk": np.arange(n), "price": price, "label": label}
+    q = rng.standard_normal((2, vecs.shape[1])).astype(np.float32)
+
+    pin = coll.search(SearchRequest.single(
+        q, k=5, filter="price < 50", staleness_ms=0.0))
+    victims = pin.pks[0][pin.pks[0] >= 0][:3]
+    coll.delete(victims)
+
+    live_now = np.ones(n, bool)
+    live_now[victims] = False
+    after = _assert_strategies_match(
+        coll, q, 5, "price < 50", vecs, cols, live_now, Metric.L2)
+    assert not set(victims.tolist()) & set(after.pks[0].tolist())
+
+    # at the pinned ts every strategy resurrects the victims
+    old = _assert_strategies_match(
+        coll, q, 5, "price < 50", vecs, cols, np.ones(n, bool), Metric.L2,
+        time_travel_ts=pin.query_ts)
+    assert set(victims.tolist()) <= set(old.pks[0].tolist())
+
+
+def test_filtered_search_respects_partitions(rng):
+    """Partition pruning composes with the filter: only rows from the
+    requested partitions survive, and the strategies still agree."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll = system.create_collection(
+        "p", dim=8,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)],
+    )
+    coll.create_partition("hot")
+    vecs, price, label = _fresh_data(rng, 600, 8)
+    half = 300
+    coll.insert({"vector": vecs[:half], "price": price[:half],
+                 "label": label[:half]})
+    coll.insert({"vector": vecs[half:], "price": price[half:],
+                 "label": label[half:]}, partition="hot")
+    coll.flush()
+
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    cols = {"pk": np.arange(600), "price": price, "label": label}
+    hot_only = np.zeros(600, bool)
+    hot_only[half:] = True
+    res = _assert_strategies_match(
+        coll, q, 8, "price < 70", vecs, cols, hot_only, Metric.L2,
+        partition_names=("hot",))
+    assert (res.pks[res.pks >= 0] >= half).all()
+    # and the unrestricted search sees both partitions
+    _assert_strategies_match(
+        coll, q, 8, "price < 70", vecs, cols, np.ones(600, bool), Metric.L2)
+
+
+# ------------------------------------------------------------------ chaos
+
+
+def test_filtered_search_during_compaction(rng):
+    """Strong filtered searches issued between every scheduling round of
+    an in-flight compaction: same pk set every round, all strategies."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _make_collection(system, rng, growing=0)
+    n = len(vecs)
+    live = np.ones(n, bool)
+    victims = rng.choice(n, 250, replace=False)
+    coll.delete(victims)
+    live[victims] = False
+
+    q = rng.standard_normal((2, vecs.shape[1])).astype(np.float32)
+    cols = {"pk": np.arange(n), "price": price, "label": label}
+    expr = "price < 60 and label != 'c'"
+    baseline = _assert_strategies_match(
+        coll, q, 10, expr, vecs, cols, live, Metric.L2)
+
+    tasks = system.compaction_coord.plan("c")
+    assert tasks
+    for _ in range(200):
+        res = _assert_strategies_match(
+            coll, q, 10, expr, vecs, cols, live, Metric.L2)
+        np.testing.assert_array_equal(res.pks, baseline.pks)
+        if not system.compaction_coord.pending:
+            break
+        system.pump()
+    assert not system.compaction_coord.pending
+    # compaction rebuilt the attribute satellites for the rewritten
+    # segments: the planner still has index-backed estimates
+    _assert_strategies_match(coll, q, 10, expr, vecs, cols, live, Metric.L2)
+
+
+def test_kill_node_mid_filtered_search_bit_for_bit(rng):
+    """A query node dying between filter planning and the scan: the proxy
+    re-dispatches to surviving replicas and the filtered answer is
+    bit-for-bit the single-node oracle system's."""
+    dim, n = 8, 900
+    oracle_sys = ManuSystem(
+        ManuConfig(num_query_nodes=1, seal_rows=200, num_shards=2))
+    system = ManuSystem(ManuConfig(
+        num_query_nodes=3, replication_factor=2, seal_rows=200, num_shards=2))
+    rng_a, rng_b = np.random.default_rng(3), np.random.default_rng(3)
+    fields = lambda: [FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)]
+    o_coll = oracle_sys.create_collection("c", dim=dim, extra_fields=fields())
+    coll = system.create_collection("c", dim=dim, extra_fields=fields())
+    va, pa, la = _fresh_data(rng_a, n, dim)
+    vb, pb, lb = _fresh_data(rng_b, n, dim)
+    o_coll.insert({"vector": va, "price": pa, "label": la})
+    coll.insert({"vector": vb, "price": pb, "label": lb})
+    o_coll.flush()
+    coll.flush()
+
+    q = np.random.default_rng(9).standard_normal((4, dim)).astype(np.float32)
+    req = SearchRequest.single(
+        q, k=10, filter="price < 55 and label != 'b'", staleness_ms=0.0)
+    oracle = o_coll.search(req)
+
+    victim_id = next(
+        nid for nid, st in system.query_coord.nodes.items() if st.segments)
+    victim = system.query_nodes[victim_id]
+
+    def dying(request):
+        victim.alive = False
+        raise RuntimeError("injected crash mid-filtered-search")
+
+    victim.search_request = dying
+    res = coll.search(req)
+    np.testing.assert_array_equal(
+        np.sort(oracle.pks, 1), np.sort(res.pks, 1))
+    np.testing.assert_allclose(
+        np.sort(oracle.scores, 1), np.sort(res.scores, 1), rtol=1e-5)
+    assert victim_id not in system.cluster_state().live_node_ids
+
+
+# -------------------------------------------------- satellite observability
+
+
+def test_proxy_filter_parse_cache(rng):
+    """The proxy compiles a filter string once per (collection, expr) and
+    serves repeats from the LRU — visible through the cache counters."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _make_collection(system, rng, growing=0)
+    q = rng.standard_normal((1, vecs.shape[1])).astype(np.float32)
+
+    def counters():
+        snap = system.metrics()
+        return (snap.counters.get("filter_parse_cache_hit_total", 0),
+                snap.counters.get("filter_parse_cache_miss_total", 0))
+
+    h0, m0 = counters()
+    for _ in range(4):
+        coll.search(SearchRequest.single(
+            q, k=5, filter="price < 33", staleness_ms=0.0))
+    h1, m1 = counters()
+    assert m1 - m0 == 1  # compiled exactly once
+    assert h1 - h0 == 3  # every repeat was a hit
+    # a different expression is its own entry
+    coll.search(SearchRequest.single(
+        q, k=5, filter="price < 34", staleness_ms=0.0))
+    h2, m2 = counters()
+    assert m2 - m1 == 1 and h2 == h1
+    # a pre-compiled FilterExpr bypasses the cache entirely
+    coll.search(SearchRequest.single(
+        q, k=5, filter=FilterExpr("price < 33"), staleness_ms=0.0))
+    assert counters() == (h2, m2)
+
+
+def test_filter_strategy_metrics_and_trace_span(rng):
+    """Strategy counters move per planned unit, the estimated-vs-actual
+    selectivity gauges are populated, and a traced filtered search carries
+    a ``filter_plan`` span naming each segment's chosen strategy."""
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _make_collection(system, rng, growing=0)
+    q = rng.standard_normal((1, vecs.shape[1])).astype(np.float32)
+
+    res = coll.search(SearchRequest.single(
+        q, k=5, filter="price < 50", staleness_ms=0.0, trace=True))
+    snap = system.metrics()
+    strat_total = sum(
+        v for k_, v in snap.counters.items()
+        if k_.startswith("filter_strategy_total"))
+    assert strat_total >= 1
+    assert any(k_.startswith("filter_selectivity_est") for k_ in snap.gauges)
+    assert any(k_.startswith("filter_selectivity_actual") for k_ in snap.gauges)
+
+    def spans(node):
+        yield node
+        for c in node.children:
+            yield from spans(c)
+
+    names = [s.name for s in spans(res.trace.root)]
+    assert "filter_plan" in names
+    fspan = next(s for s in spans(res.trace.root) if s.name == "filter_plan")
+    assert fspan.detail  # "<segment>:<strategy>@<actual-selectivity>" list
+    assert any(tag in fspan.detail for tag in (":pre", ":post", ":brute"))

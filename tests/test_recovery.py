@@ -389,22 +389,34 @@ def test_chaos_seeded_kill_every_class_zero_wrong_answers():
 
     wl = np.random.default_rng(99)
     vecs = wl.standard_normal((600, 8)).astype(np.float32)
+    price = wl.uniform(0, 100, 600)
     queries = wl.standard_normal((5, 8)).astype(np.float32)
     wrong = 0
 
     def do(phase, system):
+        from repro.core import FieldSchema, FieldType
+
         coll = (
-            system.create_collection("c", dim=8)
+            system.create_collection(
+                "c", dim=8,
+                extra_fields=[FieldSchema("price", FieldType.FLOAT)],
+            )
             if phase == 0 else system.collections["c"]
         )
         lo = phase * 120
-        coll.insert({"vector": vecs[lo : lo + 120]})
+        coll.insert({"vector": vecs[lo : lo + 120],
+                     "price": price[lo : lo + 120]})
         if phase == 2:
             coll.delete(np.arange(0, 60))
         if phase == 3:
             coll.flush()
             coll.create_index("vector", kind="flat")
-        return coll.search(queries, limit=10, staleness_ms=0.0).pks
+        plain = coll.search(queries, limit=10, staleness_ms=0.0).pks
+        # attr satellites ride the same faults: filtered answers count too
+        filtered = coll.query(
+            queries, limit=10, expr="price < 50", staleness_ms=0.0
+        ).pks
+        return np.concatenate([plain, filtered], axis=1)
 
     kills = {
         1: ("kill_logger", "restart_logger", "logger-0"),
@@ -429,3 +441,145 @@ def test_chaos_seeded_kill_every_class_zero_wrong_answers():
     assert any(k.startswith("node_restarted_total") for k in counters)
     kinds = {e.kind for e in chaos.events()}
     assert {"fault_injected", "node_killed", "node_restarted"} <= kinds
+
+
+# ------------------------------------------- attribute-index satellites
+
+
+def _attr_workload(system, rng, n=250):
+    from repro.core import FieldSchema, FieldType
+
+    coll = system.create_collection(
+        "c", dim=8,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)],
+    )
+    vecs = rng.standard_normal((n, 8)).astype(np.float32)
+    price = rng.uniform(0, 100, n)
+    label = np.asarray(rng.choice(["a", "b", "c"], n))
+    # batched like ``ingest`` so growing tails remain for flush to seal
+    # (a single oversize insert seals its whole batch on the spot)
+    for lo in range(0, n, 100):
+        coll.insert({"vector": vecs[lo : lo + 100],
+                     "price": price[lo : lo + 100],
+                     "label": label[lo : lo + 100]})
+    return coll, vecs, price, label
+
+
+def _filtered_probe(coll, vecs, strategy=None):
+    from repro.core import SearchRequest
+
+    return coll.search(SearchRequest.single(
+        vecs[:3], k=8, filter="price < 60 and label != 'b'",
+        filter_strategy=strategy, staleness_ms=0.0,
+    ))
+
+
+def test_crash_between_seal_flush_and_attr_satellite_write(rng):
+    """The satellite write window: binlog durable, attribute satellites
+    missing (the data node died on the first ``attr/`` put, before the
+    ``segment_sealed`` announce).  ``reconcile_sealed`` must rebuild the
+    full satellite set from the binlog columns before re-announcing, and
+    filtered search must come back bit-for-bit."""
+    from repro.core import FieldSchema, FieldType
+    from repro.core.binlog import attr_key
+
+    inj = FaultInjector(seed=CHAOS_SEED)
+    system = ManuSystem(ManuConfig(**CFG), injector=inj)
+    coll, vecs, price, label = _attr_workload(system, rng)
+
+    oracle = ManuSystem(ManuConfig(**CFG))
+    ocoll = oracle.create_collection(
+        "c", dim=8,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)],
+    )
+    for lo in range(0, len(vecs), 100):  # mirror the subject's batching
+        ocoll.insert({"vector": vecs[lo : lo + 100],
+                      "price": price[lo : lo + 100],
+                      "label": label[lo : lo + 100]})
+    ocoll.flush()
+
+    inj.crash_at("object_store.put", 1, match="attr/")
+    system.data_coord.flush("c")
+    system.run_until_idle()
+    inj.disarm()
+    assert [dn.node_id for dn in system.data_nodes if not dn.alive] == ["dn-0"]
+    # the window is real: durable binlog metas outnumber announced seals
+    orphans = [m.key for m in system.store.list("binlog/c/")
+               if m.key.endswith("/meta")]
+    assert len(orphans) > len(system.data_coord.sealed_segments("c"))
+
+    system.restart_data_node("dn-0")  # runs reconcile_sealed
+    system.run_until_idle()
+    assert system.telemetry.counter_value("recovery_seals_reconciled_total") >= 1
+    sealed = system.data_coord.sealed_segments("c")
+    assert len(sealed) == len(oracle.data_coord.sealed_segments("c"))
+    for sid in sealed:  # full satellite set present + meta-recorded
+        for f in ("price", "label"):
+            assert system.store.exists(attr_key("c", sid, f))
+        assert system.meta.scan(f"attr_index/c/{sid}/")
+
+    want = _filtered_probe(ocoll, vecs)
+    for strategy in (None, "pre", "post", "brute"):
+        got = _filtered_probe(coll, vecs, strategy)
+        np.testing.assert_array_equal(got.pks, want.pks)
+        np.testing.assert_array_equal(got.scores, want.scores)
+
+
+def test_restart_heals_vandalized_attr_satellites(rng):
+    """``restart()`` detects sealed segments whose satellites are missing
+    (segments sealed before the attr subsystem existed, or a partial
+    write whose meta never landed) and rebuilds them wholesale."""
+    from repro.core.binlog import attr_key
+
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _attr_workload(system, rng)
+    coll.flush()
+    baseline = _filtered_probe(coll, vecs)
+    sealed = system.data_coord.sealed_segments("c")
+    assert sealed
+    for sid in sealed:
+        for f in ("price", "label"):
+            assert system.store.delete(attr_key("c", sid, f))
+
+    report = system.restart()
+    assert report["attr_healed"] == len(sealed)
+    assert (system.telemetry.counter_value(
+        "recovery_attr_satellites_rebuilt_total") == len(sealed))
+    assert [e for e in system.events(kind="attr_satellites_healed")]
+    coll = system.collections["c"]
+    for sid in sealed:
+        for f in ("price", "label"):
+            assert system.store.exists(attr_key("c", sid, f))
+    after = _filtered_probe(coll, vecs)
+    np.testing.assert_array_equal(baseline.pks, after.pks)
+    np.testing.assert_array_equal(baseline.scores, after.scores)
+    # a second restart finds nothing to heal: the rebuild is convergent
+    assert system.restart()["attr_healed"] == 0
+
+
+def test_gc_reaps_attr_satellites_of_retired_segments(rng):
+    """Compaction rewrites carry fresh satellites; GC reclaims the retired
+    sources' ``attr/`` objects and ``attr_index/`` meta alongside their
+    binlogs — no orphaned satellite survives the sweep."""
+    from repro.core.binlog import attr_key
+
+    system = ManuSystem(ManuConfig(**CFG))
+    coll, vecs, price, label = _attr_workload(system, rng, n=300)
+    coll.flush()
+    before = set(system.data_coord.sealed_segments("c"))
+    coll.delete(np.arange(0, 120))
+    coll.compact()
+    coll.gc()
+
+    live = set(system.data_coord.sealed_segments("c"))
+    gone = before - live
+    assert gone  # the rewrite actually retired sources
+    for sid in gone:
+        assert not list(system.store.list(f"attr/c/{sid}/"))
+        assert not system.meta.scan(f"attr_index/c/{sid}/")
+    for sid in live:
+        for f in ("price", "label"):
+            assert system.store.exists(attr_key("c", sid, f))
+        assert system.meta.scan(f"attr_index/c/{sid}/")
