@@ -785,6 +785,13 @@ class QueryCoordinator:
         self.heartbeat_ttl_ms = float(
             heartbeat_ttl_ms if heartbeat_ttl_ms is not None else self.HEARTBEAT_TTL_MS
         )
+        # DML channel -> standby follower node ids: replicas that consume
+        # the channel (rf > 1) WITHOUT owning it.  Kept out of
+        # ``QueryNodeState.channels`` (the ownership/committed surface that
+        # failover, drain and cluster_state reason about) — followers are
+        # a read-routing surface: the proxy serves bounded-staleness reads
+        # from whichever candidate's watermark already covers the request.
+        self.channel_followers: dict[str, set[str]] = {}
         # (collection, segment_id) -> {field: index_built payload}
         self._known_indexes: dict[tuple[str, int], dict[str, dict]] = {}
         # (collection, segment_id) -> visible_from_ts MVCC gate of compacted
@@ -1228,7 +1235,14 @@ class QueryCoordinator:
     # ------------------------------------------------------ channel coverage
     def assign_channels(self, collection: str, num_shards: int) -> None:
         """Distribute DML channel subscriptions over live nodes (draining
-        nodes shed channel ownership so scale-down leaves them idle)."""
+        nodes shed channel ownership so scale-down leaves them idle).
+
+        With replication factor > 1, the next rf-1 candidates consume each
+        channel as standby *followers* (``channel_followers``): same WAL
+        replay, no ownership.  Their consumed watermarks give the proxy
+        routing choices for bounded-staleness reads and a warm takeover
+        target on failover.  Idempotent — the reconciler re-runs this
+        every pass, so only membership diffs publish messages."""
         nodes = self._placement_candidates() or self.live_nodes()
         if not nodes:
             return
@@ -1253,6 +1267,31 @@ class QueryCoordinator:
                     self._publish(
                         {"msg": "unsubscribe_channel", "node_id": n, "channel": ch}
                     )
+            # ---- standby followers (rf - 1 of the remaining candidates)
+            desired = self.replication_for(collection) - 1
+            cands = [n for n in nodes if n != owner]
+            want = set(cands[:desired]) if desired > 0 else set()
+            have = self.channel_followers.setdefault(ch, set())
+            have.discard(owner)  # promoted by a re-home: owner, not follower
+            for n in sorted(want - have):
+                have.add(n)
+                # The node-side subscribe is idempotent (an existing
+                # subscription keeps its position), so an owner->follower
+                # transition re-publishing here is harmless.
+                self._publish(
+                    {
+                        "msg": "subscribe_channel",
+                        "node_id": n,
+                        "channel": ch,
+                        "from_position": self.data_coord.replay_position(collection, shard),
+                    }
+                )
+            for n in sorted(have - want):
+                have.discard(n)
+                if n in self.nodes and ch not in self.nodes[n].channels:
+                    self._publish(
+                        {"msg": "unsubscribe_channel", "node_id": n, "channel": ch}
+                    )
 
     # -------------------------------------------------------------- failover
     def handle_failures(self) -> list[str]:
@@ -1264,6 +1303,8 @@ class QueryCoordinator:
             dead = [n for n in self.nodes if n not in live]
             for node_id in dead:
                 st = self.nodes.pop(node_id)
+                for fs in self.channel_followers.values():
+                    fs.discard(node_id)
                 if self.events is not None:
                     self.events.emit(
                         "node_dead", "query_coord",
@@ -1286,12 +1327,20 @@ class QueryCoordinator:
                             n for n in self.replica_sets[key] if n != node_id
                         ]
                     self.update_placement(coll, sid, heal)
-                # re-home channels
+                # re-home channels: a live standby follower is the warm
+                # takeover target (its subscription — kept by the
+                # idempotent node-side subscribe — already consumed the
+                # channel, so no replay gap); else least-loaded cold start.
+                live_now = set(self.live_nodes())
                 for ch in sorted(st.channels):
                     parts = ch.split("/")
                     coll, shard = parts[1], int(parts[2])
-                    target = self._least_loaded()
+                    warm = sorted(
+                        self.channel_followers.get(ch, ()) & live_now
+                    )
+                    target = warm[0] if warm else self._least_loaded()
                     if target:
+                        self.channel_followers.get(ch, set()).discard(target)
                         self.nodes[target].channels.add(ch)
                         self._publish(
                             {

@@ -20,6 +20,8 @@ Loggers also emit the periodic time-ticks that drive delta consistency.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from ..kernels import ops
@@ -58,6 +60,10 @@ class Logger:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._last_tick_ms: dict[str, float] = {}
         self.alive = True
+        # Serializes LSN-assign + WAL publish: the broker enforces
+        # monotonic per-channel timestamps, so a threaded scheduler flush
+        # racing a user-thread mutation must not interleave the two steps.
+        self._lock = threading.Lock()
 
     # ----------------------------------------------------------- mutations
     def mutate(
@@ -74,15 +80,63 @@ class Logger:
         """
         if not self.alive:
             raise RuntimeError(f"logger {self.logger_id} is down")
+        with self._lock:
+            return self._mutate_one(info, request, trace)
+
+    def mutate_batch(
+        self,
+        info: CollectionInfo,
+        requests: "list[MutationRequest]",
+        traces: "list[tuple | None] | None" = None,
+        prevalidated: bool = False,
+    ) -> "list[MutationResult | Exception]":
+        """One WAL-entry-point crossing for a scheduler-flushed batch.
+
+        Each request keeps its OWN LSN and its own result slot — batching
+        amortizes the call and the lock, never merges semantics.  Per-slot
+        failures come back as the exception object (the scheduler fails
+        just that ticket); ``Crash`` is a BaseException and still
+        propagates, killing the whole flush like any other process death.
+        ``prevalidated`` skips per-request schema validation: the
+        scheduler already ran it at admission time.
+        """
+        if not self.alive:
+            raise RuntimeError(f"logger {self.logger_id} is down")
+        if traces is None:
+            traces = [None] * len(requests)
+        out: "list[MutationResult | Exception]" = []
+        with self._lock:
+            for request, trace in zip(requests, traces):
+                try:
+                    out.append(
+                        self._mutate_one(info, request, trace,
+                                         prevalidated=prevalidated)
+                    )
+                except Exception as exc:
+                    out.append(exc)
+        self.metrics.inc("logger_batches_total")
+        self.metrics.observe("logger_batch_requests", len(requests))
+        return out
+
+    def _mutate_one(
+        self,
+        info: CollectionInfo,
+        request: MutationRequest,
+        trace: tuple | None = None,
+        prevalidated: bool = False,
+    ) -> MutationResult:
         import time as _t
 
         t0 = _t.perf_counter()
         if isinstance(request, UpsertRequest):
-            res = self._write_rows(info, request.rows, request.partition, upsert=True)
+            res = self._write_rows(info, request.rows, request.partition,
+                                   upsert=True, prevalidated=prevalidated)
         elif isinstance(request, InsertRequest):
-            res = self._write_rows(info, request.rows, request.partition, upsert=False)
+            res = self._write_rows(info, request.rows, request.partition,
+                                   upsert=False, prevalidated=prevalidated)
         elif isinstance(request, DeleteRequest):
-            request.validate(info.schema)
+            if not prevalidated:
+                request.validate(info.schema)
             res = self._delete(info, request.pks)
         else:
             raise TypeError(f"unknown mutation request {type(request).__name__}")
@@ -111,8 +165,12 @@ class Logger:
         rows: dict[str, np.ndarray],
         partition: str,
         upsert: bool,
+        prevalidated: bool = False,
     ) -> MutationResult:
-        n = validate_rows(info.schema, rows)  # the logger verifies (Fig. 4)
+        if prevalidated:  # the scheduler verified at admission time
+            n = len(next(iter(rows.values())))
+        else:
+            n = validate_rows(info.schema, rows)  # the logger verifies (Fig. 4)
         pk_field = info.schema.primary()
         explicit = pk_field is not None and pk_field.name in rows
         if explicit:

@@ -64,8 +64,14 @@ from .retry import (
     RetryingObjectStore,
     default_sleep,
 )
-from .proxy import BatchingProxy, Proxy, SearchResult
+from .proxy import Proxy, SearchResult
 from .query_node import QueryNode
+from .scheduler import (
+    AdmissionRejected,  # noqa: F401 — re-exported API surface
+    BatchingProxy,
+    MutationTicket,
+    RequestScheduler,
+)
 from .request import (
     AnnsQuery,
     ClusterState,
@@ -105,6 +111,19 @@ class ManuConfig:
     gc_retention_ms: float = 0.0  # 0 = horizon may advance to "now"
     tick_interval_ms: float = 50.0
     default_staleness_ms: float = INFINITE_STALENESS
+    # BOUNDED consistency's staleness window (ms): how far behind "now" a
+    # ConsistencyLevel.BOUNDED read may observe.  Threaded through the
+    # proxy and request resolution so the named level is deployment-tunable.
+    bounded_staleness_ms: float = 2_000.0
+    # Serving-tier ingest scheduler (paper §3.6 request batching): each
+    # (collection, shard) write queue holds at most ``ingest_queue_rows``
+    # rows (credit-based backpressure — AdmissionRejected beyond that),
+    # flushes one micro-batched WAL crossing at ``ingest_flush_rows``
+    # accumulated rows, and never holds an admitted request longer than
+    # ``ingest_flush_ms`` (age trigger, checked by the pump).
+    ingest_queue_rows: int = 8_192
+    ingest_flush_rows: int = 1_024
+    ingest_flush_ms: float = 20.0
     manual_clock: bool = True
     threaded: bool = False
     pump_sleep_s: float = 0.002
@@ -185,6 +204,46 @@ class ManuCollection:
             return self.mutate(pks)
         return self.mutate(DeleteRequest(np.asarray(pks))).watermark_ts
 
+    # ----------------------------------------------------- async mutations
+    def mutate_async(self, request: MutationRequest) -> MutationTicket:
+        """Admit one typed mutation into the ingest scheduler's bounded
+        write queue; returns a :class:`MutationTicket` immediately.  The
+        WAL crossing happens at the next micro-batch flush (queue depth,
+        age, or an explicit ``ticket.result()`` / ``system.flush_ingest()``).
+        Raises :class:`AdmissionRejected` under backpressure."""
+        return self.system.mutate_async(self, request)
+
+    def insert_async(
+        self, rows, partition: str | None = None
+    ) -> MutationTicket:
+        if isinstance(rows, InsertRequest):
+            if partition is not None:
+                raise ValueError(
+                    "pass partition inside the InsertRequest, not as a kwarg"
+                )
+            return self.mutate_async(rows)
+        return self.mutate_async(
+            InsertRequest(rows, partition=partition or DEFAULT_PARTITION)
+        )
+
+    def upsert_async(
+        self, rows, partition: str | None = None
+    ) -> MutationTicket:
+        if isinstance(rows, UpsertRequest):
+            if partition is not None:
+                raise ValueError(
+                    "pass partition inside the UpsertRequest, not as a kwarg"
+                )
+            return self.mutate_async(rows)
+        return self.mutate_async(
+            UpsertRequest(rows, partition=partition or DEFAULT_PARTITION)
+        )
+
+    def delete_async(self, pks) -> MutationTicket:
+        if isinstance(pks, DeleteRequest):
+            return self.mutate_async(pks)
+        return self.mutate_async(DeleteRequest(np.asarray(pks)))
+
     # ------------------------------------------------------------ partitions
     def create_partition(self, partition: str) -> None:
         """Register a named partition as a placement target for writes and
@@ -219,7 +278,10 @@ class ManuCollection:
             self.system.run_until_idle()
 
     def flush(self) -> None:
-        """Seal all growing segments and wait for archive + index builds."""
+        """Seal all growing segments and wait for archive + index builds.
+        Queued async writes drain into the WAL first, so a flush covers
+        everything admitted before it."""
+        self.system.scheduler.flush_writes(collection=self.name)
         self.system.data_coord.flush(self.name)
         if self.system.config.threaded:
             self.system.wait_idle()
@@ -480,7 +542,23 @@ class ManuSystem:
             "proxy-0", self.meta, self.tso, self.loggers, self.query_coord,
             self.query_nodes, metrics=self.telemetry,
         )
-        self.batcher = BatchingProxy(self.proxy)
+        self.proxy.bounded_staleness_ms = self.config.bounded_staleness_ms
+        # The serving-tier request scheduler: async micro-batched ingest
+        # with backpressure plus the read micro-batching stage the batcher
+        # fronts.  Rebuilt by restart() like every process — tickets still
+        # queued at a crash are lost with it (clients re-submit), exactly
+        # like unacknowledged requests against a dead proxy.
+        self.scheduler = RequestScheduler(
+            self.proxy,
+            clock=self.clock,
+            queue_rows=self.config.ingest_queue_rows,
+            flush_rows=self.config.ingest_flush_rows,
+            flush_interval_ms=self.config.ingest_flush_ms,
+            metrics=self.telemetry,
+            guarantee_fn=lambda _info, req: self._resolve_guarantee(req),
+            on_flush=self._after_ingest_flush,
+        )
+        self.batcher = BatchingProxy(self.proxy, scheduler=self.scheduler)
         self.time_travel = TimeTravel(self.broker, self.store)
         self._qn_counter = self.config.num_query_nodes
 
@@ -1023,6 +1101,34 @@ class ManuSystem:
             self.pump()
         return result
 
+    def mutate_async(
+        self, coll: ManuCollection, request: MutationRequest
+    ) -> MutationTicket:
+        """Admit one typed mutation into the ingest scheduler and return
+        its :class:`MutationTicket` immediately.  The WAL crossing happens
+        at the next flush (depth / age / explicit); the ticket resolves
+        with the request's own :class:`MutationResult` then, advancing the
+        handle's SESSION watermark.  Raises :class:`AdmissionRejected`
+        when the target write queue is out of credits (backpressure)."""
+        ticket = self.scheduler.submit_mutation(coll.info, request)
+
+        def _note(result: MutationResult, c=coll) -> None:
+            c.last_write_ts = max(c.last_write_ts, result.watermark_ts)
+
+        ticket.on_resolve(_note)
+        return ticket
+
+    def flush_ingest(self) -> int:
+        """Flush every pending ingest queue now; returns requests flushed."""
+        return self.scheduler.flush_writes()
+
+    def _after_ingest_flush(self) -> None:
+        """Post-flush hook: cooperative runtimes pump so subscribers
+        observe the just-published WAL entries (threaded runtimes have the
+        pump thread doing this continuously)."""
+        if not self.config.threaded:
+            self.pump()
+
     # ---------------------------------------------------------------- pump
     def pump(self, rounds: int = 1) -> bool:
         """One cooperative scheduling round over every component."""
@@ -1051,6 +1157,9 @@ class ManuSystem:
             progress |= self.query_coord.step()
             for qn in self.query_nodes.values():
                 progress |= self._crashable_step("query", qn)
+            # Ingest scheduler age trigger: admitted-but-unflushed writes
+            # never outlive ``ingest_flush_ms`` of pump activity.
+            progress |= self.scheduler.step()
         return progress
 
     def _crashable_step(self, kind: str, node) -> bool:
@@ -1223,31 +1332,54 @@ class ManuSystem:
                 filter=filter_expr,
                 time_travel_ts=time_travel_ts,
             )
-        effective_session = (
-            request.session_ts if session_ts is None else session_ts
-        )
-        tau = request.resolve_staleness_ms(self.config.default_staleness_ms)
-        if request.time_travel_ts is not None:
-            # Historical reads never wait: the data is by definition old.
-            query_ts = request.time_travel_ts
-            guarantee = GuaranteeTs(query_ts=query_ts, staleness_ms=INFINITE_STALENESS)
-        else:
-            query_ts = self.tso.next()
-            guarantee = GuaranteeTs(
-                query_ts=query_ts, staleness_ms=tau, session_ts=effective_session
-            )
+        guarantee = self._resolve_guarantee(request, session_ts=session_ts)
         wait_fn = self._threaded_wait if self.config.threaded else self._cooperative_wait
         return self.proxy.search(
             coll.info, request, guarantee=guarantee,
             wait_fn=wait_fn, hedge_timeout_s=hedge_timeout_s,
         )
 
-    def _cooperative_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:
-        collections = {c for (c, _s) in list(node.sealed) + list(node.growing)}
-        channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+    def _resolve_guarantee(
+        self, request: SearchRequest, session_ts: int | None = None
+    ) -> GuaranteeTs:
+        """Resolve a request's consistency fields against this system's
+        configuration: explicit tau > named level (BOUNDED uses
+        ``bounded_staleness_ms``) > ``default_staleness_ms``.  Also the
+        ingest scheduler's guarantee resolver for queued reads."""
+        effective_session = (
+            request.session_ts if session_ts is None else session_ts
+        )
+        tau = request.resolve_staleness_ms(
+            self.config.default_staleness_ms,
+            bounded_ms=self.config.bounded_staleness_ms,
+        )
+        if request.time_travel_ts is not None:
+            # Historical reads never wait: the data is by definition old.
+            return GuaranteeTs(
+                query_ts=request.time_travel_ts, staleness_ms=INFINITE_STALENESS
+            )
+        return GuaranteeTs(
+            query_ts=self.tso.next(), staleness_ms=tau,
+            session_ts=effective_session,
+        )
+
+    def _cooperative_wait(
+        self, node: QueryNode, guarantee: GuaranteeTs, channels=None
+    ) -> None:
+        """Pump until the node's consumed watermark covers the guarantee.
+
+        ``channels`` scopes the wait (watermark-aware routing passes
+        exactly the channels whose picked server still lags); None keeps
+        the legacy behavior of waiting on every DML channel the node
+        serves."""
+        if channels is None:
+            channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+        else:
+            channels = list(channels)
         if not channels:
             return
         target = guarantee.wait_target_ts()
+        seen_sub = False
         for _ in range(100_000):
             # Re-read each round: a reconcile during the pump may re-home a
             # channel off this node (its new owner runs its own wait).
@@ -1256,11 +1388,17 @@ class ManuSystem:
                 for ch in channels
                 if ch in node.subscriptions
             ]
-            if not subs:
+            if subs:
+                seen_sub = True
+                wm = min(s.last_tick_seen for s in subs)
+                if wm >= target or guarantee.satisfied_by(wm):
+                    return
+            elif seen_sub:
+                # The channel moved off this node mid-wait; its new owner
+                # runs its own wait.
                 return
-            wm = min(s.last_tick_seen for s in subs)
-            if wm >= target or guarantee.satisfied_by(wm):
-                return
+            # No subscription yet: a scoped wait may start before the node
+            # applied its subscribe message — pump until it lands.
             if isinstance(self.clock, ManualClock):
                 self.clock.advance(max(self.config.tick_interval_ms, 1))
             for lg in self.loggers:
@@ -1271,8 +1409,13 @@ class ManuSystem:
             self._diagnostic_dump("consistency wait did not converge")
         )
 
-    def _threaded_wait(self, node: QueryNode, guarantee: GuaranteeTs) -> None:
-        channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+    def _threaded_wait(
+        self, node: QueryNode, guarantee: GuaranteeTs, channels=None
+    ) -> None:
+        if channels is None:
+            channels = [ch for ch in node.subscriptions if ch.startswith("dml/")]
+        else:
+            channels = list(channels)
         target = guarantee.wait_target_ts()
         for ch in channels:
             self.broker.wait_for_tick(ch, target, timeout_s=10.0)

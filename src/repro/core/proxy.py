@@ -80,6 +80,9 @@ class Proxy:
         self.query_coord = query_coord
         self.query_nodes = query_nodes
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # BOUNDED staleness window (ms) for named-level resolution; the
+        # system facade threads ``ManuConfig.bounded_staleness_ms`` here.
+        self.bounded_staleness_ms = 2_000.0
         # How to advance message delivery while waiting on a placement
         # change mid-request (failover / slow load).  None = step the live
         # query nodes directly (cooperative default); the threaded runtime
@@ -181,6 +184,52 @@ class Proxy:
             res.trace = trace_ctx.finish(elapsed_us)
         return res
 
+    def mutate_batch(
+        self,
+        info: CollectionInfo,
+        requests: "list[MutationRequest]",
+        shard: int = 0,
+        traces: "list[tuple | None] | None" = None,
+        prevalidated: bool = False,
+    ) -> "list[MutationResult | Exception]":
+        """Scheduler flush path: one logger crossing for a micro-batch of
+        already-admitted requests sharing a routing shard.  Verification
+        happened at admission; ``prevalidated`` additionally skips the
+        logger's per-request schema validation (admission already ran it).
+        Each slot answers with its own result (or its own exception)."""
+        self._verify(info.name)
+        logger = self._logger_for(shard)
+        results = logger.mutate_batch(
+            info, requests, traces=traces, prevalidated=prevalidated
+        )
+        for request, res in zip(requests, results):
+            if isinstance(res, MutationResult):
+                self.metrics.inc(
+                    "proxy_mutations_total", labels={"op": request.op}
+                )
+        return results
+
+    def resolve_guarantee(self, request: SearchRequest) -> GuaranteeTs:
+        """Pin the request's consistency fields to a :class:`GuaranteeTs`.
+
+        Standalone-proxy rules: named levels resolve against this proxy's
+        ``bounded_staleness_ms``; unset consistency falls back to INFINITE
+        staleness (eventual — any watermark satisfies, session_ts still
+        honored).  The system facade substitutes its own configured
+        default instead."""
+        if request.time_travel_ts is not None:
+            return GuaranteeTs(
+                query_ts=request.time_travel_ts,
+                staleness_ms=INFINITE_STALENESS,
+            )
+        return GuaranteeTs(
+            query_ts=self.tso.next(),
+            staleness_ms=request.resolve_staleness_ms(
+                INFINITE_STALENESS, bounded_ms=self.bounded_staleness_ms
+            ),
+            session_ts=request.session_ts,
+        )
+
     # ------------------------------------------------------ legacy facades
     def insert(self, info: CollectionInfo, rows: dict[str, np.ndarray]) -> tuple[int, int]:
         """Legacy surface: (lsn, row_count) via the typed pipeline."""
@@ -243,17 +292,7 @@ class Proxy:
             # Standalone proxy use: honor the request's own consistency
             # fields (the system facade resolves these with its configured
             # default staleness and wait machinery instead).
-            if request.time_travel_ts is not None:
-                guarantee = GuaranteeTs(
-                    query_ts=request.time_travel_ts,
-                    staleness_ms=INFINITE_STALENESS,
-                )
-            else:
-                guarantee = GuaranteeTs(
-                    query_ts=self.tso.next(),
-                    staleness_ms=request.resolve_staleness_ms(INFINITE_STALENESS),
-                    session_ts=request.session_ts,
-                )
+            guarantee = self.resolve_guarantee(request)
         metric = info.metric
         n_fields = len(request.anns)
         trace_ctx = TraceContext("search") if request.trace else None
@@ -284,11 +323,21 @@ class Proxy:
             return node.search_request(node_req)
 
         # Replica-aware plan: (node_id, sealed plan units) per dispatch;
-        # channel owners join with an empty unit set for growing rows.
-        chosen, orphans = self._dispatch_plan(info.name)
+        # channel servers join with an empty unit set for growing rows —
+        # per channel, the freshest replica whose consumed watermark
+        # already covers the guarantee when one exists (zero-wait routing,
+        # paper §4.2), else the freshest available (waited).
+        chosen, orphans, waits = self._dispatch_plan(info.name, guarantee)
         pending: "list[tuple[str, frozenset[int]]]" = [
             (n, frozenset(s)) for n, s in sorted(chosen.items())
         ]
+        # Consistency-wait scope per dispatched node: a sorted channel
+        # tuple = wait only on those channels (empty = routed, no wait);
+        # None = legacy full wait over every channel the node serves
+        # (failover additions below stay conservative with None).
+        wait_scopes: "dict[str, tuple | None]" = {
+            n: tuple(sorted(waits.get(n, ()))) for n, _ in pending
+        }
         if orphans:
             pending.extend(self._recover_orphans(info.name, orphans))
         # partials[f] collects every node's candidate list for sub-request f
@@ -298,6 +347,7 @@ class Proxy:
         done_ids: set[str] = set()
         covered: set[int] = set()  # sealed units already answered
         hedged_units: set[tuple[str, frozenset]] = set()
+        wait_scoped: bool | None = None  # does wait_fn accept a channel scope?
         while pending:
             node_id, sids = pending.pop(0)
             is_hedge = (node_id, sids) in hedged_units
@@ -306,7 +356,18 @@ class Proxy:
             failed = node is None or not node.alive
             if not failed:
                 if wait_fn is not None:
-                    wait_fn(node, guarantee)
+                    scope = wait_scopes.get(node_id, None)
+                    if scope is None:
+                        wait_fn(node, guarantee)
+                    elif scope:
+                        if wait_scoped is None:
+                            wait_scoped = _accepts_channel_scope(wait_fn)
+                        if wait_scoped:
+                            wait_fn(node, guarantee, scope)
+                        else:  # legacy wait_fn: conservative full wait
+                            wait_fn(node, guarantee)
+                    # empty scope: every channel this node serves is already
+                    # covered by a routed pick — zero-wait path, no call
                 try:
                     if hedge_timeout_s is not None:
                         res = _run_with_timeout(
@@ -496,20 +557,83 @@ class Proxy:
             key=lambda n: (len(chosen.get(n, ())), *self._node_load(n), n),
         )
 
+    def _channel_watermark(self, node_id: str, channel: str) -> int:
+        """The node's consumed watermark on one DML channel (-1 = not
+        actually subscribed yet — the coordinator committed the assignment
+        but the subscribe message hasn't been applied)."""
+        qn = self.query_nodes.get(node_id)
+        if qn is None:
+            return -1
+        sub = qn.subscriptions.get(channel)
+        return sub.last_tick_seen if sub is not None else -1
+
     def _dispatch_plan(
-        self, collection: str
-    ) -> "tuple[dict[str, set[int]], list[int]]":
-        """Build the replica-aware dispatch plan: DML channel owners (for
-        growing rows) plus, per live sealed segment, one replica chosen by
-        load.  Segments with no dispatchable replica right now are
-        returned as orphans for the failover path."""
+        self, collection: str, guarantee: GuaranteeTs | None = None
+    ) -> "tuple[dict[str, set[int]], list[int], dict[str, set[str]]]":
+        """Build the replica-aware dispatch plan: per DML channel one
+        serving replica for growing rows, plus per live sealed segment one
+        replica chosen by load.  Segments with no dispatchable replica
+        right now are returned as orphans for the failover path.
+
+        Watermark-aware routing (paper §4.2 delta consistency): with a
+        ``guarantee``, each channel prefers the *freshest candidate whose
+        consumed watermark already covers* ``guarantee.wait_target_ts()``
+        — that read waits 0 ms.  When nobody covers yet (e.g. STRONG: the
+        query_ts postdates every tick by construction), the freshest
+        candidate minimizes the wait, and the returned ``waits`` map marks
+        the channel so the dispatch loop runs the consistency wait scoped
+        to exactly the channels that still need it."""
         coord = self.query_coord
         chosen: dict[str, set[int]] = {}
+        waits: dict[str, set[str]] = {}
+        prefix = f"dml/{collection}/"
+        followers = getattr(coord, "channel_followers", {})
+        cands_by_ch: dict[str, list[str]] = {}
         for n, st in coord.nodes.items():
-            if self._alive(n) and any(
-                ch.startswith(f"dml/{collection}/") for ch in st.channels
-            ):
-                chosen.setdefault(n, set())
+            if not self._alive(n):
+                continue
+            for ch in st.channels:
+                if ch.startswith(prefix):
+                    cands_by_ch.setdefault(ch, []).append(n)
+        for ch, fset in followers.items():
+            if ch.startswith(prefix):
+                for n in fset:
+                    if self._alive(n) and n not in cands_by_ch.get(ch, ()):
+                        cands_by_ch.setdefault(ch, []).append(n)
+        for ch, cands in sorted(cands_by_ch.items()):
+            covering = [] if guarantee is None else [
+                n for n in cands
+                if guarantee.satisfied_by(self._channel_watermark(n, ch))
+            ]
+            if covering:
+                # Freshest covering candidate (owner or standby follower):
+                # the delta-consistency zero-wait path.
+                pick = min(
+                    covering,
+                    key=lambda n: (
+                        -self._channel_watermark(n, ch),
+                        *self._node_load(n),
+                        n,
+                    ),
+                )
+                chosen.setdefault(pick, set())
+                self.metrics.inc(
+                    "consistency_routes_total", labels={"outcome": "covered"}
+                )
+                continue
+            # Nobody covers (STRONG reads never can at plan time — their
+            # query_ts postdates every consumed tick): legacy behavior,
+            # the committed owner serves and runs the consistency wait.
+            owners = [n for n in cands if ch in coord.nodes[n].channels]
+            pick = min(
+                owners or cands, key=lambda n: (*self._node_load(n), n)
+            )
+            chosen.setdefault(pick, set())
+            waits.setdefault(pick, set()).add(ch)
+            if guarantee is not None:
+                self.metrics.inc(
+                    "consistency_routes_total", labels={"outcome": "waited"}
+                )
         orphans: list[int] = []
         for sid in sorted(coord.placement_for(collection)):
             pick = self._pick_replica(collection, sid, chosen=chosen)
@@ -517,7 +641,7 @@ class Proxy:
                 orphans.append(sid)
             else:
                 chosen.setdefault(pick, set()).add(sid)
-        return chosen, orphans
+        return chosen, orphans, waits
 
     def _pump(self) -> None:
         """Advance coordination-message delivery while waiting on a
@@ -751,6 +875,29 @@ def _mask_fill(vals: np.ndarray, hit: np.ndarray) -> np.ndarray:
     return np.where(hit, vals, np.zeros((), vals.dtype))
 
 
+def _accepts_channel_scope(wait_fn) -> bool:
+    """Can ``wait_fn`` take the optional third ``channels`` argument?
+    Checked once per search so scoped waits degrade gracefully for legacy
+    two-argument wait callables."""
+    import inspect
+
+    try:
+        sig = inspect.signature(wait_fn)
+    except (TypeError, ValueError):  # builtins / C callables: assume legacy
+        return False
+    params = list(sig.parameters.values())
+    if any(p.kind is inspect.Parameter.VAR_POSITIONAL for p in params):
+        return True
+    positional = [
+        p for p in params
+        if p.kind in (
+            inspect.Parameter.POSITIONAL_ONLY,
+            inspect.Parameter.POSITIONAL_OR_KEYWORD,
+        )
+    ]
+    return len(positional) >= 3
+
+
 def _run_with_timeout(fn, timeout_s: float):
     """Run fn in a worker thread; None on timeout (hedged-request helper)."""
     result: list = []
@@ -764,44 +911,6 @@ def _run_with_timeout(fn, timeout_s: float):
     return result[0] if result else None
 
 
-class BatchingProxy:
-    """Request batching (paper §3.6): requests of the same type are grouped
-    into one batch and handled together.  Each flushed group runs through
-    ``Proxy.search`` and therefore the same fused-scan + ``merge_topk``
-    global reduce as single requests."""
-
-    def __init__(self, proxy: Proxy, max_batch: int = 64):
-        self.proxy = proxy
-        self.max_batch = max_batch
-        self._queue: list[tuple[CollectionInfo, np.ndarray, int, GuaranteeTs]] = []
-
-    def submit(self, info, query: np.ndarray, k: int, guarantee: GuaranteeTs) -> int:
-        self._queue.append((info, query, k, guarantee))
-        return len(self._queue) - 1
-
-    def flush(self, wait_fn=None) -> list[SearchResult]:
-        """Group by (collection, k) and run each group as one batch."""
-        results: list[SearchResult | None] = [None] * len(self._queue)
-        groups: dict[tuple[str, int], list[int]] = {}
-        for i, (info, _q, k, _g) in enumerate(self._queue):
-            groups.setdefault((info.name, k), []).append(i)
-        for (name, k), idxs in groups.items():
-            info = self._queue[idxs[0]][0]
-            qs = np.concatenate([self._queue[i][1] for i in idxs], axis=0)
-            # the batch executes under the *strictest* guarantee in the group
-            guarantee = max(
-                (self._queue[i][3] for i in idxs), key=lambda g: g.wait_target_ts()
-            )
-            batch_res = self.proxy.search(info, qs, k, guarantee, wait_fn=wait_fn)
-            row = 0
-            for i in idxs:
-                n_i = len(self._queue[i][1])
-                results[i] = SearchResult(
-                    batch_res.scores[row : row + n_i],
-                    batch_res.pks[row : row + n_i],
-                    batch_res.query_ts,
-                    batch_res.waited_ms,
-                )
-                row += n_i
-        self._queue.clear()
-        return results
+# BatchingProxy is now the scheduler's read micro-batching facade; the
+# import lives at the bottom because scheduler.py imports SearchResult.
+from .scheduler import BatchingProxy, RequestScheduler  # noqa: E402,F401

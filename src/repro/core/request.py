@@ -277,12 +277,17 @@ class SearchRequest:
     def is_hybrid(self) -> bool:
         return len(self.anns) > 1
 
-    def resolve_staleness_ms(self, default_ms: float) -> float:
-        """Explicit tau > named level > system default."""
+    def resolve_staleness_ms(
+        self, default_ms: float, bounded_ms: float = 2_000.0
+    ) -> float:
+        """Explicit tau > named level > system default.  ``bounded_ms`` is
+        the deployment's BOUNDED staleness window (``ManuConfig.
+        bounded_staleness_ms``), threaded through so the named level is a
+        tunable, not a constant."""
         if self.staleness_ms is not None:
             return self.staleness_ms
         if self.consistency is not None:
-            return staleness_ms_of(self.consistency)
+            return staleness_ms_of(self.consistency, bounded_ms)
         return default_ms
 
     def validate(self, schema: Schema) -> None:

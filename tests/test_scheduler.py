@@ -1,0 +1,412 @@
+"""Serving-tier request scheduler: async micro-batched ingest with
+credit-based backpressure, read micro-batching over typed requests, and
+watermark-aware bounded-staleness routing."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionRejected,
+    ConsistencyLevel,
+    FaultInjector,
+    FieldSchema,
+    FieldType,
+    GuaranteeTs,
+    InsertRequest,
+    ManuConfig,
+    ManuSystem,
+    SearchRequest,
+)
+from repro.core.consistency import staleness_ms_of
+from repro.core.log import dml_channel
+from repro.core.timestamp import INFINITE_STALENESS, pack, physical_of
+
+DIM = 16
+
+
+def make_system(**over):
+    kw = dict(num_query_nodes=2, seal_rows=100_000, num_shards=2)
+    kw.update(over)
+    return ManuSystem(ManuConfig(**kw))
+
+
+def vecs(rng, n):
+    return {"vector": rng.standard_normal((n, DIM)).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# async write path: tickets, one LSN per request, explicit/result flush
+# ---------------------------------------------------------------------------
+
+
+def test_insert_async_tickets_resolve_with_own_results(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM)
+    sizes = [7, 13, 5]
+    tickets = [coll.insert_async(vecs(rng, n)) for n in sizes]
+    assert not any(t.done for t in tickets)  # queued, not yet flushed
+    assert system.scheduler.pending_write_rows("c") == sum(sizes)
+
+    flushed = system.flush_ingest()
+    assert flushed == len(sizes)
+    results = [t.result() for t in tickets]
+    # each original request keeps its OWN LSN and row count
+    assert [r.row_count for r in results] == sizes
+    lsns = [r.watermark_ts for r in results]
+    assert len(set(lsns)) == len(sizes)
+    assert lsns == sorted(lsns)  # queue order preserved within the batch
+    # exactly ONE WAL-entry-point crossing for the whole batch
+    assert system.telemetry.counter_value("logger_batches_total") == 1.0
+
+    system.run_until_idle()
+    assert coll.num_entities() == sum(sizes)
+    # session read-your-writes covers the async watermark
+    res = coll.search(rng.standard_normal((1, DIM)).astype(np.float32),
+                      limit=5, read_your_writes=True)
+    assert res.pks.shape == (1, 5)
+
+
+def test_ticket_result_force_flushes_own_queue(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM)
+    ticket = coll.insert_async(vecs(rng, 9))
+    assert not ticket.done
+    res = ticket.result()  # no explicit flush_ingest: result() forces it
+    assert res.row_count == 9
+    system.run_until_idle()
+    assert coll.num_entities() == 9
+
+
+def test_collection_flush_drains_scheduler_queue(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM)
+    coll.insert_async(vecs(rng, 20))
+    coll.flush()  # must include admitted-but-unflushed rows
+    assert coll.num_entities() == 20
+
+
+# ---------------------------------------------------------------------------
+# backpressure: typed admission rejection + credit recovery
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejected_is_typed_and_credits_recover(rng):
+    system = make_system(ingest_queue_rows=100, ingest_flush_rows=10_000,
+                         ingest_flush_ms=1e9)
+    coll = system.create_collection("c", dim=DIM)
+    first = coll.insert_async(vecs(rng, 60))
+    with pytest.raises(AdmissionRejected) as ei:
+        coll.insert_async(vecs(rng, 50))
+    err = ei.value
+    assert err.collection == "c"
+    assert err.shard == 0  # auto-pk batches route to shard 0
+    assert err.pending_rows == 60
+    assert err.capacity_rows == 100
+    assert err.request_rows == 50
+    assert system.telemetry.counter_value("sched_rejected_total") == 1.0
+
+    # flushing returns the credits; the same request is then admitted
+    system.flush_ingest()
+    assert first.done
+    retry = coll.insert_async(vecs(rng, 50))
+    assert retry.result().row_count == 50
+
+
+def test_oversize_request_admitted_only_into_empty_queue(rng):
+    system = make_system(ingest_queue_rows=100, ingest_flush_rows=10_000,
+                         ingest_flush_ms=1e9)
+    coll = system.create_collection("c", dim=DIM)
+    big = coll.insert_async(vecs(rng, 300))  # > capacity, queue empty: admit
+    coll.insert_async(vecs(rng, 300))  # capacity already spent: reject
+    system.flush_ingest()
+    assert big.result().row_count == 300
+
+
+# ---------------------------------------------------------------------------
+# flush triggers: depth (at submit) and age (via pump)
+# ---------------------------------------------------------------------------
+
+
+def test_depth_trigger_flushes_at_flush_rows(rng):
+    system = make_system(ingest_flush_rows=32, ingest_flush_ms=1e9)
+    coll = system.create_collection("c", dim=DIM)
+    t1 = coll.insert_async(vecs(rng, 16))
+    assert not t1.done  # 16 < 32: still queued
+    t2 = coll.insert_async(vecs(rng, 16))
+    # 32 rows accumulated: the depth trigger flushed synchronously
+    assert t1.done and t2.done
+    assert system.telemetry.counter_value(
+        "sched_flushes_total", {"trigger": "depth"}) == 1.0
+
+
+def test_age_trigger_flushes_via_pump(rng):
+    system = make_system(ingest_flush_ms=20.0)
+    coll = system.create_collection("c", dim=DIM)
+    ticket = coll.insert_async(vecs(rng, 4))
+    system.pump()
+    assert not ticket.done  # age 0ms < 20ms
+    system.clock.advance(25)
+    system.pump()
+    assert ticket.done
+    assert system.telemetry.counter_value(
+        "sched_flushes_total", {"trigger": "age"}) == 1.0
+
+
+def test_threaded_age_trigger_resolves_without_forcing(rng):
+    system = make_system(manual_clock=False, threaded=True,
+                         ingest_flush_ms=5.0, num_query_nodes=1, num_shards=1)
+    try:
+        coll = system.create_collection("c", dim=DIM)
+        ticket = coll.insert_async(vecs(rng, 8))
+        # wait() never forces a flush: only the pump loop's age trigger
+        # can resolve this ticket
+        assert ticket.wait(5.0)
+        assert ticket.result().row_count == 8
+        system.wait_idle()
+        assert coll.num_entities() == 8
+    finally:
+        system.stop_threads()
+
+
+# ---------------------------------------------------------------------------
+# read micro-batching: typed requests group by plan shape, split exactly
+# ---------------------------------------------------------------------------
+
+
+def test_batching_proxy_typed_requests_match_single_shot(rng):
+    system = make_system(seal_rows=200, slice_rows=64)
+    coll = system.create_collection(
+        "c", dim=DIM,
+        extra_fields=[FieldSchema("price", FieldType.FLOAT),
+                      FieldSchema("label", FieldType.STRING)],
+    )
+    n = 500
+    rows = vecs(rng, n)
+    rows["price"] = rng.uniform(0, 100, n)
+    rows["label"] = rng.choice(["a", "b"], n)
+    coll.insert(rows)
+    coll.flush()  # sealed + growing mix
+    coll.insert({"vector": rng.standard_normal((80, DIM)).astype(np.float32),
+                 "price": rng.uniform(0, 100, 80),
+                 "label": rng.choice(["a", "b"], 80)})
+
+    requests = [
+        SearchRequest.single(
+            rng.standard_normal((1, DIM)).astype(np.float32), field="vector",
+            k=8, staleness_ms=0.0, filter="price < 50 and label == 'a'",
+            output_fields=("price",),
+        )
+        for _ in range(3)
+    ] + [
+        SearchRequest.single(
+            rng.standard_normal((2, DIM)).astype(np.float32), field="vector",
+            k=5, staleness_ms=0.0,
+        )
+        for _ in range(2)
+    ]
+    for req in requests:
+        system.batcher.submit_request(coll.info, req)
+    batches_before = system.telemetry.counter_value("sched_search_batches_total")
+    batched = system.batcher.flush(wait_fn=system._cooperative_wait)
+    # two distinct plan shapes -> exactly two proxy searches
+    assert (system.telemetry.counter_value("sched_search_batches_total")
+            - batches_before) == 2.0
+
+    for req, got in zip(requests, batched):
+        want = coll.search(request=req)
+        np.testing.assert_array_equal(got.pks, want.pks)
+        np.testing.assert_allclose(got.scores, want.scores, rtol=1e-5)
+        if req.output_fields:
+            assert got.fields is not None
+            np.testing.assert_allclose(
+                got.fields["price"], want.fields["price"], rtol=1e-6)
+        assert got.pks.shape[0] == req.nq  # split matches each request's nq
+
+
+def test_batching_proxy_legacy_tuple_surface_survives(rng):
+    system = make_system()
+    coll = system.create_collection("c", dim=DIM)
+    coll.insert(vecs(rng, 300))
+    system.run_until_idle()
+    qs = rng.standard_normal((4, DIM)).astype(np.float32)
+    for r in range(4):
+        system.batcher.submit(coll.info, qs[r:r + 1], 3,
+                              GuaranteeTs(system.tso.next(), 0.0))
+    out = system.batcher.flush(wait_fn=system._cooperative_wait)
+    want = coll.search(qs, limit=3, staleness_ms=0.0)
+    for r in range(4):
+        np.testing.assert_array_equal(out[r].pks[0], want.pks[r])
+
+
+def test_read_batch_executes_under_strictest_guarantee(rng):
+    system = make_system(num_shards=1, num_query_nodes=1)
+    coll = system.create_collection("c", dim=DIM)
+    coll.insert(vecs(rng, 100))
+    system.run_until_idle()
+    res = system.proxy.mutate(coll.info, InsertRequest(vecs(rng, 40)))
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    # an EVENTUAL ticket groups with a STRONG-by-session one; the batch
+    # must satisfy the session watermark for BOTH slices
+    i_loose = system.batcher.submit_request(
+        coll.info, SearchRequest.single(q, field="vector", k=20),
+        guarantee=GuaranteeTs(system.tso.next(), INFINITE_STALENESS),
+    )
+    i_strict = system.batcher.submit_request(
+        coll.info, SearchRequest.single(q, field="vector", k=20),
+        guarantee=GuaranteeTs(system.tso.next(), INFINITE_STALENESS,
+                              session_ts=res.watermark_ts),
+    )
+    out = system.batcher.flush(wait_fn=system._cooperative_wait)
+    for i in (i_loose, i_strict):
+        assert set(res.pks.tolist()) & set(out[i].pks[0].tolist())
+
+
+# ---------------------------------------------------------------------------
+# watermark-aware routing: covered replicas serve bounded reads with no wait
+# ---------------------------------------------------------------------------
+
+
+def test_covered_replica_serves_read_with_zero_wait_bit_for_bit(rng):
+    system = make_system(num_query_nodes=2, num_shards=1, num_loggers=1,
+                         replication_factor=2)
+    coll = system.create_collection("c", dim=DIM)
+    coll.insert(vecs(rng, 200))
+    system.run_until_idle()
+
+    ch = dml_channel("c", 0)
+    coord = system.query_coord
+    owner = next(n for n, st in coord.nodes.items() if ch in st.channels)
+    followers = sorted(coord.channel_followers.get(ch, ()))
+    assert followers and owner not in followers
+    follower = followers[0]
+
+    # Diverge the replicas: write through the proxy (no pump), force a
+    # tick, and let ONLY the follower consume it.
+    res = system.proxy.mutate(coll.info, InsertRequest(vecs(rng, 50)))
+    for lg in system.loggers:
+        lg.tick([ch], force=True)
+    fnode = system.query_nodes[follower]
+    while fnode.step():
+        pass
+    assert system.proxy._channel_watermark(follower, ch) >= res.watermark_ts
+    assert system.proxy._channel_watermark(owner, ch) < res.watermark_ts
+
+    guarantee = GuaranteeTs(system.tso.next(), INFINITE_STALENESS,
+                            session_ts=res.watermark_ts)
+    req = SearchRequest.single(
+        rng.standard_normal((2, DIM)).astype(np.float32), field="vector", k=10)
+    wait_calls = []
+
+    def recording_wait(node, g, channels=None):
+        wait_calls.append((node.node_id, channels))
+
+    covered_before = system.telemetry.counter_value(
+        "consistency_routes_total", {"outcome": "covered"})
+    routed = system.proxy.search(coll.info, req, guarantee=guarantee,
+                                 wait_fn=recording_wait)
+    assert system.telemetry.counter_value(
+        "consistency_routes_total", {"outcome": "covered"}) == covered_before + 1
+    # the covering follower served the read: nobody waited at all
+    assert wait_calls == []
+    assert set(res.pks.tolist()) & set(routed.pks.flatten().tolist())
+
+    # Wait-based path for the SAME guarantee (followers hidden so the
+    # lagging owner must wait): results are bit-for-bit identical.
+    saved, coord.channel_followers = coord.channel_followers, {}
+    try:
+        waited = system.proxy.search(coll.info, req, guarantee=guarantee,
+                                     wait_fn=system._cooperative_wait)
+    finally:
+        coord.channel_followers = saved
+    np.testing.assert_array_equal(routed.pks, waited.pks)
+    np.testing.assert_array_equal(routed.scores, waited.scores)
+    assert system.telemetry.counter_value(
+        "consistency_routes_total", {"outcome": "waited"}) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# GuaranteeTs.wait_target_ts edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_wait_target_ts_edge_cases():
+    ts = pack(10_000, 5)
+
+    # INFINITE staleness: eventual — wait only for the session watermark
+    g = GuaranteeTs(ts, INFINITE_STALENESS)
+    assert g.wait_target_ts() == 0
+    g = GuaranteeTs(ts, INFINITE_STALENESS, session_ts=123)
+    assert g.wait_target_ts() == 123
+
+    # zero staleness (STRONG): wait for the query timestamp itself
+    g = GuaranteeTs(ts, 0.0)
+    assert g.wait_target_ts() == ts
+    assert g.satisfied_by(ts) and not g.satisfied_by(ts - 1)
+
+    # session + bounded interplay: the session watermark dominates when it
+    # is ahead of the staleness-derived target
+    tau = 100.0
+    sess = pack(9_990, 0)  # inside the window, ahead of phys target
+    g = GuaranteeTs(ts, tau, session_ts=sess)
+    assert g.wait_target_ts() == sess
+    assert not g.satisfied_by(sess - 1)  # read-your-writes still enforced
+
+    # bounded without session: target sits tau behind the query timestamp
+    g = GuaranteeTs(ts, tau)
+    target = g.wait_target_ts()
+    assert physical_of(target) == 10_000 - int(tau) + 1
+    assert g.satisfied_by(target)
+
+    # tau larger than the whole clock epoch: phys floor clamps to zero, so
+    # ANY watermark satisfies the guarantee (pure eventual)
+    g = GuaranteeTs(ts, 1e12)
+    assert g.wait_target_ts() == 0
+    assert g.satisfied_by(0)
+
+    # named-level resolution backing the config knob
+    assert staleness_ms_of(ConsistencyLevel.BOUNDED, bounded_ms=750.0) == 750.0
+    assert staleness_ms_of(ConsistencyLevel.STRONG) == 0.0
+    assert staleness_ms_of(ConsistencyLevel.EVENTUAL) == INFINITE_STALENESS
+
+
+# ---------------------------------------------------------------------------
+# chaos-matrix probe: backpressure + transient faults lose/duplicate nothing
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_under_faults_loses_and_duplicates_nothing():
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", "42"))
+    inj = FaultInjector(seed=seed)
+    inj.transient("log.publish", 0.03)
+    inj.transient("object_store.put", 0.05)
+    system = ManuSystem(
+        ManuConfig(num_query_nodes=2, num_shards=2, seal_rows=100_000,
+                   ingest_queue_rows=128, ingest_flush_rows=10_000,
+                   ingest_flush_ms=1e9),
+        injector=inj,
+    )
+    rng = np.random.default_rng(seed)
+    coll = system.create_collection("c", dim=DIM)
+
+    tickets, total_rows, rejections = [], 0, 0
+    for _ in range(40):
+        rows = vecs(rng, int(rng.integers(1, 48)))
+        try:
+            tickets.append(coll.insert_async(rows))
+        except AdmissionRejected:
+            rejections += 1
+            system.flush_ingest()  # returns credits; retry must be admitted
+            tickets.append(coll.insert_async(rows))
+        total_rows += rows["vector"].shape[0]
+    assert rejections > 0  # the probe exercised a full queue
+    system.flush_ingest()
+
+    results = [t.result() for t in tickets]
+    lsns = [r.watermark_ts for r in results]
+    assert len(set(lsns)) == len(tickets)  # no duplicated LSNs
+    all_pks = np.concatenate([r.pks for r in results])
+    assert len(np.unique(all_pks)) == total_rows  # no lost/duplicated rows
+    system.run_until_idle()
+    assert coll.num_entities() == total_rows
