@@ -246,6 +246,11 @@ def dml_channel(collection: str, shard: int) -> str:
     return f"dml/{collection}/{shard}"
 
 
+def shard_of_channel(channel: str) -> int:
+    """Inverse of :func:`dml_channel`: the shard a DML channel carries."""
+    return int(channel.rsplit("/", 1)[1])
+
+
 _HASH_MASK = 0x7FFFFFFF
 
 

@@ -1094,7 +1094,15 @@ class ManuSystem:
     def mutate(self, coll: ManuCollection, request: MutationRequest) -> MutationResult:
         """Run one typed mutation through the proxy pipeline, remember its
         watermark for SESSION reads on this handle, and (cooperative mode)
-        pump the components so subscribers observe the WAL entries."""
+        pump the components so subscribers observe the WAL entries.
+
+        Pending async mutations to the same collection are flushed first:
+        a sync mutation must not overtake requests admitted earlier —
+        ``insert_async(pk)`` followed by a sync ``delete(pk)`` has to
+        reach the WAL in admission order or the delete would apply before
+        the insert and resurrect the row."""
+        if self.scheduler.pending_write_rows(coll.info.name):
+            self.scheduler.flush_writes(coll.info.name)
         result = self.proxy.mutate(coll.info, request)
         coll.last_write_ts = result.watermark_ts
         if not self.config.threaded:
@@ -1397,6 +1405,21 @@ class ManuSystem:
                 # The channel moved off this node mid-wait; its new owner
                 # runs its own wait.
                 return
+            else:
+                # Never saw a subscription: the subscribe may still be in
+                # flight — but only while the coordinator still assigns a
+                # scoped channel here.  If ownership moved (or the node was
+                # dropped) between plan and wait, no subscribe will ever
+                # land: return instead of pumping to the round limit; the
+                # new owner runs its own wait.
+                st = self.query_coord.nodes.get(node.node_id)
+                followers = getattr(self.query_coord, "channel_followers", {})
+                if not any(
+                    (st is not None and ch in st.channels)
+                    or node.node_id in followers.get(ch, ())
+                    for ch in channels
+                ):
+                    return
             # No subscription yet: a scoped wait may start before the node
             # applied its subscribe message — pump until it lands.
             if isinstance(self.clock, ManualClock):

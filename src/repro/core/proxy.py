@@ -30,7 +30,7 @@ from ..kernels import ops
 from .collection import CollectionInfo, FieldType, Metric
 from .consistency import GuaranteeTs
 from .coordinator import QueryCoordinator
-from .log import shard_of_pk
+from .log import shard_of_channel, shard_of_pk
 from .logger_node import Logger
 from .meta_store import MetaStore
 from .query_node import QueryNode, StalePlanError
@@ -314,6 +314,7 @@ class Proxy:
                 info.schema, info.name, request, metric, guarantee,
                 filter=active_fexpr,
                 segments=tuple(sorted(sids)) if sids is not None else None,
+                channels=growing_scopes.get(node.node_id, None),
                 trace=node_trace,
                 hedged=hedged,
             )
@@ -327,7 +328,7 @@ class Proxy:
         # per channel, the freshest replica whose consumed watermark
         # already covers the guarantee when one exists (zero-wait routing,
         # paper §4.2), else the freshest available (waited).
-        chosen, orphans, waits = self._dispatch_plan(info.name, guarantee)
+        chosen, orphans, waits, routed = self._dispatch_plan(info.name, guarantee)
         pending: "list[tuple[str, frozenset[int]]]" = [
             (n, frozenset(s)) for n, s in sorted(chosen.items())
         ]
@@ -337,6 +338,18 @@ class Proxy:
         # (failover additions below stay conservative with None).
         wait_scopes: "dict[str, tuple | None]" = {
             n: tuple(sorted(waits.get(n, ()))) for n, _ in pending
+        }
+        # Growing-scan scope per dispatched node: each node serves growing
+        # rows only for the channels routed TO IT (() = sealed units only).
+        # Without this, a node picked for sealed segments that also
+        # subscribes a channel routed to a fresher covering replica would
+        # scan its lagging growing copy without a wait — tombstones are
+        # per-node, so rows deleted before the wait target would resurface
+        # in the merged top-k.  Failover/hedge additions below are absent
+        # from the map: scope None = full growing scan, paired with the
+        # conservative full wait above.
+        growing_scopes: "dict[str, tuple | None]" = {
+            n: tuple(sorted(routed.get(n, ()))) for n, _ in pending
         }
         if orphans:
             pending.extend(self._recover_orphans(info.name, orphans))
@@ -382,7 +395,10 @@ class Proxy:
                                     segment_ids=sorted(sids or ()),
                                     detail="timeout",
                                 )
-                            res, extra = self._hedge(info, node, sids, dispatch)
+                            res, extra = self._hedge(
+                                info, node, sids, dispatch,
+                                channels=growing_scopes.get(node_id, None),
+                            )
                             hedged_units.update(extra)
                             pending.extend(extra)
                     else:
@@ -569,7 +585,10 @@ class Proxy:
 
     def _dispatch_plan(
         self, collection: str, guarantee: GuaranteeTs | None = None
-    ) -> "tuple[dict[str, set[int]], list[int], dict[str, set[str]]]":
+    ) -> (
+        "tuple[dict[str, set[int]], list[int], dict[str, set[str]],"
+        " dict[str, set[str]]]"
+    ):
         """Build the replica-aware dispatch plan: per DML channel one
         serving replica for growing rows, plus per live sealed segment one
         replica chosen by load.  Segments with no dispatchable replica
@@ -582,10 +601,18 @@ class Proxy:
         query_ts postdates every tick by construction), the freshest
         candidate minimizes the wait, and the returned ``waits`` map marks
         the channel so the dispatch loop runs the consistency wait scoped
-        to exactly the channels that still need it."""
+        to exactly the channels that still need it.
+
+        The returned ``routed`` map records which channels each node serves
+        growing rows for; the dispatch scopes every node's growing scan to
+        its routed channels (a node picked only for sealed units, or whose
+        channel went to a fresher covering replica, must not serve its own
+        lagging growing copy — per-node tombstones would resurrect rows
+        deleted before the wait target)."""
         coord = self.query_coord
         chosen: dict[str, set[int]] = {}
         waits: dict[str, set[str]] = {}
+        routed: dict[str, set[str]] = {}
         prefix = f"dml/{collection}/"
         followers = getattr(coord, "channel_followers", {})
         cands_by_ch: dict[str, list[str]] = {}
@@ -617,6 +644,7 @@ class Proxy:
                     ),
                 )
                 chosen.setdefault(pick, set())
+                routed.setdefault(pick, set()).add(ch)
                 self.metrics.inc(
                     "consistency_routes_total", labels={"outcome": "covered"}
                 )
@@ -629,6 +657,7 @@ class Proxy:
                 owners or cands, key=lambda n: (*self._node_load(n), n)
             )
             chosen.setdefault(pick, set())
+            routed.setdefault(pick, set()).add(ch)
             waits.setdefault(pick, set()).add(ch)
             if guarantee is not None:
                 self.metrics.inc(
@@ -641,7 +670,7 @@ class Proxy:
                 orphans.append(sid)
             else:
                 chosen.setdefault(pick, set()).add(sid)
-        return chosen, orphans, waits
+        return chosen, orphans, waits, routed
 
     def _pump(self) -> None:
         """Advance coordination-message delivery while waiting on a
@@ -720,12 +749,17 @@ class Proxy:
                 out.append((n, frozenset()))
         return out
 
-    def _hedge(self, info: CollectionInfo, node: QueryNode, sids, dispatch):
+    def _hedge(
+        self, info: CollectionInfo, node: QueryNode, sids, dispatch,
+        channels=None,
+    ):
         """Straggler mitigation: re-dispatch each timed-out sealed unit to
         a *different* live replica of the same segment.  Units with no
         alternative copy — and the straggler's growing rows, which exist
         nowhere else — fall back to a blocking dispatch on the original
-        node (scoped to just those, so the hedged work is not repeated)."""
+        node (scoped to just those, so the hedged work is not repeated).
+        ``channels`` is the straggler's growing-scan scope: only growing
+        rows it would actually have served count toward the fallback."""
         extra: dict[str, set[int]] = {}
         uncovered: set[int] = set()
         for sid in sids or ():
@@ -736,8 +770,13 @@ class Proxy:
                 uncovered.add(sid)
             else:
                 extra.setdefault(alt, set()).add(sid)
+        shard_scope = (
+            None if channels is None
+            else {shard_of_channel(c) for c in channels}
+        )
         has_growing = any(
             c == info.name and gs.segment.num_rows
+            and (shard_scope is None or gs.segment.shard in shard_scope)
             for (c, _sid), gs in node.growing.items()
         )
         res = None

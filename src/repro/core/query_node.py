@@ -29,7 +29,7 @@ from ..index.registry import create_index
 from .binlog import load_segment
 from .collection import Metric
 from .consistency import GuaranteeTs
-from .log import EntryType, LogBroker, LogEntry, Subscription
+from .log import EntryType, LogBroker, LogEntry, Subscription, shard_of_channel
 from .object_store import ObjectStore
 from .request import PRIMARY_VECTOR_COLUMN, AnnsQuery, NodeSearchRequest
 from .segment import DEFAULT_PARTITION, Segment, add_tombstone, flatten_tombstones
@@ -649,6 +649,7 @@ class QueryNode:
         doomed=_DOOMED_UNSET,
         partitions: "tuple[str, ...] | None" = None,
         segments: "tuple[int, ...] | None" = None,
+        shards: "tuple[int, ...] | None" = None,
         filter=None,
         filter_strategy: str | None = None,
         k: int = 10,
@@ -668,7 +669,11 @@ class QueryNode:
         scopes the *live* sealed scan to a replica-dispatch plan unit
         (None = everything the node holds); retired MVCC versions are
         exempt — they only exist on the nodes that served the pre-swap
-        epoch, so pinned queries must always reach them.
+        epoch, so pinned queries must always reach them.  ``shards``
+        scopes the *growing* scan the same way: only growing segments fed
+        by those shards' DML channels enter the plan (None = all, () =
+        sealed data only) — a replica-aware dispatch must not serve a
+        lagging growing copy of a channel routed to a fresher node.
 
         ``filter`` is the compiled :class:`FilterExpr`: sealed units
         resolve it through their attribute-index satellites and pick a
@@ -746,10 +751,13 @@ class QueryNode:
             )
 
         # ---- growing segments: temp slice indexes + brute tail ----
+        shard_scope = set(shards) if shards is not None else None
         for (coll, sid), gs in self.growing.items():
             if coll != collection:
                 continue
             seg = gs.segment
+            if shard_scope is not None and seg.shard not in shard_scope:
+                continue  # another replica serves this channel's rows
             if prune is not None and seg.partition not in prune:
                 continue
             if seg.num_rows == 0:
@@ -1087,6 +1095,11 @@ class QueryNode:
         # Materialize the delta-delete set ONCE for the whole request; every
         # sub-request's plan probes the same sorted array.
         doomed = self._request_doomed_pks(request.collection, ts)
+        shards = (
+            None
+            if request.channels is None
+            else tuple(sorted({shard_of_channel(c) for c in request.channels}))
+        )
         trace = request.trace  # (TraceContext, parent Span) | None
         results: list[tuple[np.ndarray, np.ndarray]] = []
         for a in request.anns:
@@ -1104,6 +1117,7 @@ class QueryNode:
                         column=a.field, metric=metric, doomed=doomed,
                         partitions=request.partitions,
                         segments=request.segments,
+                        shards=shards,
                         filter=request.filter,
                         filter_strategy=request.filter_strategy,
                         k=request.k,
@@ -1128,6 +1142,7 @@ class QueryNode:
                     request.collection, ts, request.filter_masks,
                     column=a.field, metric=metric, doomed=doomed,
                     partitions=request.partitions, segments=request.segments,
+                    shards=shards,
                     filter=request.filter,
                     filter_strategy=request.filter_strategy,
                     k=request.k,

@@ -352,6 +352,14 @@ class NodeSearchRequest:
     # from the scope — they are node-local epoch baggage that pinned
     # queries must still reach regardless of where replicas moved.
     segments: tuple[int, ...] | None = None
+    # Growing-scan scope, the channel twin of ``segments``: None = every
+    # growing copy the node holds (legacy full fan-out); a tuple of DML
+    # channel names = scan only the growing segments fed by those channels
+    # (() = sealed data only).  Watermark-aware routing relies on this: a
+    # node dispatched for sealed units must NOT serve a lagging growing
+    # copy of a channel the plan routed to a fresher replica — per-node
+    # tombstones would resurrect rows deleted before the wait target.
+    channels: tuple[str, ...] | None = None
     # Trace propagation: (TraceContext, parent Span) when the request is
     # traced; the node hangs plan/scan/reduce child spans off the parent.
     trace: tuple | None = None
@@ -370,6 +378,7 @@ class NodeSearchRequest:
         filter=None,
         filter_masks: dict[int, np.ndarray] | None = None,
         segments: tuple[int, ...] | None = None,
+        channels: tuple[str, ...] | None = None,
         trace: tuple | None = None,
         hedged: bool = False,
     ) -> "NodeSearchRequest":
@@ -390,6 +399,7 @@ class NodeSearchRequest:
             filter_masks=filter_masks,
             partitions=request.partition_names or None,
             segments=segments,
+            channels=channels,
             trace=trace,
             hedged=hedged,
         )

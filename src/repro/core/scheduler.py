@@ -137,14 +137,21 @@ class MutationTicket:
     def on_resolve(self, fn) -> None:
         """Run ``fn(result)`` when the mutation lands (immediately if it
         already has).  Used by the system facade to advance session
-        watermarks without polling."""
-        if self._done:
-            if self._result is not None:
-                fn(self._result)
-            return
-        if self._callbacks is None:
-            self._callbacks = []
-        self._callbacks.append(fn)
+        watermarks without polling.
+
+        Registration synchronizes with the resolver through the scheduler
+        lock: without it, a threaded pump resolving concurrently could run
+        the callback list just before this append lands, leaving ``fn``
+        registered but never invoked (a silently lost session-watermark
+        advance)."""
+        with self._scheduler._lock:
+            if not self._done:
+                if self._callbacks is None:
+                    self._callbacks = []
+                self._callbacks.append(fn)
+                return
+        if self._result is not None:
+            fn(self._result)
 
     def wait(self, timeout_s: float) -> bool:
         """Block for a scheduler-triggered flush (depth/age) WITHOUT
@@ -166,20 +173,26 @@ class MutationTicket:
 
     # scheduler-side
     def _resolve(self, result: MutationResult) -> None:
+        # ``_result`` is published before ``_done`` so any reader that
+        # observes the done flag sees the result; the callback list is
+        # detached and the flag flipped under the scheduler lock (see
+        # ``on_resolve``), but the callbacks themselves run outside it.
         self._result = result
-        if self._callbacks is not None:
-            for fn in self._callbacks:
+        with self._scheduler._lock:
+            callbacks, self._callbacks = self._callbacks, None
+            self._done = True
+        if callbacks is not None:
+            for fn in callbacks:
                 fn(result)
-            self._callbacks = None
-        self._done = True
         ev = self._event
         if ev is not None:
             ev.set()
 
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
-        self._callbacks = None
-        self._done = True
+        with self._scheduler._lock:
+            self._callbacks = None
+            self._done = True
         ev = self._event
         if ev is not None:
             ev.set()

@@ -10,6 +10,7 @@ import pytest
 from repro.core import (
     AdmissionRejected,
     ConsistencyLevel,
+    DeleteRequest,
     FaultInjector,
     FieldSchema,
     FieldType,
@@ -17,6 +18,7 @@ from repro.core import (
     InsertRequest,
     ManuConfig,
     ManuSystem,
+    Schema,
     SearchRequest,
 )
 from repro.core.consistency import staleness_ms_of
@@ -324,6 +326,106 @@ def test_covered_replica_serves_read_with_zero_wait_bit_for_bit(rng):
     np.testing.assert_array_equal(routed.scores, waited.scores)
     assert system.telemetry.counter_value(
         "consistency_routes_total", {"outcome": "waited"}) >= 1.0
+
+
+def test_lagging_owner_dispatched_for_sealed_does_not_resurrect_deletes(rng):
+    """A node dispatched only for sealed units whose channel was routed to
+    a fresher covering replica must NOT serve its own lagging growing copy:
+    tombstones are per-node, so rows deleted before the wait target would
+    resurface in the merged top-k (pk-dedup cannot remove them)."""
+    schema = Schema((
+        FieldSchema("pk", FieldType.INT, is_primary=True),
+        FieldSchema("vector", FieldType.VECTOR, dim=DIM),
+    ))
+    system = make_system(num_query_nodes=2, num_shards=1, num_loggers=1,
+                         replication_factor=2, seal_rows=64)
+    coll = system.create_collection("c", dim=DIM, schema=schema)
+    # Two seal-sized inserts -> two sealed segments, so the load-spread
+    # sealed picks give BOTH nodes a unit (the lagging owner included).
+    for lo in (0, 64):
+        coll.insert({"pk": np.arange(lo, lo + 64), **vecs(rng, 64)})
+        system.run_until_idle()
+    assert len(system.query_coord.placement_for("c")) >= 2
+
+    # Growing rows consumed by BOTH replicas.
+    gpks = np.arange(200, 230)
+    gvecs = vecs(rng, 30)
+    coll.insert({"pk": gpks, **gvecs})
+    system.run_until_idle()
+
+    ch = dml_channel("c", 0)
+    coord = system.query_coord
+    owner = next(n for n, st in coord.nodes.items() if ch in st.channels)
+    followers = sorted(coord.channel_followers.get(ch, ()))
+    assert followers and owner not in followers
+    follower = followers[0]
+
+    # Delete the growing rows; force a tick and let ONLY the follower
+    # consume it — the owner's growing copy keeps the rows visible.
+    del_res = system.proxy.mutate(coll.info, DeleteRequest(gpks))
+    for lg in system.loggers:
+        lg.tick([ch], force=True)
+    fnode = system.query_nodes[follower]
+    while fnode.step():
+        pass
+    assert system.proxy._channel_watermark(follower, ch) >= del_res.watermark_ts
+    assert system.proxy._channel_watermark(owner, ch) < del_res.watermark_ts
+
+    guarantee = GuaranteeTs(system.tso.next(), INFINITE_STALENESS,
+                            session_ts=del_res.watermark_ts)
+    # Query AT the deleted vectors: a resurrected row would rank first.
+    req = SearchRequest.single(gvecs["vector"][:2], field="vector", k=10)
+    wait_calls = []
+
+    def recording_wait(node, g, channels=None):
+        wait_calls.append((node.node_id, channels))
+
+    before = system.query_nodes[owner].search_count
+    res = system.proxy.search(coll.info, req, guarantee=guarantee,
+                              wait_fn=recording_wait)
+    # The lagging owner DID serve sealed units for this request...
+    assert system.query_nodes[owner].search_count == before + 1
+    # ...but its un-tombstoned growing copy never reached the merge, and
+    # the covering follower kept the read zero-wait.
+    assert not (set(gpks.tolist()) & set(res.pks.flatten().tolist()))
+    assert wait_calls == []
+
+
+def test_scoped_wait_returns_when_channel_not_assigned(rng):
+    """A scoped consistency wait on a channel the coordinator no longer
+    (or never) assigned to the node must return instead of pumping to the
+    round limit: no subscribe will ever land, and the channel's actual
+    owner runs its own wait."""
+    system = make_system(num_shards=1)
+    coll = system.create_collection("c", dim=DIM)
+    coll.insert(vecs(rng, 10))
+    system.run_until_idle()
+    node = next(iter(system.query_nodes.values()))
+    strong = GuaranteeTs(system.tso.next(), 0.0)  # nothing satisfies yet
+    system._cooperative_wait(node, strong, ["dml/c/99"])  # must not hang
+
+
+def test_sync_mutate_drains_pending_async_writes(rng):
+    """A sync mutation must not overtake async mutations admitted earlier:
+    insert_async(pk) followed by a sync delete(pk) has to apply in
+    admission order, or the delete lands first and the row resurrects."""
+    schema = Schema((
+        FieldSchema("pk", FieldType.INT, is_primary=True),
+        FieldSchema("vector", FieldType.VECTOR, dim=DIM),
+    ))
+    system = make_system(num_shards=1)
+    coll = system.create_collection("c", dim=DIM, schema=schema)
+    ticket = coll.insert_async({"pk": np.arange(8), **vecs(rng, 8)})
+    assert not ticket.done
+    lsn = coll.delete(np.arange(8))  # sync: drains the queue first
+    assert ticket.done
+    assert ticket.result().watermark_ts < lsn  # WAL order = admission order
+    system.run_until_idle()
+    # The delete applied AFTER the insert: every row is tombstoned, so a
+    # read-your-writes search over the whole collection comes back empty.
+    res = coll.search(rng.standard_normal((1, DIM)).astype(np.float32),
+                      limit=8, read_your_writes=True)
+    assert set(res.pks.flatten().tolist()) == {-1}
 
 
 # ---------------------------------------------------------------------------
